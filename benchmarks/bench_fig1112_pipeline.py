@@ -1,0 +1,24 @@
+"""Paper Figs. 11–12 — effect of the cloud pipeline length (1/2/4/8)."""
+from __future__ import annotations
+
+from common import emit, fleet_run, n_requests
+from repro.data import CNN_DM, SPECBENCH
+
+
+def main(quick: bool = True) -> None:
+    n = n_requests(150, 500)
+    for spec, hidden, rate in ((SPECBENCH, 4096 * 2, 6), (CNN_DM, 5120 * 2, 4)):
+        for P in (1, 2, 4, 8):
+            for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
+                m = fleet_run(fw, spec, rate=rate, n=n, hidden_bytes=hidden,
+                              pipeline_len=P)
+                s = m.summary()
+                emit(
+                    f"fig1112.{spec.name}.P{P}.{fw}.ttft_ms",
+                    s["ttft_mean_ms"] * 1e3,
+                    f"tbt_ms={s['tbt_mean_ms']:.1f}",
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 1 — preliminary experiments.
+
+(a) per-framework delay decomposition for a 128-token prompt,
+(b) U-shaped TTFT vs prompt length (comm dominates, ~linear),
+(c) in-cloud computation delay vs prompt length batched with 9 decodes,
+(d) chunking trade-off: total compute delay reduction vs TTFT growth.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from common import emit
+from repro.core.chunking import chunk_prompt
+from repro.data import RequestSpec
+from repro.serving import CloudDelayModel, run_fleet
+
+
+def _single_request(framework: str, plen: int, pipeline_len: int = 4):
+    reqs = [RequestSpec(req_id=0, device_id=0, arrival_s=0.0,
+                        prompt_len=plen, max_new_tokens=16)]
+    m = run_fleet(framework, reqs, rng=np.random.default_rng(7),
+                  pipeline_len=pipeline_len)
+    r = m.requests[0]
+    return r.ttft_s * 1e3, (r.tbt_s or 0.0) * 1e3
+
+
+def main(quick: bool = True) -> None:
+    # (a) frameworks at 128-token prompt
+    for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
+        ttft, tbt = _single_request(fw, 128)
+        emit(f"fig1a.{fw}.ttft_ms", ttft * 1e3, f"tbt_ms={tbt:.1f}")
+
+    # (b) U-shape TTFT vs prompt length — linear comm growth
+    base = None
+    for plen in (128, 256, 512, 1024, 2048):
+        ttft, _ = _single_request("u-shape", plen)
+        base = base or ttft
+        emit(f"fig1b.u-shape.ttft_ms.p{plen}", ttft * 1e3,
+             f"x{ttft / base:.2f}_vs_128")
+
+    # (c) in-cloud computation delay vs prefill length batched with 9 decodes
+    cloud = CloudDelayModel(pipeline_len=1)
+    d1 = cloud.delay(1 + 9)
+    for plen in (1, 32, 128, 512, 1024, 2048):
+        d = cloud.delay(plen + 9)
+        emit(f"fig1c.cloud_delay_ms.p{plen}", d * 1e6,
+             f"+{(d / d1 - 1) * 100:.1f}%_vs_1tok")
+
+    # (d) chunking a 2k prompt: total-compute reduction vs TTFT growth
+    cloud = CloudDelayModel(pipeline_len=1)
+    plen, n_decode = 2048, 9
+    bulk_compute = cloud.delay(plen + n_decode) + 63 * cloud.delay(n_decode)
+    bulk_ttft = cloud.delay(plen + n_decode)
+    for chunk in (32, 128, 256, 512, 2048):
+        chunks = chunk_prompt(plen, chunk)
+        total = sum(cloud.delay(c + n_decode) for c in chunks)
+        total += max(0, 64 - len(chunks)) * cloud.delay(n_decode)
+        ttft = sum(cloud.delay(c + n_decode) for c in chunks)
+        emit(
+            f"fig1d.chunk{chunk}.ttft_ms", ttft * 1e6,
+            f"total_compute_delta_ms={(bulk_compute - total) * 1e3:+.1f};"
+            f"ttft_x={ttft / bulk_ttft:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Figs. 6–7 — TTFT / TBT vs request generation rate.
+
+SpecBench-like workload (Vicuna-7B wire size) at rates 4–9 req/s and
+CNN/DM-like (Vicuna-13B) at 2–5 req/s, all four frameworks, 30 devices,
+pipeline length 4 (paper §4.2)."""
+from __future__ import annotations
+
+from common import emit, fleet_run, n_requests
+from repro.data import CNN_DM, SPECBENCH
+
+
+def main(quick: bool = True) -> None:
+    n = n_requests(150, 600)
+    for spec, hidden, rates in (
+        (SPECBENCH, 4096 * 2, (4, 6, 9)),
+        (CNN_DM, 5120 * 2, (2, 4, 5)),
+    ):
+        for rate in rates:
+            base = {}
+            for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
+                m = fleet_run(fw, spec, rate=rate, n=n, hidden_bytes=hidden)
+                s = m.summary()
+                base[fw] = s
+                emit(
+                    f"fig67.{spec.name}.r{rate}.{fw}.ttft_ms",
+                    s["ttft_mean_ms"] * 1e3,
+                    f"tbt_ms={s['tbt_mean_ms']:.1f};accept={s['accept_length']:.2f}",
+                )
+            hat, ush = base["hat"], base["u-shape"]
+            emit(
+                f"fig67.{spec.name}.r{rate}.hat_vs_ushape",
+                0.0,
+                f"ttft{(hat['ttft_mean_ms']/ush['ttft_mean_ms']-1)*100:+.0f}%;"
+                f"tbt{(hat['tbt_mean_ms']/ush['tbt_mean_ms']-1)*100:+.0f}%",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 8 — per-GPU (pipeline-stage) computation delay mean ± std.
+
+Chunking (HAT, U-Sarathi) keeps the cloud's per-stage delay stable; the
+naive-batched baselines show long-prompt interference spikes."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import emit, fleet_run, n_requests
+from repro.data import CNN_DM, SPECBENCH
+
+
+def main(quick: bool = True) -> None:
+    n = n_requests(200, 600)
+    for spec, hidden, rate in ((SPECBENCH, 4096 * 2, 6), (CNN_DM, 5120 * 2, 4)):
+        for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
+            m = fleet_run(fw, spec, rate=rate, n=n, hidden_bytes=hidden)
+            d = np.asarray(m.cloud_step_delays_s) * 1e3
+            emit(
+                f"fig8.{spec.name}.{fw}.cloud_delay_ms",
+                float(d.mean() * 1e3),
+                f"std_ms={d.std():.2f};p99_ms={np.percentile(d, 99):.1f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Figs. 9–10 — SLA compliance rates.
+
+prefill SLA: delay budget per 128 prompt tokens; decode SLA: delay budget
+per 10 generated tokens.  Pipeline length 1 (paper §4.2)."""
+from __future__ import annotations
+
+from common import emit, fleet_run, n_requests
+from repro.data import CNN_DM, SPECBENCH
+
+
+def main(quick: bool = True) -> None:
+    n = n_requests(150, 500)
+    for spec, hidden, rate in ((SPECBENCH, 4096 * 2, 4), (CNN_DM, 5120 * 2, 2)):
+        runs = {
+            fw: fleet_run(fw, spec, rate=rate, n=n, hidden_bytes=hidden,
+                          pipeline_len=1)
+            for fw in ("u-shape", "u-sarathi", "u-medusa", "hat")
+        }
+        for sla_ms in (200, 350, 500, 800):
+            for fw, m in runs.items():
+                r = m.prefill_sla_rate(sla_ms / 1e3)
+                emit(f"fig910.{spec.name}.prefill_sla{sla_ms}.{fw}",
+                     r * 1e6, f"rate={r:.3f}")
+        for sla_ms in (400, 600, 900, 1400):
+            for fw, m in runs.items():
+                r = m.decode_sla_rate(sla_ms / 1e3)
+                emit(f"fig910.{spec.name}.decode_sla{sla_ms}.{fw}",
+                     r * 1e6, f"rate={r:.3f}")
+
+
+if __name__ == "__main__":
+    main()

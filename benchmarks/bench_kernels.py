@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle timings and
+allclose deltas on serving-shaped inputs.  On CPU these time the REFERENCE
+path (the production-relevant numbers come from the dry-run roofline); the
+interpret-mode runs exist to pin correctness cheaply in CI."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+from repro.kernels import attention_ref, prefill_attention, verify_attention
+
+
+def _time(fn, *args, n=3, **kw):
+    fn(*args, **kw).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(quick: bool = True) -> None:
+    rng = jax.random.PRNGKey(0)
+    cases = [
+        ("prefill_chunk", 1, 128, 512, 8, 2, 64, None),
+        ("verify_k8", 2, 8, 1024, 8, 2, 64, None),
+        ("decode_sw", 1, 1, 2048, 4, 4, 64, 256),
+    ]
+    for name, B, T, S, nh, nkv, hd, window in cases:
+        ks = jax.random.split(rng, 3)
+        q = jax.random.normal(ks[0], (B, T, nh, hd))
+        k = jax.random.normal(ks[1], (B, S, nkv, hd))
+        v = jax.random.normal(ks[2], (B, S, nkv, hd))
+        off, vlen = S - T - 1, S - 1
+        ref_us = _time(
+            lambda: attention_ref(q, k, v, offset=off, valid_len=vlen, window=window)
+        )
+        kern = verify_attention if T <= 16 else prefill_attention
+        out = kern(q, k, v, off, vlen, window=window, interpret=True)
+        ref = attention_ref(q, k, v, offset=off, valid_len=vlen, window=window)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        emit(f"kernels.{name}.ref_us", ref_us, f"interpret_allclose_err={err:.1e}")
+        assert err < 1e-4, (name, err)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Roofline table (deliverable g) — reads reports/dryrun/*.json.
+
+Emits the three roofline terms, dominant bottleneck, and useful-FLOPs ratio
+per (arch × shape × mesh) produced by ``python -m repro.launch.dryrun``."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from common import emit
+
+
+def main(quick: bool = True) -> None:
+    files = sorted(glob.glob("reports/dryrun/*.json"))
+    if not files:
+        emit("roofline.no_dryrun_reports", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("skipped") or not rec.get("ok"):
+            continue
+        if rec.get("tag"):
+            continue                       # perf-iteration variants listed separately
+        rf = rec["roofline"]
+        name = f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        dom_ms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                  "collective": rf["collective_s"]}[rf["dominant"]] * 1e3
+        emit(
+            name,
+            dom_ms * 1e3,
+            f"dom={rf['dominant']};compute_ms={rf['compute_s']*1e3:.1f};"
+            f"mem_ms={rf['memory_s']*1e3:.1f};coll_ms={rf['collective_s']*1e3:.1f};"
+            f"useful={rf['useful_flops_ratio']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

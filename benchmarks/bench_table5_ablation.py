@@ -1,0 +1,39 @@
+"""Paper Table 5 — effect of key strategies (SD / PC / PD ablation).
+
+Rows: (SD, PC, PD) on/off combinations over the U-shaped substrate —
+exactly the paper's grid, on both workloads."""
+from __future__ import annotations
+
+from common import emit, fleet_run, n_requests
+from repro.data import CNN_DM, SPECBENCH
+
+ROWS = [
+    ("---", dict(sd=None, pc=None, pd=False, max_batch_tokens=None)),
+    ("-P-", dict(sd=None, pc="device", pd=False)),
+    ("S--", dict(sd="draft", pc=None, pd=False, max_batch_tokens=None)),
+    ("S-D", dict(sd="draft", pc=None, pd=True, max_batch_tokens=None)),
+    ("SP-", dict(sd="draft", pc="device", pd=False)),
+    ("SPD", dict(sd="draft", pc="device", pd=True)),
+]
+
+
+def main(quick: bool = True) -> None:
+    n = n_requests(200, 600)
+    for spec, hidden, rate in ((SPECBENCH, 4096 * 2, 6), (CNN_DM, 5120 * 2, 4)):
+        base = None
+        for label, overrides in ROWS:
+            m = fleet_run("hat", spec, rate=rate, n=n, hidden_bytes=hidden,
+                          overrides=overrides)
+            s = m.summary()
+            base = base or s
+            emit(
+                f"table5.{spec.name}.{label}.ttft_ms",
+                s["ttft_mean_ms"] * 1e3,
+                f"tbt_ms={s['tbt_mean_ms']:.1f};"
+                f"ttft_vs_base{(s['ttft_mean_ms']/base['ttft_mean_ms']-1)*100:+.0f}%;"
+                f"tbt_vs_base{(s['tbt_mean_ms']/base['tbt_mean_ms']-1)*100:+.0f}%",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Shared helpers for the paper-artifact benchmarks."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV contract expected by benchmarks.run: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def n_requests(default_quick: int, default_full: int) -> int:
+    return default_full if FULL else default_quick
+
+
+def fleet_run(framework: str, spec, *, rate: float, n: int, seed: int = 1,
+              pipeline_len: int = 4, hidden_bytes: float = 4096 * 2,
+              backend=None, overrides=None):
+    from repro.data import sample_workload
+    from repro.serving import run_fleet
+
+    rng = np.random.default_rng(0)
+    reqs = sample_workload(spec, rng, n_requests=n, rate_per_s=rate)
+    return run_fleet(
+        framework, reqs, rng=np.random.default_rng(seed),
+        pipeline_len=pipeline_len, hidden_bytes=hidden_bytes,
+        backend=backend, overrides=overrides,
+    )

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set REPRO_BENCH_FULL=1 for
+paper-scale request counts; the default sizes finish on one CPU core.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig67 table4
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+MODULES = [
+    ("fig1", "bench_fig1_preliminary"),
+    ("fig67", "bench_fig67_rates"),
+    ("fig8", "bench_fig8_stability"),
+    ("fig910", "bench_fig910_sla"),
+    ("table4", "bench_table4_sd"),
+    ("table5", "bench_table5_ablation"),
+    ("fig1112", "bench_fig1112_pipeline"),
+    ("kernels", "bench_kernels"),
+    ("roofline", "bench_roofline"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = []
+    for key, modname in MODULES:
+        if want and key not in want:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname)
+            mod.main()
+            print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures.append(key)
+            print(f"# {key} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""End-to-end driver (deliverable b): serve a small model to a batched
+30-device fleet through the full HAT stack and compare all four frameworks.
+
+    PYTHONPATH=src python examples/serve_cluster.py                 # statistical fleet
+    PYTHONPATH=src python examples/serve_cluster.py --real          # real JAX models
+    PYTHONPATH=src python examples/serve_cluster.py --engine        # batched cloud engine demo
+
+The default mode runs the paper's §4.2 experiment shape: Poisson arrivals
+over 30 heterogeneous Jetson-class devices, SpecBench-like prompt lengths,
+continuous batching in the cloud; prints the Fig. 6/8-style comparison.
+"""
+import argparse
+import json
+
+import numpy as np
+
+
+def fleet_comparison(args):
+    from repro.data import SPECBENCH, sample_workload
+    from repro.serving import run_fleet
+
+    rng = np.random.default_rng(0)
+    reqs = sample_workload(SPECBENCH, rng, n_requests=args.requests,
+                           rate_per_s=args.rate, with_tokens=args.real)
+
+    backend = None
+    hidden = 4096 * 2
+    if args.real:
+        import jax
+
+        from repro.configs import get_config
+        from repro.core import init_adapter, make_distill_step, split_model
+        from repro.data import markov_corpus, token_batches
+        from repro.models import Model
+        from repro.serving import RealBackend, init_medusa
+        from repro.training import AdamW, train_loop
+        import jax.numpy as jnp
+
+        cfg = get_config(args.arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        corpus = markov_corpus(np.random.default_rng(1), cfg.vocab_size, 20_000)
+        params, _ = train_loop(model, params, AdamW(lr=3e-3),
+                               token_batches(np.random.default_rng(2), corpus, 8, 32),
+                               max_steps=50, log_every=0)
+        split = split_model(cfg, params)
+        adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+        opt = AdamW(lr=1e-3)
+        dstep = make_distill_step(split, model, params, opt)
+        ost = opt.init(adapter)
+        for i, b in zip(range(60), token_batches(np.random.default_rng(3), corpus, 8, 32)):
+            adapter, ost, _ = dstep(adapter, ost, jnp.asarray(b["tokens"][:, :32]))
+        medusa, _ = init_medusa(cfg, jax.random.PRNGKey(8))
+        hidden = cfg.d_model * 2
+
+        def make_backend(fw):
+            from repro.serving import RealBackend
+
+            return RealBackend(
+                split,
+                adapter_params=adapter if fw == "hat" else None,
+                medusa_params=medusa if fw == "u-medusa" else None,
+                max_len=512,
+            )
+    else:
+        def make_backend(fw):
+            return None
+
+    print(f"{'framework':12s} {'TTFT(ms)':>10s} {'TBT(ms)':>9s} "
+          f"{'accept':>7s} {'cloud(ms)':>12s}")
+    for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
+        m = run_fleet(fw, reqs, rng=np.random.default_rng(9),
+                      pipeline_len=args.pipeline_len, hidden_bytes=hidden,
+                      backend=make_backend(fw))
+        s = m.summary()
+        print(f"{fw:12s} {s['ttft_mean_ms']:10.1f} {s['tbt_mean_ms']:9.1f} "
+              f"{s['accept_length']:7.2f} "
+              f"{s.get('cloud_delay_mean_ms', 0):6.1f}±{s.get('cloud_delay_std_ms', 0):.1f}")
+
+
+def engine_demo(args):
+    """The real batched cloud engine: several requests chunk-prefill and
+    decode concurrently through slot-batched middle-model steps."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import split_model
+    from repro.serving import CloudEngine, EngineJob
+
+    cfg = get_config(args.arch).reduced()
+    from repro.models import Model
+
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    split = split_model(cfg, params)
+    eng = CloudEngine(split, n_slots=4, max_len=128, max_batch_tokens=48)
+    rng = np.random.default_rng(0)
+
+    print("admitting 3 requests, chunked prefill through the batched engine")
+    deeps = {}
+    for rid, plen in [(0, 40), (1, 25), (2, 33)]:
+        assert eng.add_request(rid, plen + 32)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, plen))[None]
+        sh, _, _ = split.input_model.apply(split.input_params, toks, return_hidden=True)
+        sh = np.asarray(sh[0], np.float32)
+        for off in range(0, plen, 16):
+            eng.submit(EngineJob(rid, sh[off:off + 16], off, "prefill"))
+    for r in eng.drain():
+        deeps[r.req_id] = r.deep
+    print(f"engine ran {eng.steps} batched steps; "
+          f"batched tokens per step: {eng.batched_token_history}")
+    for rid, d in sorted(deeps.items()):
+        logits = split.head_logits(jnp.asarray(d[None]))
+        print(f"  req {rid}: first token {int(logits[0, -1].argmax())}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=150)
+    ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--pipeline-len", type=int, default=4)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--engine", action="store_true")
+    args = ap.parse_args()
+    if args.engine:
+        engine_demo(args)
+    else:
+        fleet_comparison(args)
+
+
+if __name__ == "__main__":
+    main()

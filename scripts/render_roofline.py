@@ -1,0 +1,60 @@
+"""Render EXPERIMENTS.md tables from reports/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/render_roofline.py [--mesh 16x16]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def gib(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--dir", default="reports/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("tag", "") != args.tag:
+            continue
+        if args.mesh and rec.get("mesh") != args.mesh:
+            continue
+        rows.append(rec)
+
+    print("| arch | shape | mesh | status | compute | memory | collective | "
+          "dominant | useful | HBM/chip (args+temp) |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'][:40]}…) "
+                  f"| — | — | — | — | — | — |")
+            continue
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | — | — | — | — | — | — |")
+            continue
+        rf = r["roofline"]
+        m = r.get("memory", {})
+        hbm = (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0))
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | {rf['dominant']} "
+            f"| {rf['useful_flops_ratio']:.2f} | {gib(hbm)} GiB |"
+        )
+
+
+if __name__ == "__main__":
+    main()

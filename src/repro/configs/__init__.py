@@ -1,0 +1,48 @@
+"""Config registry: ``get_config(arch_id)`` + the assigned shape table."""
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import InputShape, LayerDef, ModelConfig, SHAPES, shape_applicable
+
+from .kimi_k2_1t_a32b import CONFIG as _kimi
+from .qwen2_72b import CONFIG as _qwen2
+from .xlstm_350m import CONFIG as _xlstm
+from .llama_3_2_vision_90b import CONFIG as _llama_vis
+from .internlm2_1_8b import CONFIG as _internlm2
+from .zamba2_1_2b import CONFIG as _zamba2
+from .dbrx_132b import CONFIG as _dbrx
+from .phi4_mini_3_8b import CONFIG as _phi4
+from .gemma3_12b import CONFIG as _gemma3
+from .seamless_m4t_large_v2 import CONFIG as _seamless
+from .vicuna import VICUNA_7B, VICUNA_13B
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _kimi, _qwen2, _xlstm, _llama_vis, _internlm2,
+        _zamba2, _dbrx, _phi4, _gemma3, _seamless,
+        VICUNA_7B, VICUNA_13B,
+    ]
+}
+
+ASSIGNED = [
+    "kimi-k2-1t-a32b", "qwen2-72b", "xlstm-350m", "llama-3.2-vision-90b",
+    "internlm2-1.8b", "zamba2-1.2b", "dbrx-132b", "phi4-mini-3.8b",
+    "gemma3-12b", "seamless-m4t-large-v2",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(CONFIGS)}"
+        ) from None
+
+
+__all__ = [
+    "ModelConfig", "LayerDef", "InputShape", "SHAPES", "CONFIGS", "ASSIGNED",
+    "get_config", "shape_applicable",
+]

@@ -1,0 +1,291 @@
+"""Configuration dataclasses for all model families.
+
+A model is described by a *periodic pattern* of layer blocks (``LayerDef``)
+repeated to ``n_layers``.  Grouping identical consecutive layers lets the
+model implementation stack their parameters and ``lax.scan`` over them, so
+HLO size (and compile time) is O(pattern period), not O(n_layers) — this is
+what makes the 61–100 layer production configs lowerable on a laptop-class
+container.
+
+Every assigned architecture cites its source in its config module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer blocks
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by repro.models:
+#   "attn"        self-attention (+ MLP unless d_ff == 0)
+#   "moe"         self-attention + mixture-of-experts FFN
+#   "mlstm"       xLSTM matrix-memory block (has its own up/down projection)
+#   "slstm"       xLSTM scalar-memory block
+#   "mamba2"      Mamba-2 (SSD) block
+#   "cross_attn"  self-attention + cross-attention (to frontend memory) + MLP
+ATTN_KINDS = ("attn", "moe", "cross_attn")
+SSM_KINDS = ("mlstm", "slstm", "mamba2")
+VALID_KINDS = ATTN_KINDS + SSM_KINDS
+
+
+@dataclass(frozen=True)
+class LayerDef:
+    """One layer of the repeating pattern."""
+
+    kind: str = "attn"
+    # Sliding-window size for self-attention (None = full/global attention).
+    window: Optional[int] = None
+    # Zamba2-style: apply the *shared* (single-parameter-set) attention block
+    # after this layer.
+    shared_attn: bool = False
+
+    def __post_init__(self):
+        if self.kind not in VALID_KINDS:
+            raise ValueError(f"unknown layer kind {self.kind!r}")
+
+
+def repeat_pattern(pattern: Tuple[LayerDef, ...], n_layers: int) -> Tuple[LayerDef, ...]:
+    """Tile ``pattern`` out to exactly ``n_layers`` layers."""
+    if n_layers % len(pattern) != 0:
+        # allow truncation for odd totals (e.g. 61-layer Kimi = 1 dense + 60 moe)
+        reps = n_layers // len(pattern) + 1
+        return tuple((pattern * reps)[:n_layers])
+    return tuple(pattern * (n_layers // len(pattern)))
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention details -------------------------------------------------
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False           # Qwen2 uses QKV bias
+    rope_theta: float = 10_000.0
+    rmsnorm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    max_seq_len: int = 32_768
+
+    # --- layer pattern ------------------------------------------------------
+    # The period pattern, tiled to n_layers.  Default: all-dense attention.
+    pattern: Tuple[LayerDef, ...] = (LayerDef("attn"),)
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    d_ff_expert: int = 0             # per-expert FFN width
+    n_shared_experts: int = 0        # Kimi-K2/DeepSeek style always-on experts
+    router_aux_coef: float = 0.01    # load-balance aux loss weight
+    moe_capacity_factor: float = 1.25
+
+    # --- SSM ----------------------------------------------------------------
+    ssm_state: int = 0               # Mamba2 state size per head
+    ssm_conv: int = 4                # Mamba2 depthwise conv width
+    ssm_expand: int = 2              # d_inner = expand * d_model
+    ssm_head_dim: int = 64           # Mamba2 head dim
+
+    # --- encoder-decoder ----------------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+
+    # --- modality frontend (STUB: precomputed embeddings in; see DESIGN.md) -
+    frontend: Optional[str] = None   # None | "vision" | "audio"
+    n_frontend_tokens: int = 0       # patches / frames fed as memory
+
+    # --- submodel construction (U-shaped split derives these) ---------------
+    include_embed: bool = True       # token embedding present
+    include_head: bool = True        # final norm + LM head present
+
+    # --- HAT (paper) --------------------------------------------------------
+    hat_shallow_layers: int = 2      # m: decoder layers on-device
+    adapter_layers: int = 1          # depth of adapter network Λ
+
+    # --- provenance ---------------------------------------------------------
+    source: str = ""                 # citation for the config
+
+    # ------------------------------------------------------------------ API
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def layers(self) -> Tuple[LayerDef, ...]:
+        return repeat_pattern(self.pattern, self.n_layers)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head rows padded to a multiple of 128 so the vocab dim
+        shards evenly on the model axis (standard production practice; only
+        seamless's 256206 is affected among the assigned archs).  Padded
+        logit columns are masked to -inf in the forward."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(l.kind in ATTN_KINDS or l.shared_attn for l in self.layers)
+
+    @property
+    def full_attention(self) -> bool:
+        """True if any layer performs *unwindowed* self-attention."""
+        return any(
+            l.kind in ATTN_KINDS and l.window is None for l in self.layers
+        )
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (see DESIGN.md §4)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        # dense archs qualify only with a sliding-window variant where the
+        # vast majority of layers are windowed (gemma3's 5:1 local:global).
+        layers = self.layers
+        windowed = sum(1 for l in layers if l.kind in ATTN_KINDS and l.window)
+        return windowed >= 0.75 * len(layers)
+
+    # --- parameter counting (analytic; used by roofline + reports) ----------
+    def param_count(self) -> int:
+        d, hd, nh, nkv = self.d_model, self.head_dim, self.n_heads, self.n_kv_heads
+        total = self.vocab_size * d                       # embedding
+        if not self.tie_embeddings:
+            total += d * self.vocab_size                  # lm head
+        total += d                                        # final norm
+
+        def attn_params(bias: bool) -> int:
+            p = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+            if bias:
+                p += nh * hd + 2 * nkv * hd
+            return p
+
+        def mlp_params(ff: int) -> int:
+            return 3 * d * ff                              # SwiGLU
+
+        shared_attn_counted = False
+        for l in self.layers:
+            total += 2 * d                                 # 2 pre-norms
+            if l.kind == "attn":
+                total += attn_params(self.qkv_bias)
+                if self.d_ff:
+                    total += mlp_params(self.d_ff)
+            elif l.kind == "cross_attn":
+                total += 2 * attn_params(self.qkv_bias) + mlp_params(self.d_ff) + d
+            elif l.kind == "moe":
+                total += attn_params(self.qkv_bias)
+                total += d * self.n_experts                # router
+                total += self.n_experts * mlp_params(self.d_ff_expert) // 1
+                total += self.n_shared_experts * mlp_params(self.d_ff_expert)
+            elif l.kind == "mamba2":
+                d_in = self.ssm_expand * d
+                nh_ssm = d_in // self.ssm_head_dim
+                total += d * (2 * d_in + 2 * self.ssm_state + nh_ssm)
+                total += self.ssm_conv * (d_in + 2 * self.ssm_state)
+                total += nh_ssm * 2 + d_in                 # A, D, gate norm
+                total += d_in * d
+            elif l.kind == "mlstm":
+                d_in = self.ssm_expand * d
+                nh_x = self.n_heads
+                total += 2 * d * d_in + d_in * d           # up (x, z-gate) / down
+                total += 3 * d_in * d_in                   # q, k, v
+                total += 2 * (d_in * nh_x + nh_x)          # i/f gate proj + bias
+                total += d_in                              # out norm
+            elif l.kind == "slstm":
+                nh_x = self.n_heads
+                hd_x = d // nh_x
+                total += 4 * d * d + 4 * d                 # i,f,z,o input proj
+                total += 4 * nh_x * hd_x * hd_x            # head-wise recurrent
+                total += d                                 # out norm
+            if l.shared_attn and not shared_attn_counted:
+                total += attn_params(False) + 2 * d
+                shared_attn_counted = True
+        if self.is_encoder_decoder:
+            # encoder: attn + mlp per layer (non-causal), own final norm
+            total += self.n_encoder_layers * (attn_params(False) + mlp_params(self.d_ff) + 2 * d)
+            total += d
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        per_expert = 3 * self.d_model * self.d_ff_expert
+        n_moe_layers = sum(1 for l in self.layers if l.kind == "moe")
+        inactive = n_moe_layers * (self.n_experts - self.experts_per_token) * per_expert
+        return full - inactive
+
+    # --- reduced variant for CPU smoke tests --------------------------------
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family variant: ≤2 layers, d_model≤512, ≤4 experts."""
+        d = min(self.d_model, 256)
+        nh = max(2, min(self.n_heads, 4))
+        nkv = max(1, min(self.n_kv_heads, nh))
+        # keep the pattern's *kinds* but only one period, at most 2 layers
+        pat = self.pattern[: max(1, min(len(self.pattern), 2))]
+        pat = tuple(
+            dataclasses.replace(l, window=min(l.window, 16) if l.window else None)
+            for l in pat
+        )
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=max(2, len(pat)),  # >=2 so the U-shaped split applies
+            d_model=d,
+            n_heads=nh,
+            n_kv_heads=nkv,
+            head_dim=d // nh,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            pattern=pat,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            d_ff_expert=min(self.d_ff_expert, 128) if self.d_ff_expert else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            moe_capacity_factor=8.0,   # tiny token counts: avoid drops
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state or self.family == "ssm" else self.ssm_head_dim,
+            n_encoder_layers=min(self.n_encoder_layers, 2),
+            n_frontend_tokens=min(self.n_frontend_tokens, 8) if self.n_frontend_tokens else 0,
+            max_seq_len=512,
+            hat_shallow_layers=1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether (cfg, shape) should be dry-run; (ok, reason-if-skipped)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §4)"
+    return True, ""

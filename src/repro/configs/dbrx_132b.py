@@ -1,0 +1,25 @@
+"""DBRX-132B — fine-grained MoE, 16 experts top-4 [hf:databricks/dbrx-base].
+
+Assigned spec: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+MoE 16e top-4.
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10_752,
+    vocab_size=100_352,
+    pattern=(LayerDef("moe"),),
+    n_experts=16,
+    experts_per_token=4,
+    d_ff_expert=10_752,
+    rope_theta=500_000.0,
+    max_seq_len=32_768,
+    hat_shallow_layers=2,
+    source="hf:databricks/dbrx-base",
+)

@@ -1,0 +1,33 @@
+"""Gemma3-12B — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family card, scaled per assignment].
+
+Assigned spec: 48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144.
+Pattern: 5 sliding-window (1024) layers then 1 global layer, repeated.
+This is the dense arch that qualifies for long_500k: 40/48 layers are
+windowed (sub-quadratic), only 8 global layers keep a full KV cache.
+"""
+from .base import LayerDef, ModelConfig
+
+_W = 1024
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,            # gemma3 uses head_dim 256 (> d_model/n_heads)
+    d_ff=15_360,
+    vocab_size=262_144,
+    pattern=(
+        LayerDef("attn", window=_W), LayerDef("attn", window=_W),
+        LayerDef("attn", window=_W), LayerDef("attn", window=_W),
+        LayerDef("attn", window=_W), LayerDef("attn"),
+    ),
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    max_seq_len=1_048_576,   # windowed locals make long-context viable
+    hat_shallow_layers=2,
+    source="hf:google/gemma-3-1b-pt (gemma3 family)",
+)

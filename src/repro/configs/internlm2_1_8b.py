@@ -1,0 +1,21 @@
+"""InternLM2-1.8B — dense GQA [arXiv:2403.17297].
+
+Assigned spec: 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_544,
+    pattern=(LayerDef("attn"),),
+    rope_theta=1_000_000.0,
+    max_seq_len=32_768,
+    hat_shallow_layers=2,
+    source="arXiv:2403.17297 (InternLM2)",
+)

@@ -1,0 +1,32 @@
+"""Kimi K2 — trillion-param MoE (paper-table) [arXiv:2501.kimi2].
+
+Assigned spec: 61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840,
+MoE 384 experts top-8.  Layer 0 is dense (DeepSeek-V3/K2 convention); the
+remaining 60 layers are MoE with one always-on shared expert.  The assigned
+spec's GQA (kv=8) is used verbatim (the released model uses MLA; the
+assignment overrides — noted in DESIGN.md).
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=18_432,              # the single dense layer's FFN width (K2 card);
+                              # the assigned d_ff=2048 is the per-expert width
+
+    vocab_size=163_840,
+    pattern=tuple([LayerDef("attn")] + [LayerDef("moe")] * 60),
+    n_experts=384,
+    experts_per_token=8,
+    d_ff_expert=2048,
+    n_shared_experts=1,
+    rope_theta=50_000.0,
+    max_seq_len=131_072,
+    hat_shallow_layers=2,
+    source="arXiv:2501.kimi2 (Kimi K2)",
+)

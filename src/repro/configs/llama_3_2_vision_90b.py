@@ -1,0 +1,31 @@
+"""Llama-3.2-Vision-90B backbone — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision, scaled per assignment].
+
+Assigned spec: 100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Cross-attention layers are interleaved every 5th layer (Llama-3.2-Vision
+convention): 80 self-attn + 20 cross-attn layers.  The vision frontend
+(ViT + projector) is a STUB — ``input_specs`` feeds precomputed patch
+embeddings (see DESIGN.md: modality-frontend carve-out).
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28_672,
+    vocab_size=128_256,
+    pattern=(
+        LayerDef("attn"), LayerDef("attn"), LayerDef("attn"), LayerDef("attn"),
+        LayerDef("cross_attn"),
+    ),
+    rope_theta=500_000.0,
+    frontend="vision",
+    n_frontend_tokens=1601,   # 1 tile x (40x40 patches + cls), 11B-Vision card
+    max_seq_len=131_072,
+    hat_shallow_layers=2,
+    source="hf:meta-llama/Llama-3.2-11B-Vision (backbone scaled to 90B spec)",
+)

@@ -1,0 +1,22 @@
+"""Phi-4-mini-3.8B — dense, RoPE + SwiGLU + GQA [arXiv:2412.08905].
+
+Assigned spec: 32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064.
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200_064,
+    pattern=(LayerDef("attn"),),
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    max_seq_len=131_072,
+    hat_shallow_layers=2,
+    source="arXiv:2412.08905 (Phi-4 family)",
+)

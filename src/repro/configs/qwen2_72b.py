@@ -1,0 +1,22 @@
+"""Qwen2-72B — dense GQA with QKV bias [arXiv:2407.10671].
+
+Assigned spec: 80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=29_568,
+    vocab_size=152_064,
+    qkv_bias=True,
+    pattern=(LayerDef("attn"),),
+    rope_theta=1_000_000.0,
+    max_seq_len=32_768,
+    hat_shallow_layers=2,
+    source="arXiv:2407.10671 (Qwen2)",
+)

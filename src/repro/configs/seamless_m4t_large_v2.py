@@ -1,0 +1,29 @@
+"""SeamlessM4T-large-v2 — encoder-decoder, multimodal [arXiv:2308.11596].
+
+Assigned spec: 24L d_model=1024 16H (GQA kv=16) d_ff=8192 vocab=256206.
+24 encoder + 24 decoder layers (per the model card, each stack is 24L).
+The audio frontend (mel-spectrogram + conv feature extractor) is a STUB —
+``input_specs`` feeds precomputed frame embeddings to the encoder (see
+DESIGN.md: modality-frontend carve-out).  Decode shapes exercise the text
+decoder with cross-attention into a fixed encoder memory.
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,                      # decoder stack
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256_206,
+    pattern=(LayerDef("cross_attn"),),  # every decoder layer cross-attends
+    is_encoder_decoder=True,
+    n_encoder_layers=24,
+    frontend="audio",
+    n_frontend_tokens=1024,           # ~20s of speech at 50 fps
+    max_seq_len=8_192,
+    hat_shallow_layers=2,
+    source="arXiv:2308.11596 (SeamlessM4T v2)",
+)

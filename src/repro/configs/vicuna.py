@@ -1,0 +1,38 @@
+"""Vicuna-7B / Vicuna-13B — the paper's own evaluation models
+[Chiang et al. 2023; LLaMA architecture].
+
+Paper §4.1: Vicuna-7B = 32 decoder layers, 32 heads, hidden 4096
+(SpecBench); Vicuna-13B = 40 layers, 40 heads, hidden 5120 (CNN/DM).
+HAT deploys the first 2 (7B) / 3 (13B) layers + head on-device.
+"""
+from .base import LayerDef, ModelConfig
+
+VICUNA_7B = ModelConfig(
+    name="vicuna-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11_008,
+    vocab_size=32_000,
+    pattern=(LayerDef("attn"),),
+    max_seq_len=4096,
+    hat_shallow_layers=2,
+    source="Vicuna (LLaMA-7B arch); HAT paper §4.1",
+)
+
+VICUNA_13B = ModelConfig(
+    name="vicuna-13b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=13_824,
+    vocab_size=32_000,
+    pattern=(LayerDef("attn"),),
+    max_seq_len=4096,
+    hat_shallow_layers=3,
+    source="Vicuna (LLaMA-13B arch); HAT paper §4.1",
+)

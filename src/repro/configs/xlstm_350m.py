@@ -1,0 +1,27 @@
+"""xLSTM-350M — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+Assigned spec: 24L d_model=1024 4H (GQA kv=4) d_ff=0 vocab=50304.
+d_ff=0: xLSTM blocks carry their own up/down projections, there is no
+separate FFN sublayer.  Pattern follows the paper's mostly-mLSTM mix with
+periodic sLSTM blocks (1 sLSTM per 4-layer period).
+"""
+from .base import LayerDef, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    pattern=(
+        LayerDef("mlstm"), LayerDef("mlstm"), LayerDef("mlstm"), LayerDef("slstm"),
+    ),
+    ssm_expand=2,
+    tie_embeddings=True,
+    max_seq_len=1_048_576,   # recurrent: O(1) state, unbounded context
+    hat_shallow_layers=2,
+    source="arXiv:2405.04517 (xLSTM)",
+)

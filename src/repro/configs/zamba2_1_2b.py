@@ -1,0 +1,34 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+Assigned spec: 38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000,
+ssm_state=64.  Zamba2 runs a Mamba2 trunk with a single *shared* (one
+parameter set) transformer block invoked periodically; we apply the shared
+attention block every 6th layer (6 invocations over 38 layers), matching the
+Zamba2 design of reusing one attention block.
+"""
+from .base import LayerDef, ModelConfig
+
+_PERIOD = (
+    LayerDef("mamba2"), LayerDef("mamba2"), LayerDef("mamba2"),
+    LayerDef("mamba2"), LayerDef("mamba2"), LayerDef("mamba2", shared_attn=True),
+)
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,               # shared attn block's MLP width
+    vocab_size=32_000,
+    pattern=_PERIOD,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    tie_embeddings=True,
+    max_seq_len=1_048_576,
+    hat_shallow_layers=2,
+    source="arXiv:2411.15242 (Zamba2)",
+)

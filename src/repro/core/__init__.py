@@ -1,0 +1,38 @@
+"""HAT's core contribution: U-shaped split + adapter speculative decoding +
+prompt chunking + parallel drafting + state monitoring."""
+from .adapter import (
+    DraftModel,
+    adapter_forward,
+    adapter_param_count,
+    init_adapter,
+    init_adapter_cache,
+)
+from .chunking import chunk_offsets, chunk_prompt, optimal_chunk_size
+from .distill import distill_loss, make_distill_step, smooth_l1
+from .monitor import DelayPredictor, DeviceState, Ewma, StateMonitor
+from .parallel_draft import (
+    CandidateDrafts,
+    parallel_draft_steps,
+    predraft_candidates,
+)
+from .speculative import (
+    DraftResult,
+    accept_greedy_rows,
+    draft_until_threshold,
+    has_ssm_state,
+    restore_states,
+    snapshot_states,
+)
+from .split import SplitModels, derive_configs, split_model, stack_layers, unstack_layers
+
+__all__ = [
+    "DraftModel", "adapter_forward", "adapter_param_count", "init_adapter",
+    "init_adapter_cache", "chunk_offsets", "chunk_prompt",
+    "optimal_chunk_size", "distill_loss", "make_distill_step", "smooth_l1",
+    "DelayPredictor", "DeviceState", "Ewma", "StateMonitor",
+    "CandidateDrafts", "parallel_draft_steps", "predraft_candidates",
+    "DraftResult", "accept_greedy_rows", "draft_until_threshold",
+    "has_ssm_state", "restore_states", "snapshot_states",
+    "SplitModels", "derive_configs", "split_model", "stack_layers",
+    "unstack_layers",
+]

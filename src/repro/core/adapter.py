@@ -1,0 +1,128 @@
+"""The lightweight adapter network Λ and the on-device draft model (HAT §3.4).
+
+Λ has the structure of a decoder layer's *self-attention module* (the paper
+picks attention over the FFN because it has fewer parameters and lower
+compute delay).  The draft model is
+
+    w_S = H_L ∘ Λ ∘ w_L^m
+
+head ∘ adapter ∘ shallow-layers.  Λ is trained by knowledge distillation to
+mimic the cloud's middle submodel (core/distill.py); at serve time the
+device drafts autoregressively with w_S (core/speculative.py).
+
+Λ is an attention block for every arch family — it consumes d_model hidden
+states regardless of what the middle submodel is built from (MoE, SSM, ...),
+which is exactly the paper's construction.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.layers import init_attn, init_mlp, rms_norm
+from ..models.model import Model, _attn_block, _Ctx
+from .split import SplitModels
+
+Params = Dict
+
+
+def init_adapter(cfg: ModelConfig, key, dtype=jnp.float32) -> Tuple[Params, Params]:
+    """Adapter Λ: ``cfg.adapter_layers`` self-attention blocks."""
+    ks = jax.random.split(key, max(cfg.adapter_layers, 1))
+    p, s = {}, {}
+    for i in range(cfg.adapter_layers):
+        p[f"a{i}"], s[f"a{i}"] = init_attn(cfg, ks[i], dtype)
+    return p, s
+
+
+def adapter_param_count(cfg: ModelConfig) -> int:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    per = d + d * nh * hd + 2 * d * nkv * hd + nh * hd * d
+    if cfg.qkv_bias:
+        per += nh * hd + 2 * nkv * hd
+    return cfg.adapter_layers * per
+
+
+def init_adapter_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        f"a{i}": {
+            "k": jnp.zeros((batch, nkv, max_len, hd), dtype),
+            "v": jnp.zeros((batch, nkv, max_len, hd), dtype),
+        }
+        for i in range(cfg.adapter_layers)
+    }
+
+
+def adapter_forward(
+    cfg: ModelConfig,
+    adapter_params: Params,
+    hidden: jax.Array,                 # [B, T, D] shallow hidden states
+    cache: Optional[Params] = None,
+    offset=0,
+) -> Tuple[jax.Array, Optional[Params]]:
+    ctx = _Ctx(jnp.asarray(offset, jnp.int32), None, None, cache is None)
+    new_cache = {} if cache is not None else None
+    x = hidden
+    for i in range(cfg.adapter_layers):
+        x, c = _attn_block(
+            cfg, adapter_params[f"a{i}"], x,
+            None if cache is None else cache[f"a{i}"], ctx, None,
+        )
+        if new_cache is not None:
+            new_cache[f"a{i}"] = c
+    return x, new_cache
+
+
+class DraftModel:
+    """w_S = head ∘ Λ ∘ shallow-layers: the on-device SLM."""
+
+    def __init__(self, split: SplitModels, adapter_params: Params):
+        self.split = split
+        self.cfg = split.cfg
+        self.adapter_params = adapter_params
+
+    def init_cache(self, batch: int, max_len: int, memory=None, dtype=None):
+        dtype = dtype or self.split.input_model.dtype
+        return {
+            "input": self.split.input_model.init_cache(
+                self.split.input_params, batch, max_len, memory=memory, dtype=dtype
+            ),
+            "adapter": init_adapter_cache(self.cfg, batch, max_len, dtype),
+        }
+
+    def forward(
+        self, tokens: jax.Array, cache=None, offset=0, memory=None,
+    ):
+        """tokens [B, T] -> (logits [B, T, V], new_cache, shallow_hidden)."""
+        shallow, in_cache, _ = self.split.input_model.apply(
+            self.split.input_params, tokens,
+            cache=None if cache is None else cache["input"],
+            offset=offset, memory=memory, return_hidden=True,
+        )
+        deep_hat, ad_cache = adapter_forward(
+            self.cfg, self.adapter_params, shallow,
+            None if cache is None else cache["adapter"], offset,
+        )
+        logits = self.split.head_logits(deep_hat)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"input": in_cache, "adapter": ad_cache}
+        return logits, new_cache, shallow
+
+    def hidden_forward(self, tokens, cache=None, offset=0, memory=None):
+        """Like forward but returns the adapter's pre-head hidden states
+        (f^S in Eq. 4) — used by distillation."""
+        shallow, in_cache, _ = self.split.input_model.apply(
+            self.split.input_params, tokens,
+            cache=None if cache is None else cache["input"],
+            offset=offset, memory=memory, return_hidden=True,
+        )
+        deep_hat, ad_cache = adapter_forward(
+            self.cfg, self.adapter_params, shallow,
+            None if cache is None else cache["adapter"], offset,
+        )
+        return deep_hat

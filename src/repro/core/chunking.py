@@ -1,0 +1,83 @@
+"""Prompt chunking and the optimal-chunk-size solver (HAT §3.3, Eq. 3).
+
+Eq. (3) balances per-chunk upload time against in-cloud compute time so the
+pipeline has no bubbles:
+
+    X_i · A / β_up  =  ( g(μ) + g(μ + X_i) ) / P
+
+LHS: time to upload one chunk's hidden states (X_i tokens × A bytes each).
+RHS: waiting delay (≈ one average batch, g(μ)) plus the chunk's own
+computation delay g(μ + X_i), both divided by the cloud's parallel speedup
+P (the paper's pipeline length; on the TPU mesh, the throughput scaling of
+the sharded middle model — DESIGN.md §3).
+
+LHS is strictly increasing and unbounded in X; RHS is increasing but
+near-affine with a small slope, so there is a unique crossing — found by
+integer bisection and clamped to [min_chunk, prompt_len].
+"""
+from __future__ import annotations
+
+from typing import Callable, List
+
+from .monitor import DelayPredictor
+
+
+def optimal_chunk_size(
+    *,
+    prompt_len: int,
+    hidden_bytes_per_token: float,     # A in Eq. (3)
+    beta_up: float,                    # bytes/s
+    g: Callable[[float], float],       # delay predictor (seconds)
+    mu: float,                         # current EWMA batched token size
+    pipeline_len: int = 1,             # P
+    min_chunk: int = 32,
+    max_chunk: int = 4096,
+    align: int = 8,
+    cold_start_chunk: int = 128,
+) -> int:
+    """Solve Eq. (3) for X_i."""
+    A, P = hidden_bytes_per_token, max(pipeline_len, 1)
+    if g(1) <= 0.0:
+        # no workload observations yet: fall back to a fixed default until
+        # the state monitor warms up (first few batches)
+        return min(cold_start_chunk, max(prompt_len, min_chunk))
+
+    def lhs(x: float) -> float:
+        return x * A / max(beta_up, 1e-9)
+
+    def rhs(x: float) -> float:
+        return (g(mu) + g(mu + x)) / P
+
+    lo, hi = min_chunk, min(max_chunk, max(prompt_len, min_chunk))
+    if lhs(lo) >= rhs(lo):          # upload already dominates at min size
+        x = lo
+    elif lhs(hi) <= rhs(hi):        # compute dominates even at max size
+        x = hi
+    else:
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if lhs(mid) < rhs(mid):
+                lo = mid
+            else:
+                hi = mid
+        x = hi
+    x = max(min_chunk, min(x, prompt_len))
+    return max(align, (x // align) * align)
+
+
+def chunk_prompt(prompt_len: int, chunk_size: int) -> List[int]:
+    """Split ``prompt_len`` into chunk lengths (last chunk may be short)."""
+    assert prompt_len > 0 and chunk_size > 0
+    full, rem = divmod(prompt_len, chunk_size)
+    out = [chunk_size] * full
+    if rem:
+        out.append(rem)
+    return out
+
+
+def chunk_offsets(chunks: List[int]) -> List[int]:
+    off, out = 0, []
+    for c in chunks:
+        out.append(off)
+        off += c
+    return out

@@ -1,0 +1,89 @@
+"""Knowledge distillation of the adapter Λ (HAT §3.4, Eq. 4).
+
+    Loss = SmoothL1(f^L, f^S) + w_ce · CE( H_L(f^L), H_L(f^S) )
+
+f^L: teacher pre-head hidden states (full model, all n layers),
+f^S: student pre-head hidden states (shallow m layers + adapter Λ).
+Only Λ's parameters receive gradients — the shallow layers and the head are
+frozen copies of the LLM's own weights (exactly the paper's setup; that is
+why HAT needs to train just 67M/105M parameters vs Medusa's 591M/760M).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.layers import F32, rms_norm
+from ..models.model import Model
+from .adapter import adapter_forward
+from .split import SplitModels
+
+Params = Dict
+
+
+def smooth_l1(x: jax.Array, y: jax.Array, beta: float = 1.0) -> jax.Array:
+    d = (x - y).astype(F32)
+    a = jnp.abs(d)
+    return jnp.mean(jnp.where(a < beta, 0.5 * d * d / beta, a - 0.5 * beta))
+
+
+def _head_logits(split: SplitModels, hidden: jax.Array) -> jax.Array:
+    return split.head_logits(hidden)
+
+
+def distill_loss(
+    adapter_params: Params,
+    split: SplitModels,
+    teacher_model: Model,
+    teacher_params: Params,
+    tokens: jax.Array,                  # [B, T]
+    *,
+    w_ce: float = 0.1,
+    memory=None,
+) -> Tuple[jax.Array, Dict]:
+    cfg = split.cfg
+    # teacher pre-head hidden states f^L (stop-grad: frozen LLM)
+    f_L, _, _ = teacher_model.apply(
+        teacher_params, tokens, memory=memory, return_hidden=True
+    )
+    f_L = jax.lax.stop_gradient(f_L)
+
+    # student: frozen shallow layers + trainable adapter
+    shallow, _, _ = split.input_model.apply(
+        split.input_params, tokens, memory=memory, return_hidden=True
+    )
+    shallow = jax.lax.stop_gradient(shallow)
+    f_S, _ = adapter_forward(cfg, adapter_params, shallow)
+
+    l_sl = smooth_l1(f_L, f_S)
+    t_logits = _head_logits(split, f_L)
+    s_logits = _head_logits(split, f_S)
+    t_prob = jax.nn.softmax(t_logits.astype(F32), axis=-1)
+    l_ce = -jnp.mean(
+        jnp.sum(t_prob * jax.nn.log_softmax(s_logits.astype(F32), axis=-1), axis=-1)
+    )
+    loss = l_sl + w_ce * l_ce
+    # top-1 agreement: the quantity that drives speculative accept length
+    agree = jnp.mean(
+        (jnp.argmax(t_logits, -1) == jnp.argmax(s_logits, -1)).astype(F32)
+    )
+    return loss, {"loss": loss, "smooth_l1": l_sl, "ce": l_ce, "agree": agree}
+
+
+def make_distill_step(split: SplitModels, teacher_model: Model, teacher_params,
+                      optimizer, w_ce: float = 0.1):
+    """Returns a jitted ``step(adapter_params, opt_state, tokens) ->
+    (adapter_params, opt_state, metrics)`` closure."""
+
+    def step(adapter_params, opt_state, tokens):
+        (loss, metrics), grads = jax.value_and_grad(distill_loss, has_aux=True)(
+            adapter_params, split, teacher_model, teacher_params, tokens, w_ce=w_ce
+        )
+        updates, opt_state = optimizer.update(grads, opt_state, adapter_params)
+        adapter_params = jax.tree.map(lambda p, u: p + u, adapter_params, updates)
+        return adapter_params, opt_state, metrics
+
+    return jax.jit(step)

@@ -1,0 +1,116 @@
+"""State monitoring module (HAT §3.2, Eqs. 1–2).
+
+The cloud tracks its own workload — batched token size μ^t and per-batch
+computation delay η^t — with EWMA smoothing (α = 0.8), and maintains a
+predictive function g^t(·) mapping batched-token-size → in-cloud computation
+delay.  g is a binned piecewise-linear regressor updated online with the
+same EWMA rule (Eq. 2).  Devices track their drafting delay γ_i and up/down
+bandwidths β_i with the same smoothing.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class Ewma:
+    """x^t = α·x^{t-1} + (1-α)·x̂^t   (Eq. 1)."""
+
+    def __init__(self, alpha: float = 0.8, init: Optional[float] = None):
+        self.alpha = alpha
+        self.value: Optional[float] = init
+
+    def update(self, sample: float) -> float:
+        if self.value is None:
+            self.value = float(sample)
+        else:
+            self.value = self.alpha * self.value + (1 - self.alpha) * float(sample)
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return self.value if self.value is not None else default
+
+
+class DelayPredictor:
+    """g^t(·): batched token size -> in-cloud computation delay (seconds).
+
+    Log2-spaced bins over token size; each bin holds an EWMA of observed
+    delays (Eq. 2); prediction linearly interpolates between the nearest
+    populated bins and extrapolates linearly beyond them (in-cloud delay is
+    near-affine in batched tokens once compute saturates — Fig. 1(c))."""
+
+    def __init__(self, alpha: float = 0.8, max_tokens: int = 1 << 20):
+        self.alpha = alpha
+        self.edges = [0] + [2 ** i for i in range(0, int(math.log2(max_tokens)) + 1)]
+        self.bins: Dict[int, Ewma] = {}
+
+    def _bin(self, tokens: float) -> int:
+        t = max(tokens, 1.0)
+        return min(int(math.log2(t)) + 1, len(self.edges) - 1)
+
+    def update(self, tokens: float, delay: float) -> None:
+        b = self._bin(tokens)
+        self.bins.setdefault(b, Ewma(self.alpha)).update(delay)
+
+    def predict(self, tokens: float) -> float:
+        if not self.bins:
+            return 0.0
+        pts = sorted((self.edges[b], e.get()) for b, e in self.bins.items())
+        xs = np.array([p[0] for p in pts], dtype=np.float64)
+        ys = np.array([p[1] for p in pts], dtype=np.float64)
+        t = max(tokens, 1.0)
+        if len(xs) == 1:
+            # single observation: scale ∝ tokens beyond the observed point
+            return float(ys[0] * max(1.0, t / max(xs[0], 1.0)))
+        if t >= xs[-1]:
+            slope = (ys[-1] - ys[-2]) / max(xs[-1] - xs[-2], 1e-9)
+            return float(ys[-1] + slope * (t - xs[-1]))
+        return float(np.interp(t, xs, ys))
+
+
+@dataclass
+class DeviceState:
+    """Per-device EWMAs: γ_i (s per draft step), β_up/β_down (bytes/s)."""
+
+    gamma: Ewma = field(default_factory=lambda: Ewma(0.8))
+    beta_up: Ewma = field(default_factory=lambda: Ewma(0.8))
+    beta_down: Ewma = field(default_factory=lambda: Ewma(0.8))
+
+
+class StateMonitor:
+    """Cloud-side aggregation of workload + device states (HAT §3.2)."""
+
+    def __init__(self, alpha: float = 0.8):
+        self.alpha = alpha
+        self.mu = Ewma(alpha)                  # batched token size μ^t
+        self.eta = Ewma(alpha)                 # batch computation delay η^t
+        self.g = DelayPredictor(alpha)
+        self.devices: Dict[int, DeviceState] = {}
+
+    # --- cloud-side updates (each batch step) ------------------------------
+    def record_batch(self, batched_tokens: int, compute_delay: float) -> None:
+        self.mu.update(batched_tokens)
+        self.eta.update(compute_delay)
+        self.g.update(batched_tokens, compute_delay)
+
+    # --- device-side reports (piggybacked on verification messages) --------
+    def device(self, dev_id: int) -> DeviceState:
+        return self.devices.setdefault(dev_id, DeviceState())
+
+    def record_device(self, dev_id: int, *, gamma: Optional[float] = None,
+                      beta_up: Optional[float] = None,
+                      beta_down: Optional[float] = None) -> None:
+        d = self.device(dev_id)
+        if gamma is not None:
+            d.gamma.update(gamma)
+        if beta_up is not None:
+            d.beta_up.update(beta_up)
+        if beta_down is not None:
+            d.beta_down.update(beta_down)
+
+    # --- predictions --------------------------------------------------------
+    def predict_delay(self, extra_tokens: int = 0) -> float:
+        return self.g.predict(self.mu.get() + extra_tokens)

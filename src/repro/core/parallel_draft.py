@@ -1,0 +1,80 @@
+"""Parallel drafting module (HAT §3.5, Eq. 6).
+
+While a verification round-trips through the cloud, the device is idle.
+HAT pre-drafts the *next* round: the top-k candidates of the last draft
+step each seed a candidate continuation; when the verification result
+arrives, if the corrected token matches one of the candidates, its
+pre-drafted sequence is reused — the next drafting stage costs ~0.
+
+λ_i (Eq. 6) bounds how many pre-draft steps fit inside the verification
+round trip:
+
+    λ_i = ⌊ ( μ_i·A/β_up + g(μ) + μ_i·A/β_down ) / γ_i ⌋
+
+μ_i: draft length this round, A: hidden-state bytes/token, γ_i: per-step
+drafting delay.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+def parallel_draft_steps(
+    *,
+    draft_len: int,                   # μ_i
+    hidden_bytes_per_token: float,    # A
+    beta_up: float,
+    beta_down: float,
+    g_mu: float,                      # g^t(μ^t)
+    gamma: float,                     # per-step drafting delay γ_i
+    max_steps: int = 16,
+) -> int:
+    """Eq. (6)."""
+    if gamma <= 0:
+        return max_steps
+    rt = (
+        draft_len * hidden_bytes_per_token / max(beta_up, 1e-9)
+        + g_mu
+        + draft_len * hidden_bytes_per_token / max(beta_down, 1e-9)
+    )
+    return max(0, min(int(rt / gamma), max_steps))
+
+
+@dataclass
+class CandidateDrafts:
+    """Pre-drafted continuations keyed by their seed token."""
+
+    seeds: np.ndarray                      # [k] candidate seed tokens
+    sequences: Dict[int, np.ndarray]       # seed -> pre-drafted tokens
+    probs: Dict[int, np.ndarray]           # seed -> per-token max probs
+
+    def lookup(self, token: int) -> Optional[np.ndarray]:
+        return self.sequences.get(int(token))
+
+
+def predraft_candidates(
+    draft_step: Callable,          # (token:int, steps:int) -> (tokens, probs)
+    topk_tokens: np.ndarray,       # [k] top-k tokens of the last draft step
+    steps: int,
+) -> CandidateDrafts:
+    """Generate candidate continuations for each top-k seed.
+
+    ``draft_step`` is a device-local closure that drafts ``steps`` tokens
+    from a given seed using a *copy-on-write fork* of the draft cache (the
+    simulator charges its wall-time to the verification window).  With k
+    seeds and λ steps each, the device performs k·λ draft-model steps —
+    Eq. (6) guarantees they fit inside the round trip.
+    """
+    sequences: Dict[int, np.ndarray] = {}
+    probs: Dict[int, np.ndarray] = {}
+    if steps <= 0:
+        return CandidateDrafts(topk_tokens, sequences, probs)
+    for seed in np.asarray(topk_tokens).tolist():
+        toks, ps = draft_step(int(seed), steps)
+        sequences[int(seed)] = np.asarray(toks, np.int32)
+        probs[int(seed)] = np.asarray(ps, np.float32)
+    return CandidateDrafts(topk_tokens, sequences, probs)

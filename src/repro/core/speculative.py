@@ -1,0 +1,159 @@
+"""Speculative decoding: threshold-adaptive drafting (Eq. 5), U-shaped
+verification, greedy acceptance, and SSM-state rollback.
+
+Protocol per round (HAT §3.4):
+  1. drafting: the on-device draft model w_S generates tokens
+     autoregressively until ``softmax prob < η`` (Eq. 5) or ``max_draft``.
+  2. verification: the draft tokens pass through the device's shallow
+     layers; the *shallow hidden states* (not tokens!) go to the cloud; the
+     middle submodel produces deep hidden states, which return to the device
+     where the head emits logits.
+  3. acceptance: longest prefix of draft tokens matching the LLM's greedy
+     choice is accepted; the LLM's token at the first divergence (or after
+     the last accepted draft) is the bonus token of the next round.
+
+KV-cache rollback is positional: caches are always written at
+``offset = accepted_len``, so rejected entries are simply overwritten in
+the next round (full-attention caches mask beyond the current position).
+SSM/hybrid archs carry state, not positions — ``snapshot_states`` /
+``restore_states`` + ``advance`` implement rollback by re-running the
+accepted prefix from the pre-verification snapshot (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# drafting (device side)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DraftResult:
+    tokens: np.ndarray            # [k] drafted token ids
+    probs: np.ndarray             # [k] their softmax probabilities
+    topk_last: np.ndarray         # [topk] candidates at the last draft step
+    steps: int                    # drafting steps executed
+
+
+def draft_until_threshold(
+    draft_model,
+    cache,
+    last_token: jax.Array,          # [B=1, 1]
+    offset: int,
+    *,
+    eta: float = 0.6,
+    max_draft: int = 8,
+    topk: int = 4,
+    memory=None,
+) -> Tuple[DraftResult, Params, int]:
+    """Autoregressive drafting with the Eq. 5 stop rule (batch of one device;
+    the fleet dimension is the simulator's, not the array's).
+
+    Returns (result, updated draft cache, new offset).  The cache contains
+    the *draft model's own* KV entries for the drafted tokens; they are
+    positionally rolled back by the next round's offset if rejected.
+    """
+    toks: List[int] = []
+    probs: List[float] = []
+    tok = last_token
+    off = offset
+    topk_last = None
+    for step in range(max_draft):
+        logits, cache, _ = draft_model.forward(tok, cache=cache, offset=off, memory=memory)
+        off += tok.shape[1]
+        p = jax.nn.softmax(logits[0, -1].astype(jnp.float32))
+        nxt = int(jnp.argmax(p))
+        pmax = float(p[nxt])
+        tk = jax.lax.top_k(p, topk)[1]
+        toks.append(nxt)
+        probs.append(pmax)
+        topk_last = np.asarray(tk)
+        tok = jnp.array([[nxt]], dtype=jnp.int32)
+        if pmax < eta:                      # Eq. (5): stop drafting
+            break
+    return (
+        DraftResult(
+            tokens=np.asarray(toks, np.int32),
+            probs=np.asarray(probs, np.float32),
+            topk_last=topk_last,
+            steps=len(toks),
+        ),
+        cache,
+        off,
+    )
+
+
+# ---------------------------------------------------------------------------
+# acceptance (device side, after verification logits arrive)
+# ---------------------------------------------------------------------------
+
+
+def accept_greedy_rows(
+    draft_tokens: np.ndarray,        # [k]
+    target_logits: np.ndarray,       # [k+1, V]; row i predicts draft[i],
+                                     # row k predicts the token after draft[k-1]
+) -> Tuple[int, int]:
+    """Longest-prefix greedy acceptance (HAT verifies by exact match).
+
+    The verification step feeds [bonus_token, draft_0..draft_{k-1}] through
+    the full U-shaped path, yielding k+1 logit rows; row i is the LLM's
+    distribution for the position draft_i occupies.  Returns
+    (n_accepted, next_token) where next_token is the LLM's greedy token at
+    the first divergence — the "bonus" token seeding the next round.
+    """
+    greedy = np.asarray(target_logits).argmax(-1)
+    k = len(draft_tokens)
+    n = 0
+    while n < k and int(draft_tokens[n]) == int(greedy[n]):
+        n += 1
+    return n, int(greedy[n])
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid rollback
+# ---------------------------------------------------------------------------
+
+_SSM_KEYS = ("m2", "ml", "sl")
+
+
+def snapshot_states(cache) -> Dict:
+    """Copy the recurrent-state pieces of a cache pytree (cheap: states are
+    O(B·d·state), not O(S))."""
+
+    def pick(piece):
+        return {k: v for k, v in piece.items() if k in _SSM_KEYS}
+
+    snap = []
+    for g in cache["groups"]:
+        snap.append({k: pick(v) for k, v in g.items()})
+    return jax.tree.map(lambda a: a, {"groups": snap})     # shallow copy
+
+
+def restore_states(cache, snap) -> Dict:
+    """Overwrite the recurrent-state pieces of ``cache`` from ``snap``."""
+    new_groups = []
+    for g, sg in zip(cache["groups"], snap["groups"]):
+        ng = {}
+        for lk, piece in g.items():
+            np_ = dict(piece)
+            for k in _SSM_KEYS:
+                if k in sg.get(lk, {}):
+                    np_[k] = sg[lk][k]
+            ng[lk] = np_
+        new_groups.append(ng)
+    return {"groups": new_groups}
+
+
+def has_ssm_state(cfg: ModelConfig) -> bool:
+    return any(ld.kind in ("mamba2", "mlstm", "slstm") for ld in cfg.layers)

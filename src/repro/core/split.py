@@ -1,0 +1,186 @@
+"""U-shaped model partition (HAT §2.2, §3.4).
+
+``split_model(cfg, params)`` partitions an LLM into three submodels:
+
+  input submodel   — embedding + first ``m = cfg.hat_shallow_layers`` decoder
+                     layers (on-device, "shallow" hidden states leave here),
+  middle submodel  — layers ``m..n`` (in the cloud; the heavy part),
+  output submodel  — final norm + LM head (on-device: raw output tokens
+                     never leave the device).
+
+Each submodel is a real :class:`repro.models.Model` over a derived config
+with an explicit layer pattern, so every arch family splits the same way
+(the pattern prefix/suffix keeps windows, MoE, SSM kinds, shared-attn flags).
+Parameters are re-grouped from the full model's stacked scan groups; the
+same code paths work on real arrays and on ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import Model, group_layers
+
+Params = Dict
+PyTree = Any
+
+
+def _is_sds(a) -> bool:
+    return isinstance(a, jax.ShapeDtypeStruct)
+
+
+def _take(a, r: int):
+    if _is_sds(a):
+        return jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+    return a[r]
+
+
+def _stack(leaves: List):
+    if _is_sds(leaves[0]):
+        return jax.ShapeDtypeStruct((len(leaves),) + leaves[0].shape, leaves[0].dtype)
+    return jnp.stack(leaves)
+
+
+def unstack_layers(model: Model, params: Params) -> List[Params]:
+    """Full params -> ordered list of per-layer param dicts."""
+    out: List[Params] = []
+    for gi, (body, reps) in enumerate(model.groups):
+        gp = params["groups"][gi]
+        for r in range(reps):
+            for li in range(len(body)):
+                out.append(jax.tree.map(lambda a: _take(a, r), gp[f"l{li}"]))
+    return out
+
+
+def stack_layers(model: Model, layer_params: List[Params]) -> List[Params]:
+    """Ordered per-layer params -> stacked scan-group params for ``model``."""
+    groups = []
+    idx = 0
+    for body, reps in model.groups:
+        # gather [reps][len(body)] layer dicts
+        per_pos: Dict[str, List[Params]] = {f"l{li}": [] for li in range(len(body))}
+        for _ in range(reps):
+            for li in range(len(body)):
+                per_pos[f"l{li}"].append(layer_params[idx])
+                idx += 1
+        gp = {
+            k: jax.tree.map(lambda *xs: _stack(list(xs)), *v)
+            for k, v in per_pos.items()
+        }
+        groups.append(gp)
+    assert idx == len(layer_params)
+    return groups
+
+
+def derive_configs(cfg: ModelConfig):
+    """Derived (input, middle) submodel configs; output submodel is the head."""
+    m = cfg.hat_shallow_layers
+    layers = cfg.layers
+    assert 0 < m < cfg.n_layers
+    cfg_in = dataclasses.replace(
+        cfg,
+        name=cfg.name + "-hat-input",
+        n_layers=m,
+        pattern=layers[:m],
+        include_embed=True,
+        include_head=False,
+        # encoder memory is produced cloud-side; device layers only consume it
+        is_encoder_decoder=False,
+        n_encoder_layers=0,
+    )
+    cfg_mid = dataclasses.replace(
+        cfg,
+        name=cfg.name + "-hat-middle",
+        n_layers=cfg.n_layers - m,
+        pattern=layers[m:],
+        include_embed=False,
+        include_head=False,
+    )
+    return cfg_in, cfg_mid
+
+
+@dataclass
+class SplitModels:
+    cfg: ModelConfig
+    m: int
+    input_model: Model
+    middle_model: Model
+    input_params: Params
+    middle_params: Params
+    output_params: Params          # {"final_norm", "head"?, "embed"? (tied)}
+
+    # ------------------------------------------------------------- helpers
+    def device_forward(self, tokens, cache=None, offset=0, memory=None):
+        """Input submodel: tokens -> shallow hidden states (uploaded)."""
+        return self.input_model.apply(
+            self.input_params, tokens, cache=cache, offset=offset,
+            memory=memory, return_hidden=True,
+        )
+
+    def middle_forward(self, hidden, cache=None, offset=0, memory=None):
+        """Middle submodel (cloud): shallow -> deep hidden states."""
+        return self.middle_model.apply(
+            self.middle_params, None, inputs_embeds=hidden, cache=cache,
+            offset=offset, memory=memory, return_hidden=True,
+        )
+
+    def head_logits(self, hidden: jax.Array) -> jax.Array:
+        """Output submodel: deep hidden states -> logits (on-device)."""
+        from ..models.layers import rms_norm
+
+        p = self.output_params
+        x = rms_norm(hidden, p["final_norm"], self.cfg.rmsnorm_eps)
+        head = p["embed"].T if self.cfg.tie_embeddings else p["head"]
+        return x @ head
+
+    def bytes_per_token_hidden(self, dtype_bytes: int = 2) -> int:
+        """A in Eq. (3): size of one token's hidden state on the wire."""
+        return self.cfg.d_model * dtype_bytes
+
+
+def split_model(cfg: ModelConfig, params: Optional[Params], dtype=jnp.float32) -> SplitModels:
+    """Partition ``params`` of the full model into the three submodels.
+
+    ``params`` may be real arrays or ShapeDtypeStructs (abstract split for
+    the dry-run).  If ``params`` is None, submodels get freshly-initialized
+    parameters (useful for tests).
+    """
+    cfg_in, cfg_mid = derive_configs(cfg)
+    m = cfg.hat_shallow_layers
+    full_model = Model(cfg, dtype=dtype)
+    input_model = Model(cfg_in, dtype=dtype)
+    middle_model = Model(cfg_mid, dtype=dtype)
+
+    if params is None:
+        params = full_model.init(jax.random.PRNGKey(0))
+
+    layers = unstack_layers(full_model, params)
+    in_p: Params = {"groups": stack_layers(input_model, layers[:m])}
+    mid_p: Params = {"groups": stack_layers(middle_model, layers[m:])}
+
+    in_p["embed"] = params["embed"]
+    out_p: Params = {"final_norm": params["final_norm"]}
+    if cfg.tie_embeddings:
+        out_p["embed"] = params["embed"]
+    else:
+        out_p["head"] = params["head"]
+
+    if "shared_attn" in params:
+        # zamba2: the shared block params go wherever its layers live
+        if any(ld.shared_attn for ld in cfg_in.layers):
+            in_p["shared_attn"] = params["shared_attn"]
+        if any(ld.shared_attn for ld in cfg_mid.layers):
+            mid_p["shared_attn"] = params["shared_attn"]
+    if cfg.is_encoder_decoder:
+        mid_p["encoder"] = params["encoder"]
+
+    return SplitModels(
+        cfg=cfg, m=m,
+        input_model=input_model, middle_model=middle_model,
+        input_params=in_p, middle_params=mid_p, output_params=out_p,
+    )

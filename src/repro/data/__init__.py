@@ -1,0 +1,16 @@
+from .synthetic import (
+    CNN_DM,
+    SPECBENCH,
+    RequestSpec,
+    WorkloadSpec,
+    markov_corpus,
+    sample_workload,
+    token_batches,
+)
+from .tokenizer import BOS, EOS, PAD, BPETokenizer, ByteTokenizer
+
+__all__ = [
+    "BOS", "EOS", "PAD", "BPETokenizer", "ByteTokenizer",
+    "CNN_DM", "SPECBENCH", "RequestSpec", "WorkloadSpec",
+    "markov_corpus", "sample_workload", "token_batches",
+]

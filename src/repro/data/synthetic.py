@@ -1,0 +1,137 @@
+"""Synthetic corpora and serving workloads.
+
+Two layers:
+  * ``markov_corpus`` — a token-level Markov-chain corpus with Zipfian
+    unigram structure, enough for small LMs (and the adapter distillation)
+    to have learnable regularities.
+  * workload generators matching the paper's Table 3 prompt-length
+    statistics: SpecBench-like (mean 351.2, P90 891, long right tail across
+    heterogeneous tasks) and CNN/DM-like (mean 1036.6, P90 1772) —
+    log-normal length models fit to (mean, P90), truncated to [16, 4096].
+    Requests arrive by a Poisson process (paper §4.2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# training corpora
+# ---------------------------------------------------------------------------
+
+
+def markov_corpus(
+    rng: np.random.Generator,
+    vocab_size: int,
+    n_tokens: int,
+    *,
+    branching: int = 4,
+    zipf_a: float = 1.2,
+) -> np.ndarray:
+    """Order-1 Markov chain: each token has ``branching`` likely successors
+    drawn from a Zipfian base distribution -> compressible structure."""
+    v_eff = max(vocab_size - 3, 8)
+    base_p = 1.0 / np.arange(1, v_eff + 1) ** zipf_a
+    base_p /= base_p.sum()
+    succ = rng.choice(v_eff, size=(v_eff, branching), p=base_p)
+    toks = np.empty(n_tokens, np.int32)
+    t = int(rng.integers(v_eff))
+    for i in range(n_tokens):
+        if rng.random() < 0.85:
+            t = int(succ[t, int(rng.integers(branching))])
+        else:
+            t = int(rng.choice(v_eff, p=base_p))
+        toks[i] = t + 3                                  # skip specials
+    return toks
+
+
+def token_batches(
+    rng: np.random.Generator,
+    corpus: np.ndarray,
+    batch: int,
+    seq_len: int,
+) -> Iterator[dict]:
+    n = len(corpus) - seq_len - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        toks = np.stack([corpus[i : i + seq_len + 1] for i in idx])
+        yield {"tokens": toks.astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# serving workloads (paper Table 3)
+# ---------------------------------------------------------------------------
+
+
+def _lognormal_from_mean_p90(mean: float, p90: float):
+    """Solve (mu, sigma) of a log-normal from mean and 90th percentile."""
+    z90 = 1.2815515655446004
+    # mean = exp(mu + s^2/2);  p90 = exp(mu + z90 s)
+    # => log(p90) - log(mean) = z90 s - s^2/2  -> solve quadratic in s
+    d = math.log(p90) - math.log(mean)
+    disc = z90 * z90 - 2 * d
+    s = z90 - math.sqrt(max(disc, 0.0)) if disc > 0 else z90
+    mu = math.log(mean) - s * s / 2
+    return mu, s
+
+
+@dataclass
+class WorkloadSpec:
+    name: str
+    mean_len: float
+    p90_len: float
+    max_gen: int = 128            # paper: max generation 128 tokens
+    min_len: int = 16
+    max_len: int = 4096
+
+
+SPECBENCH = WorkloadSpec("specbench", mean_len=351.2, p90_len=891.0, max_len=2048)
+CNN_DM = WorkloadSpec("cnn_dm", mean_len=1036.6, p90_len=1772.0)
+
+
+@dataclass
+class RequestSpec:
+    req_id: int
+    device_id: int
+    arrival_s: float
+    prompt_len: int
+    max_new_tokens: int
+    prompt: Optional[np.ndarray] = None    # actual token ids (small-model runs)
+
+
+def sample_workload(
+    spec: WorkloadSpec,
+    rng: np.random.Generator,
+    *,
+    n_requests: int,
+    rate_per_s: float,
+    n_devices: int = 30,
+    with_tokens: bool = False,
+    vocab_size: int = 512,
+) -> List[RequestSpec]:
+    """Poisson arrivals across a device fleet with Table-3 prompt lengths."""
+    mu, s = _lognormal_from_mean_p90(spec.mean_len, spec.p90_len)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate_per_s)
+        plen = int(np.clip(rng.lognormal(mu, s), spec.min_len, spec.max_len))
+        gen = int(rng.integers(max(spec.max_gen // 4, 1), spec.max_gen + 1))
+        prompt = None
+        if with_tokens:
+            prompt = rng.integers(3, vocab_size, size=plen).astype(np.int32)
+        out.append(
+            RequestSpec(
+                req_id=i,
+                device_id=int(rng.integers(n_devices)),
+                arrival_s=t,
+                prompt_len=plen,
+                max_new_tokens=gen,
+                prompt=prompt,
+            )
+        )
+    return out

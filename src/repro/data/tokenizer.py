@@ -1,0 +1,110 @@
+"""Tokenizers: byte-level (always available) and a trainable BPE.
+
+The runnable experiments use small from-scratch models, so the tokenizer is
+part of the substrate (no external vocab files).  ByteTokenizer maps UTF-8
+bytes + special tokens; BPETokenizer learns merges greedily over a corpus
+(classic Sennrich BPE, capped vocabulary) — enough to make the synthetic
+SpecBench/CNN-DM-like workloads realistic token streams.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+N_SPECIAL = 3
+
+
+class ByteTokenizer:
+    vocab_size = 256 + N_SPECIAL
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        ids = [b + N_SPECIAL for b in text.encode("utf-8")]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        bs = bytes(i - N_SPECIAL for i in ids if i >= N_SPECIAL)
+        return bs.decode("utf-8", errors="replace")
+
+
+class BPETokenizer:
+    """Greedy byte-pair encoding trained in-memory."""
+
+    def __init__(self, vocab_size: int = 512):
+        assert vocab_size > 256 + N_SPECIAL
+        self.target_vocab = vocab_size
+        self.merges: List[Tuple[int, int]] = []
+        self.merge_ranks: Dict[Tuple[int, int], int] = {}
+        self._next_id = 256 + N_SPECIAL
+        self.pair_to_id: Dict[Tuple[int, int], int] = {}
+
+    @property
+    def vocab_size(self) -> int:
+        return self._next_id
+
+    def train(self, corpus: Iterable[str], max_merges: int | None = None):
+        seqs = [
+            [b + N_SPECIAL for b in text.encode("utf-8")] for text in corpus
+        ]
+        n_merges = (max_merges if max_merges is not None
+                    else self.target_vocab - (256 + N_SPECIAL))
+        for _ in range(n_merges):
+            counts: Counter = Counter()
+            for s in seqs:
+                counts.update(zip(s, s[1:]))
+            if not counts:
+                break
+            pair, freq = counts.most_common(1)[0]
+            if freq < 2:
+                break
+            new_id = self._next_id
+            self._next_id += 1
+            self.merges.append(pair)
+            self.merge_ranks[pair] = len(self.merges) - 1
+            self.pair_to_id[pair] = new_id
+            seqs = [self._merge(s, pair, new_id) for s in seqs]
+        return self
+
+    @staticmethod
+    def _merge(s: List[int], pair: Tuple[int, int], new_id: int) -> List[int]:
+        out, i = [], 0
+        while i < len(s):
+            if i + 1 < len(s) and (s[i], s[i + 1]) == pair:
+                out.append(new_id)
+                i += 2
+            else:
+                out.append(s[i])
+                i += 1
+        return out
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        s = [b + N_SPECIAL for b in text.encode("utf-8")]
+        while len(s) >= 2:
+            pairs = set(zip(s, s[1:]))
+            ranked = [(self.merge_ranks[p], p) for p in pairs if p in self.merge_ranks]
+            if not ranked:
+                break
+            _, best = min(ranked)
+            s = self._merge(s, best, self.pair_to_id[best])
+        if bos:
+            s = [BOS] + s
+        if eos:
+            s = s + [EOS]
+        return s
+
+    def decode(self, ids: Sequence[int]) -> str:
+        def expand(i: int) -> bytes:
+            if i < N_SPECIAL:
+                return b""
+            if i < 256 + N_SPECIAL:
+                return bytes([i - N_SPECIAL])
+            pair = self.merges[i - 256 - N_SPECIAL]
+            return expand(pair[0]) + expand(pair[1])
+
+        return b"".join(expand(i) for i in ids).decode("utf-8", errors="replace")

@@ -1,0 +1,13 @@
+from .sharding import (
+    ShardingRules,
+    constrain,
+    current_rules,
+    make_rules,
+    param_shardings,
+    use_rules,
+)
+
+__all__ = [
+    "ShardingRules", "constrain", "current_rules", "make_rules",
+    "param_shardings", "use_rules",
+]

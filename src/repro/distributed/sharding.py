@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules.
+
+Model code never mentions mesh axes.  It calls ``constrain(x, "act_btd")``
+with a *logical* name; the active :class:`ShardingRules` (installed with
+``use_rules``) maps logical names to ``PartitionSpec``s for the current mesh.
+Outside any ``use_rules`` context (unit tests, single-device smoke runs)
+``constrain`` is the identity, so the substrate is mesh-agnostic.
+
+Axis conventions (see launch/mesh.py):
+  data axes:  ("data",) single-pod, ("pod", "data") multi-pod  — batch dim
+  model axis: ("model",)                                        — tensor dim
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_local = threading.local()
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: Dict[str, P]
+
+    def spec(self, name: str) -> P:
+        if name not in self.rules:
+            raise KeyError(f"no sharding rule for logical name {name!r}")
+        return self.rules[name]
+
+    def sharding(self, name: str) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(name))
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_local, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = current_rules()
+    _local.rules = rules
+    try:
+        yield
+    finally:
+        _local.rules = prev
+
+
+def constrain(x, name: str):
+    """Apply a sharding constraint if rules are active; identity otherwise."""
+    r = current_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(name))
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    seq_shard_cache: bool = True,
+    seq_parallel_acts: bool = False,
+    shard_experts: bool = True,
+    fsdp_params: bool = False,
+    batch_shardable: bool = True,
+) -> ShardingRules:
+    """Build the logical→physical rule table for ``mesh``.
+
+    ``dp`` is the (pod, data) super-axis on multi-pod meshes, plain "data"
+    on single-pod.  ``tp`` is the "model" axis.
+
+    seq_shard_cache:    shard KV caches over sequence on the model axis
+                        (flash-decoding style; XLA inserts the softmax
+                        all-reduces).  Without it, long caches replicate
+                        over the model axis and blow HBM.
+    seq_parallel_acts:  Megatron sequence parallelism — shard inter-block
+                        activations over seq on the model axis.
+    fsdp_params:        additionally shard "replicated" param dims over the
+                        data axis (ZeRO-3 style) — used by hillclimbs.
+    """
+    axes = mesh.axis_names
+    dp: Tuple[str, ...] = tuple(a for a in axes if a in ("pod", "data"))
+    dp_axes = dp
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in axes else None
+    fs = dp if fsdp_params else None  # optional ZeRO axis for param dim 0
+    # long-context single-sequence shapes (long_500k: B=1) cannot shard the
+    # batch dim; the KV cache then sequence-shards over the ENTIRE mesh
+    # (ring-attention-style) and activations replicate over data
+    seq_all = (tuple(dp_axes) + ("model",)) if tp else dp
+    if not batch_shardable:
+        dp = None
+
+    rules: Dict[str, P] = {
+        # ---- activations -------------------------------------------------
+        "act_btd": P(dp, "model" if seq_parallel_acts else None, None),
+        "act_btd_tp": P(dp, None, tp),        # used around vocab matmuls
+        "logits": P(dp, None, tp),            # [B, T, V] vocab-sharded
+        # heads dim deliberately unsharded here: several archs have head
+        # counts not divisible by the model axis; XLA propagates the head
+        # sharding from the weight matrices where it divides.
+        "act_bthd": P(dp, None, None, None),  # [B, T, heads, hd]
+        # ---- embeddings / head -------------------------------------------
+        "embed_vd": P(tp, fs),                # [V, D] vocab-sharded
+        "head_dv": P(fs, tp),                 # [D, V]
+        # ---- dense attention params ---------------------------------------
+        "attn_q": P(fs, tp),                  # [D, nh*hd]
+        "attn_kv": P(fs, tp),                 # [D, nkv*hd]
+        "attn_o": P(tp, fs),                  # [nh*hd, D]
+        "attn_bias": P(tp),
+        # ---- mlp ----------------------------------------------------------
+        "mlp_in": P(fs, tp),                  # [D, F]
+        "mlp_out": P(tp, fs),                 # [F, D]
+        # ---- moe ----------------------------------------------------------
+        "router": P(fs, None),                # [D, E] tiny, replicated
+        "moe_in": P(tp if shard_experts else None, fs, None),   # [E, D, F]
+        "moe_out": P(tp if shard_experts else None, None, fs),  # [E, F, D]
+        "moe_buf": P(tp if shard_experts else None, None, None),  # [E, C, D]
+        # ---- ssm (small per-channel params; shard inner dim) ---------------
+        "ssm_in": P(fs, tp),                  # [D, d_inner-ish]
+        "ssm_out": P(tp, fs),                 # [d_inner, D]
+        "ssm_vec": P(tp),                     # per-inner-channel vectors
+        # ---- caches (UNstacked; scan groups add "*" for a leading None) ----
+        # [B, nkv, S, hd]: batch over dp; seq over model (flash-decoding:
+        # XLA inserts the softmax-stat all-reduces across the model axis)
+        "kv_cache": (
+            P(dp, None, tp if seq_shard_cache else None, None)
+            if batch_shardable
+            else P(None, None, seq_all if seq_shard_cache else None, None)
+        ),
+        "kv_xmem": P(dp, None, None, None),   # [B, M, nkv, hd] cross-attn KV
+        "ssm_small": P(dp),                   # small recurrent tensors [B,...]
+        "ssm_state": P(dp, None, None, None), # [B, nh, hd, state]
+        "mlstm_C": P(dp, None, None, None),   # [B, nh, hd, hd]
+        # ---- per-layer scalars/norms ---------------------------------------
+        "norm": P(None),
+        "replicated": P(),
+        # ---- batch-only tensors --------------------------------------------
+        "tokens": P(dp, None),
+        "batch_vec": P(dp),
+        "memory_bmd": P(dp, None, None),      # frontend embeddings [B, M, D]
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def spec_for_name(rules: ShardingRules, name: str) -> P:
+    """Logical name → PartitionSpec.  A leading ``*`` marks a layer-stacked
+    leaf (scan groups): its spec gets a leading unsharded repeat dim."""
+    if name.startswith("*"):
+        base = rules.spec(name[1:])
+        return P(None, *base)
+    return rules.spec(name)
+
+
+def param_shardings(rules: ShardingRules, param_specs) -> Dict:
+    """Map a pytree of logical names (str) to NamedShardings."""
+    return jax.tree.map(
+        lambda name: NamedSharding(rules.mesh, spec_for_name(rules, name)),
+        param_specs,
+        is_leaf=lambda x: isinstance(x, str),
+    )

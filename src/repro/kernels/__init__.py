@@ -1,0 +1,12 @@
+from .ops import attention_op, backend_kind
+from .prefill_attention import prefill_attention
+from .ref import attention_ref, mlstm_chunkwise_ref
+from .verify_attention import verify_attention
+
+__all__ = [
+    "attention_op", "backend_kind", "prefill_attention", "attention_ref",
+    "mlstm_chunkwise_ref", "verify_attention",
+]
+from .mlstm_chunk import mlstm_chunk_kernel
+
+__all__.append("mlstm_chunk_kernel")

@@ -1,0 +1,169 @@
+"""Chunkwise-parallel mLSTM — Pallas TPU kernel (beyond-paper, §Perf H2).
+
+The mLSTM matrix memory C ∈ [hd, hd] makes the naive per-token recurrence
+HBM-bound: C is read+written every token.  This kernel walks the sequence
+chunk-by-chunk with C/n/m resident in VMEM scratch for the ENTIRE sweep —
+the state touches HBM exactly twice (initial load, final store) per
+(batch, head), and the intra-chunk math is three MXU matmuls
+([L,hd]x[hd,hd], [L,hd]x[hd,L], [L,L]x[L,hd]).
+
+Grid = (B, nh, T/L), chunk axis innermost (sequential on a core).  With
+L = 64, hd = 512 the VMEM working set is C (1 MB f32) + chunk blocks
+(~0.5 MB) — far under the ~16 MB v5e budget.
+
+Exactness: the chunkwise algebra equals the per-token recurrence (the
+stabilizer-invariance argument in models/ssm.py); validated in interpret
+mode against kernels.ref.mlstm_chunkwise_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref,      # [1, 1, L, hd]
+    ig_ref, fg_ref,           # [1, 1, L, 1]
+    c0_ref, n0_ref, m0_ref,   # [1, 1, hd, hd] / [1, 1, hd, 1] / [1, 1, 1, 1]
+    h_ref,                    # out: [1, 1, L, hd]
+    cN_ref, nN_ref, mN_ref,   # out: final state
+    C_acc, n_acc, m_acc,      # VMEM scratch
+    *,
+    n_chunks: int,
+    L: int,
+):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        C_acc[...] = c0_ref[0, 0].astype(F32)
+        n_acc[...] = n0_ref[0, 0].astype(F32)
+        m_acc[...] = m0_ref[0, 0].astype(F32)
+
+    q = q_ref[0, 0].astype(F32)                   # [L, hd] (pre-scaled)
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    ig = ig_ref[0, 0, :, 0].astype(F32)           # [L]
+    fg = fg_ref[0, 0, :, 0].astype(F32)
+
+    m0 = m_acc[0, 0]
+    lf = -jax.nn.softplus(-fg)
+    b = jnp.cumsum(lf)                             # [L]
+    D = b[:, None] - b[None, :] + ig[None, :]      # [L, L] (t, s)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    D = jnp.where(tri, D, NEG)
+    m_intra = D.max(axis=1)
+    m_hat = jnp.maximum(b + m0, m_intra)           # [L]
+    inter = jnp.exp(b + m0 - m_hat)                # [L]
+    S = jnp.exp(D - m_hat[:, None])                # [L, L]
+
+    C = C_acc[...]                                 # [hd(v), hd(k)]
+    n = n_acc[...]                                 # [hd, 1]
+    sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)        # [L, L]
+    w = S * sc
+    num = inter[:, None] * jax.lax.dot_general(
+        q, C, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    ) + jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)          # [L, hd]
+    nvec = inter[:, None] * n[:, 0][None, :] + jax.lax.dot_general(
+        S, k, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )                                                            # [L, hd]
+    dot = jnp.abs(jnp.sum(nvec * q, axis=1))
+    h = num / jnp.maximum(dot, jnp.exp(-m_hat))[:, None]
+    h_ref[0, 0, :, :] = h.astype(h_ref.dtype)
+
+    # ---- state update (stays in VMEM) -------------------------------------
+    BL = b[L - 1]
+    m_new = jnp.maximum(BL + m0, (BL - b + ig).max())
+    cdec = jnp.exp(BL + m0 - m_new)
+    src = jnp.exp(BL - b + ig - m_new)                          # [L]
+    C_acc[...] = cdec * C + jax.lax.dot_general(
+        v * src[:, None], k, (((0,), (0,)), ((), ())),
+        preferred_element_type=F32,
+    )                                                            # [hd_v, hd_k]
+    n_acc[...] = cdec * n + jax.lax.dot_general(
+        k, src[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=F32,
+    )
+    m_acc[0, 0] = m_new
+
+    @pl.when(t == n_chunks - 1)
+    def _finish():
+        cN_ref[0, 0, :, :] = C_acc[...].astype(cN_ref.dtype)
+        nN_ref[0, 0, :, :] = n_acc[...].astype(nN_ref.dtype)
+        mN_ref[0, 0, :, :] = m_acc[...].astype(mN_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk_kernel(
+    q, k, v,                   # [B, T, nh, hd]  (q pre-scaled by 1/sqrt(hd))
+    ig, fg,                    # [B, T, nh]
+    C0, n0, m0,                # [B, nh, hd, hd] / [B, nh, hd] / [B, nh]
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    B, T, nh, hd = q.shape
+    L = min(chunk, T)
+    pad = (-T) % L
+    qt = jnp.moveaxis(q, 1, 2)                    # [B, nh, T, hd]
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    igt = jnp.moveaxis(ig, 1, 2)[..., None]       # [B, nh, T, 1]
+    fgt = jnp.moveaxis(fg, 1, 2)[..., None]
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # padded steps: forget=1 (lf=0 ⇐ fg=+inf), input=-inf ⇒ state frozen
+        igt = jnp.pad(igt, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                      constant_values=NEG)
+        fgt = jnp.pad(fgt, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                      constant_values=1e9)
+    Tp = T + pad
+    n_chunks = Tp // L
+    # m is carried as [B, nh, 1, 1]; n as [B, nh, hd, 1]
+    m4 = m0[..., None, None]
+    n4 = n0[..., None]
+
+    grid = (B, nh, n_chunks)
+    bspec = lambda shape: pl.BlockSpec(shape, lambda b, h, t: (b, h, t, 0))
+    state_spec = lambda s2, s3: pl.BlockSpec(
+        (1, 1, s2, s3), lambda b, h, t: (b, h, 0, 0)
+    )
+    h, cN, nN, mN = pl.pallas_call(
+        functools.partial(_mlstm_kernel, n_chunks=n_chunks, L=L),
+        grid=grid,
+        in_specs=[
+            bspec((1, 1, L, hd)), bspec((1, 1, L, hd)), bspec((1, 1, L, hd)),
+            bspec((1, 1, L, 1)), bspec((1, 1, L, 1)),
+            state_spec(hd, hd), state_spec(hd, 1), state_spec(1, 1),
+        ],
+        out_specs=[
+            bspec((1, 1, L, hd)),
+            state_spec(hd, hd), state_spec(hd, 1), state_spec(1, 1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, Tp, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, hd), F32),
+            jax.ShapeDtypeStruct((B, nh, hd, 1), F32),
+            jax.ShapeDtypeStruct((B, nh, 1, 1), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), F32),
+            pltpu.VMEM((hd, 1), F32),
+            pltpu.VMEM((1, 1), F32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, igt, fgt, C0, n4, m4)
+    h = jnp.moveaxis(h[:, :, :T, :], 2, 1)        # [B, T, nh, hd]
+    return h, (cN, nN[..., 0], mN[..., 0, 0])

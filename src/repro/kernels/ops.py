@@ -1,0 +1,48 @@
+"""Jit'd dispatch wrappers for the kernels.
+
+``attention_op`` routes to the Pallas kernels on TPU (or in interpret mode
+for CPU validation) and to the pure-jnp oracle otherwise.  The model's
+reference attention (models.layers.attend) remains the default inside the
+lowered dry-run graphs; these ops are the TPU-hot-path implementations the
+launcher selects with ``--attn-impl pallas``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .prefill_attention import prefill_attention
+from .ref import attention_ref
+from .verify_attention import verify_attention
+
+VERIFY_MAX_T = 32     # below this query length, the decode-shaped kernel wins
+
+
+def backend_kind() -> str:
+    return jax.default_backend()
+
+
+def attention_op(
+    q, k, v, offset, valid_len,
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    impl: str = "auto",          # auto | pallas | interpret | reference
+):
+    """[B,T,nh,hd] x [B,S,nkv,hd] chunked-cache attention."""
+    if impl == "reference" or (impl == "auto" and backend_kind() != "tpu"):
+        return attention_ref(
+            q, k, v, offset=offset, valid_len=valid_len,
+            window=window, causal=causal,
+        )
+    interpret = impl == "interpret" or backend_kind() != "tpu"
+    T = q.shape[1]
+    if causal and T <= VERIFY_MAX_T:
+        return verify_attention(
+            q, k, v, offset, valid_len, window=window, interpret=interpret
+        )
+    return prefill_attention(
+        q, k, v, offset, valid_len,
+        window=window, causal=causal, interpret=interpret,
+    )

@@ -1,0 +1,161 @@
+"""Chunked-prefill flash attention — Pallas TPU kernel.
+
+The HAT cloud's hot loop (§3.3): a prompt *chunk* of T queries attends to
+the KV cache of everything processed so far (S slots; positions ≥ valid_len
+hold garbage and are masked).  GQA and sliding windows supported.
+
+TPU mapping (HARDWARE ADAPTATION — re-derived for the TPU memory hierarchy,
+not a FlashAttention/CUDA port): grid = (B, nh, T/bq, S/bkv) with the
+KV-tile axis innermost, so each step keeps one (bq × hd) query tile resident
+in VMEM and streams KV tiles HBM→VMEM while carrying online-softmax
+statistics in VMEM scratch.  Default 128×128 blocks put the q·kᵀ and p·v
+contractions on MXU-aligned tiles; hd rides along unblocked (pad to a
+multiple of 128 for peak MXU utilization on real hardware).  VMEM working
+set per step ≈ (bq + 2·bkv)·hd + bq·bkv floats ≈ 0.2–0.5 MB at defaults —
+far under the ~16 MB v5e VMEM, leaving room for double buffering.
+
+Validated on CPU with ``interpret=True`` against ref.attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+
+
+def _prefill_kernel(
+    off_ref,                  # (1,) int32: absolute position of q[0]
+    vlen_ref,                 # (1,) int32: number of valid cache slots
+    q_ref,                    # [1, 1, bq, hd]
+    k_ref,                    # [1, 1, bkv, hd]
+    v_ref,                    # [1, 1, bkv, hd]
+    o_ref,                    # [1, 1, bq, hd]
+    acc_ref,                  # VMEM scratch [bq, hd] f32
+    m_ref,                    # VMEM scratch [bq, 1] f32
+    l_ref,                    # VMEM scratch [bq, 1] f32
+    *,
+    bq: int,
+    bkv: int,
+    n_kv_tiles: int,
+    window: Optional[int],
+    causal: bool,
+):
+    qt = pl.program_id(2)
+    st = pl.program_id(3)
+
+    @pl.when(st == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(F32)                       # [bq, hd]
+    k = k_ref[0, 0].astype(F32)                       # [bkv, hd]
+    v = v_ref[0, 0].astype(F32)
+    hd = q.shape[-1]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    ) * (1.0 / math.sqrt(hd))                          # [bq, bkv]
+
+    off = off_ref[0]
+    q_pos = off + qt * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = st * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = k_pos < vlen_ref[0]
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                               # [bq]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)                    # rescale old stats
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_ref[:, 0] = m_cur
+
+    @pl.when(st == n_kv_tiles - 1)
+    def _finish():
+        # fully-masked rows (q tiles beyond valid data) have l == 0 -> emit 0
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "causal", "bq", "bkv", "interpret")
+)
+def prefill_attention(
+    q: jax.Array,              # [B, T, nh, hd]
+    k: jax.Array,              # [B, S, nkv, hd]
+    v: jax.Array,
+    offset,                    # scalar int32: absolute position of q[0]
+    valid_len,                 # scalar int32: valid cache slots (rest masked)
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    bq: int = DEFAULT_BQ,
+    bkv: int = DEFAULT_BKV,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+
+    bq = max(8, min(bq, T))
+    bkv = min(bkv, S)
+    t_pad = (-T) % bq
+    s_pad = (-S) % bkv
+    qt = jnp.moveaxis(q, 1, 2)                          # [B, nh, T, hd]
+    kt = jnp.moveaxis(k, 1, 2)                          # [B, nkv, S, hd]
+    vt = jnp.moveaxis(v, 1, 2)
+    if t_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    if s_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    Tp, Sp = T + t_pad, S + s_pad
+    n_kv_tiles = Sp // bkv
+
+    out = pl.pallas_call(
+        functools.partial(
+            _prefill_kernel,
+            bq=bq, bkv=bkv, n_kv_tiles=n_kv_tiles,
+            window=window, causal=causal,
+        ),
+        grid=(B, nh, Tp // bq, n_kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i, j: (0,)),
+            pl.BlockSpec((1,), lambda b, h, i, j: (0,)),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), F32),
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, 1), F32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(offset, jnp.int32).reshape(1),
+        jnp.asarray(valid_len, jnp.int32).reshape(1),
+        qt, kt, vt,
+    )
+    return jnp.moveaxis(out[:, :, :T, :], 2, 1)

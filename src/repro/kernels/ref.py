@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert
+``assert_allclose(kernel(interpret=True), ref)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,              # [B, T, nh, hd]
+    k: jax.Array,              # [B, S, nkv, hd]
+    v: jax.Array,              # [B, S, nkv, hd]
+    *,
+    offset: int = 0,           # absolute position of q[0]
+    valid_len: Optional[int] = None,   # cache entries < valid_len are real
+    window: Optional[int] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Oracle for chunked-prefill and speculative-verification attention.
+
+    q positions are offset..offset+T-1; k positions are 0..S-1.  Entries at
+    k positions >= valid_len (defaults to offset+T) are masked garbage.
+    """
+    B, T, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    valid_len = offset + T if valid_len is None else valid_len
+
+    qg = q.reshape(B, T, nkv, g, hd).astype(F32)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k.astype(F32))
+    scores /= math.sqrt(hd)
+
+    qp = offset + jnp.arange(T)
+    kp = jnp.arange(S)
+    mask = kp[None, :] < valid_len
+    if causal:
+        mask = mask & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        mask = mask & (kp[None, :] > qp[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(F32))
+    return out.reshape(B, T, nh, hd).astype(q.dtype)
+
+
+def mlstm_chunkwise_ref(q, k, v, ig, fg, *, initial=None):
+    """Oracle for the chunkwise-parallel mLSTM kernel: plain recurrence.
+
+    q,k,v: [B, T, nh, hd] (q pre-scaled by 1/sqrt(hd)); ig/fg: [B, T, nh]
+    raw gate pre-activations.  Returns ([B, T, nh, hd], final_state)."""
+    B, T, nh, hd = q.shape
+    if initial is None:
+        C = jnp.zeros((B, nh, hd, hd), F32)
+        n = jnp.zeros((B, nh, hd), F32)
+        m = jnp.full((B, nh), -jnp.inf, F32)
+    else:
+        C, n, m = initial
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)[..., None]
+        f_p = jnp.exp(log_f + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (vt[..., None] * kt[..., None, :])
+        n = f_p * n + i_p * kt
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new))
+        h = jnp.einsum("bhvd,bhd->bhv", C, qt) / denom[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(F32), 1, 0) for a in (q, k, v, ig, fg)
+    )
+    (C, n, m), ys = jax.lax.scan(step, (C, n, m), xs)
+    return jnp.moveaxis(ys, 0, 1), (C, n, m)

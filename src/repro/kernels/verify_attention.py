@@ -1,0 +1,143 @@
+"""Speculative-verification attention — Pallas TPU kernel (decode regime).
+
+HAT's verification step (§3.4): k+1 draft-token queries (k ≤ ~16) attend to
+a long KV cache (S up to 512k).  The compute is memory-bound: arithmetic
+intensity ≈ 2·T flops/byte with T tiny, so the kernel is shaped around
+streaming the cache, not around the MXU:
+
+  grid = (B, nh, S/bkv); the whole (T × hd) query block stays pinned in
+  VMEM for the entire sweep; KV tiles stream with large blocks (default
+  bkv = 512) to maximize HBM burst efficiency; online-softmax stats live in
+  VMEM scratch.  The last tile writes the normalized output.
+
+The q tile is padded to 8 sublanes; with T=8, hd=128, bkv=512 the VMEM
+working set is ≈ 0.6 MB.  This kernel is also the ``long_500k`` decode
+path for the sub-quadratic archs' global layers.
+
+Validated on CPU with ``interpret=True`` against ref.attention_ref
+(causal masking over absolute positions, garbage slots masked).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+DEFAULT_BKV = 512
+
+
+def _verify_kernel(
+    off_ref, vlen_ref,
+    q_ref,                    # [1, 1, Tp, hd]
+    k_ref,                    # [1, 1, bkv, hd]
+    v_ref,                    # [1, 1, bkv, hd]
+    o_ref,                    # [1, 1, Tp, hd]
+    acc_ref, m_ref, l_ref,    # VMEM scratch
+    *,
+    bkv: int,
+    n_kv_tiles: int,
+    window: Optional[int],
+):
+    st = pl.program_id(2)
+
+    @pl.when(st == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(F32)                        # [Tp, hd]
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    Tp, hd = q.shape
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32
+    ) * (1.0 / math.sqrt(hd))                           # [Tp, bkv]
+
+    q_pos = off_ref[0] + jax.lax.broadcasted_iota(jnp.int32, (Tp, bkv), 0)
+    k_pos = st * bkv + jax.lax.broadcasted_iota(jnp.int32, (Tp, bkv), 1)
+    mask = (k_pos < vlen_ref[0]) & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_ref[:, 0] = m_cur
+
+    @pl.when(st == n_kv_tiles - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bkv", "interpret"))
+def verify_attention(
+    q: jax.Array,              # [B, T, nh, hd]  (T = draft length + 1, small)
+    k: jax.Array,              # [B, S, nkv, hd]
+    v: jax.Array,
+    offset,                    # scalar: absolute position of q[0]
+    valid_len,                 # scalar: valid cache slots
+    *,
+    window: Optional[int] = None,
+    bkv: int = DEFAULT_BKV,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, nh, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+
+    Tp = max(8, T + ((-T) % 8))               # pad queries to 8 sublanes
+    bkv = min(bkv, S)
+    s_pad = (-S) % bkv
+    qt = jnp.moveaxis(q, 1, 2)
+    if Tp != T:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    if s_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    n_kv_tiles = (S + s_pad) // bkv
+
+    out = pl.pallas_call(
+        functools.partial(
+            _verify_kernel, bkv=bkv, n_kv_tiles=n_kv_tiles, window=window
+        ),
+        grid=(B, nh, n_kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (0,)),
+            pl.BlockSpec((1,), lambda b, h, j: (0,)),
+            pl.BlockSpec((1, 1, Tp, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Tp, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Tp, hd), F32),
+            pltpu.VMEM((Tp, 1), F32),
+            pltpu.VMEM((Tp, 1), F32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(offset, jnp.int32).reshape(1),
+        jnp.asarray(valid_len, jnp.int32).reshape(1),
+        qt, kt, vt,
+    )
+    return jnp.moveaxis(out[:, :, :T, :], 2, 1)

@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place that forces 512
+# placeholder devices — tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) this lowers AND compiles the
+appropriate step with ShapeDtypeStruct inputs (zero allocation), captures
+``memory_analysis()`` / ``cost_analysis()`` / the optimized HLO's collective
+bytes, and writes one JSON record per combination under ``reports/dryrun``.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Failures (sharding mismatch, unsupported collective) are bugs; the record
+stores the exception instead of crashing the sweep.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _mem_fields(mem) -> dict:
+    if mem is None:
+        return {}
+    fields = [
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes", "host_argument_size_in_bytes",
+        "host_output_size_in_bytes", "host_temp_size_in_bytes",
+    ]
+    out = {}
+    for f in fields:
+        v = getattr(mem, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            kind: Optional[str] = None, out_dir: str = "reports/dryrun",
+            overrides: Optional[dict] = None, save_hlo: bool = False,
+            tag: str = "") -> dict:
+    from ..configs import SHAPES, get_config, shape_applicable
+    from ..roofline.analysis import analyze
+    from .mesh import make_production_mesh
+    from .steps import build_step, lower_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": kind or shape.kind, "tag": tag, "ok": False,
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(skipped=True, reason=reason)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        t0 = time.time()
+        built = build_step(cfg, shape, mesh, kind=kind, **(overrides or {}))
+        lowered = lower_step(built, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        terms = analyze(
+            cfg=cfg, shape=shape, mesh_name=mesh_name, n_chips=n_chips,
+            cost=cost, hlo_text=hlo, kind=kind,
+        )
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_fields(mem),
+            cost={k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float))},
+            roofline=terms.to_dict(),
+            meta=built.meta,
+            hlo_bytes=len(hlo),
+        )
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                out_dir, f"{arch}.{shape_name}.{mesh_name}{tag}.hlo.txt"
+            ), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — sweep must survive
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    finally:
+        # each combination builds 256/512-way sharded constants in caches;
+        # drop them so the sweep's host memory stays bounded
+        jax.clear_caches()
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}.{shape_name}.{mesh_name}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    from ..configs import ASSIGNED, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--kind", default=None,
+                    help="override step kind (e.g. hat_verify)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_one(arch, shape, mp, kind=args.kind,
+                              out_dir=args.out, save_hlo=args.save_hlo,
+                              tag=args.tag)
+                status = ("SKIP " + rec.get("reason", "")) if rec.get("skipped") \
+                    else ("ok" if rec["ok"] else "FAIL " + rec.get("error", ""))
+                mesh_name = rec["mesh"]
+                print(f"[{time.time()-t0:7.1f}s] {arch:24s} {shape:12s} "
+                      f"{mesh_name:8s} {status}", flush=True)
+                results.append(rec)
+    n_ok = sum(r["ok"] for r in results)
+    n_skip = sum(bool(r.get("skipped")) for r in results)
+    print(f"\n{n_ok} ok / {n_skip} skipped / "
+          f"{len(results) - n_ok - n_skip} failed / {len(results)} total")
+
+
+if __name__ == "__main__":
+    main()

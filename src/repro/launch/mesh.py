@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then builds meshes.
+
+Target: TPU v5e.  Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the "pod" axis
+carries data parallelism across the DCN/ICI boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1, model_axis: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    n = min(n_devices, len(jax.devices()))
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+# v5e hardware constants (roofline; see repro.roofline)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,74 @@
+"""Serving launcher: the HAT device-cloud system end to end.
+
+  PYTHONPATH=src python -m repro.launch.serve --framework hat --rate 6 --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --framework u-shape --workload cnn_dm
+
+Runs the 30-device fleet simulator (all algorithmic components real; delay
+models calibrated to the paper's testbed — DESIGN.md §3).  ``--real`` swaps
+the statistical backend for actual JAX models (reduced config): slower but
+every token is really drafted/verified.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--framework", default="hat",
+                    choices=["hat", "u-shape", "u-sarathi", "u-medusa"])
+    ap.add_argument("--workload", default="specbench", choices=["specbench", "cnn_dm"])
+    ap.add_argument("--rate", type=float, default=6.0)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--pipeline-len", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=30)
+    ap.add_argument("--real", action="store_true",
+                    help="real JAX models (reduced config) instead of the "
+                         "statistical backend")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from ..data import CNN_DM, SPECBENCH, sample_workload
+    from ..serving import run_fleet
+
+    spec = SPECBENCH if args.workload == "specbench" else CNN_DM
+    hidden = (4096 if args.workload == "specbench" else 5120) * 2
+    rng = np.random.default_rng(args.seed)
+
+    backend = None
+    if args.real:
+        import jax
+
+        from ..configs import get_config
+        from ..core import init_adapter, split_model
+        from ..models import Model
+        from ..serving import RealBackend, init_medusa
+
+        cfg = get_config(args.arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        split = split_model(cfg, params)
+        adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+        medusa, _ = init_medusa(cfg, jax.random.PRNGKey(8))
+        backend = RealBackend(split, adapter_params=adapter,
+                              medusa_params=medusa, max_len=512)
+        hidden = cfg.d_model * 2
+
+    reqs = sample_workload(
+        spec, rng, n_requests=args.requests, rate_per_s=args.rate,
+        n_devices=args.devices, with_tokens=args.real,
+    )
+    metrics = run_fleet(
+        args.framework, reqs, rng=np.random.default_rng(args.seed + 1),
+        pipeline_len=args.pipeline_len, hidden_bytes=hidden,
+        backend=backend, n_devices=args.devices,
+    )
+    print(json.dumps(metrics.summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,337 @@
+"""Step builders for the dry-run and the launchers.
+
+For every (arch, input shape) this module builds:
+  * the step function (train / prefill / decode / hat_verify),
+  * abstract inputs (``input_specs`` — ShapeDtypeStructs, no allocation),
+  * in/out shardings on the given mesh.
+
+``train_step`` is a full LM step: loss (+ MoE aux), grads, optimizer update
+(AdamW below 10B params, Adafactor at/above — DESIGN.md §5), remat scan.
+``prefill_step``/``decode_step`` run the full model with a KV cache.
+``hat_verify_step`` is the paper's cloud step: the middle submodel advances
+k+1 draft hidden states against the cache (hidden states in/out — exactly
+what crosses the device-cloud wire).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..core.split import split_model
+from ..distributed.sharding import (
+    ShardingRules,
+    make_rules,
+    param_shardings,
+    spec_for_name,
+    use_rules,
+)
+from ..models.model import Model
+from ..training.optim import Adafactor, AdamW
+from ..training.trainer import lm_loss
+
+PyTree = Any
+ADAFACTOR_THRESHOLD = 10e9          # params
+HAT_VERIFY_T = 8                    # draft length + 1 in the verify step
+
+
+@dataclass
+class BuiltStep:
+    name: str
+    fn: Callable                     # jit-able python callable
+    abstract_args: Tuple             # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any               # None -> let XLA choose
+    donate_argnums: Tuple[int, ...]
+    rules: ShardingRules
+    meta: Dict
+
+
+def _named(rules: ShardingRules, spec: P) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)
+
+
+def _tokens_sharding(rules):
+    return _named(rules, rules.spec("tokens"))
+
+
+def _cache_shardings(model: Model, rules: ShardingRules, abstract_cache):
+    spec_tree = model.cache_spec()
+    # cache_spec mirrors init_cache(None, ...); align structures
+    return jax.tree.map(
+        lambda name: _named(rules, spec_for_name(rules, name)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, str),
+    )
+
+
+def _opt_shardings(rules: ShardingRules, param_spec, abstract_opt_state):
+    """Derive optimizer-state shardings from the param spec tree.
+
+    AdamW moments mirror params.  Adafactor's factored vr/vc drop the last /
+    second-to-last axis of the param spec.  Scalars replicate."""
+
+    def param_spec_at(path):
+        node = param_spec
+        for p in path:
+            key = p.key if hasattr(p, "key") else p.idx
+            node = node[key]
+        return node
+
+    def shard_for(path, leaf):
+        keys = [p.key if hasattr(p, "key") else p.idx for p in path]
+        if keys[-1] == "step":
+            return _named(rules, P())
+        if keys[0] in ("mu", "nu"):
+            name = param_spec_at(path[1:])
+            return _named(rules, spec_for_name(rules, name))
+        if keys[0] == "f":                      # adafactor
+            leaf_kind = keys[-1]
+            name = param_spec_at(path[1:-1])
+            base = spec_for_name(rules, name)
+            if leaf_kind == "v":
+                return _named(rules, base)
+            if leaf_kind == "vr":               # drop last axis
+                return _named(rules, P(*base[:-1]))
+            if leaf_kind == "vc":               # drop second-to-last axis
+                return _named(rules, P(*(tuple(base[:-2]) + (base[-1],))))
+        if keys[0] == "m":                      # sgd momentum
+            name = param_spec_at(path[1:])
+            return _named(rules, spec_for_name(rules, name))
+        return _named(rules, P())
+
+    return jax.tree_util.tree_map_with_path(shard_for, abstract_opt_state)
+
+
+def make_optimizer(cfg: ModelConfig):
+    if cfg.param_count() >= ADAFACTOR_THRESHOLD:
+        return Adafactor(lr=1e-3)
+    return AdamW(lr=1e-3, weight_decay=0.0)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    if cfg.frontend == "vision":
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), dtype
+        )
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), dtype
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_step(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh,
+    *,
+    kind: Optional[str] = None,       # default: from shape.kind
+    dtype=jnp.bfloat16,
+    fsdp: Optional[bool] = None,
+    seq_shard_cache: bool = True,
+    seq_parallel_acts: bool = False,
+    remat: bool = True,
+    microbatch: Optional[int] = None, # grad-accumulation factor (train)
+    rules: Optional[ShardingRules] = None,
+) -> BuiltStep:
+    kind = kind or shape.kind
+    if fsdp is None:
+        # FSDP(ZeRO-3) param sharding pays off when grads exist; for
+        # inference it forces a full weight all-gather EVERY step (§Perf H3:
+        # 8.9 GB/chip/step on qwen2-72b decode -> 161x collective reduction
+        # from disabling it).  Exception: models whose tp-sharded weights
+        # exceed the HBM budget (kimi-1T, dbrx) must keep dp-sharded params
+        # even when serving (§Perf H1 iter 2).
+        tp = mesh.shape.get("model", 1) if hasattr(mesh.shape, "get") else 16
+        tp_resident_gb = cfg.param_count() * 2 / tp / 2**30
+        fsdp = kind == "train" or tp_resident_gb > 12.0
+    dp_total = 1
+    for a, n in zip(mesh.axis_names, mesh.devices.shape):
+        if a in ("pod", "data"):
+            dp_total *= n
+    batch_ok = shape.global_batch % dp_total == 0
+    rules = rules or make_rules(
+        mesh, fsdp_params=fsdp, seq_shard_cache=seq_shard_cache,
+        batch_shardable=batch_ok, seq_parallel_acts=seq_parallel_acts,
+    )
+    model = Model(cfg, dtype=dtype, remat=remat and kind == "train")
+    aparams = model.abstract_params()
+    pspec = model.param_spec()
+    pshard = param_shardings(rules, pspec)
+    ins = input_specs(cfg, shape, dtype)
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": kind}
+
+    if kind == "train":
+        optimizer = make_optimizer(cfg)
+        aopt = jax.eval_shape(optimizer.init, aparams)
+        oshard = _opt_shardings(rules, pspec, aopt)
+        batch_shardings = {
+            k: _named(rules, rules.spec("memory_bmd") if v.ndim == 3 else rules.spec("tokens"))
+            for k, v in ins.items()
+        }
+
+        def train_step(params, opt_state, batch):
+            with use_rules(rules):
+                def loss_fn(p, toks, memory):
+                    return lm_loss(model, p, toks, memory=memory)
+
+                if microbatch and microbatch > 1:
+                    # gradient accumulation: K sequential microbatches cut
+                    # peak activation memory ~K x at the same math
+                    K = microbatch
+                    B = batch["tokens"].shape[0]
+                    assert B % K == 0, (B, K)
+                    toks = batch["tokens"].reshape(K, B // K, *batch["tokens"].shape[1:])
+                    mem = batch.get("memory")
+                    mem_mb = (
+                        mem.reshape(K, B // K, *mem.shape[1:]) if mem is not None else None
+                    )
+
+                    def micro(acc, xs):
+                        t = xs[0]
+                        m_ = xs[1] if mem_mb is not None else None
+                        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, t, m_)
+                        acc_g, acc_l = acc
+                        return (
+                            jax.tree.map(lambda a, b: a + b, acc_g, g),
+                            acc_l + l,
+                        ), None
+
+                    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    xs = (toks, mem_mb) if mem_mb is not None else (toks,)
+                    (gsum, lsum), _ = jax.lax.scan(micro, (zero, jnp.zeros((), jnp.float32)), xs)
+                    grads = jax.tree.map(lambda g: (g / K).astype(jnp.float32), gsum)
+                    loss = lsum / K
+                else:
+                    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, batch["tokens"], batch.get("memory")
+                    )
+                updates, opt_state2 = optimizer.update(grads, opt_state, params)
+                params2 = jax.tree.map(lambda p, u: p + u, params, updates)
+                return params2, opt_state2, loss.astype(jnp.float32)
+
+        # audio enc-dec trains through the encoder: frames feed the encoder
+        if cfg.frontend == "audio":
+            def train_step(params, opt_state, batch):     # noqa: F811
+                with use_rules(rules):
+                    def loss_fn(p):
+                        memory = model.encode(p, batch["frames"])
+                        return lm_loss(model, p, batch["tokens"], memory=memory)
+
+                    (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+                    updates, opt_state2 = optimizer.update(grads, opt_state, params)
+                    params2 = jax.tree.map(lambda p, u: p + u, params, updates)
+                    return params2, opt_state2, metrics["loss"].astype(jnp.float32)
+
+        return BuiltStep(
+            name=f"{cfg.name}:{shape.name}:train",
+            fn=train_step,
+            abstract_args=(aparams, aopt, ins),
+            in_shardings=(pshard, oshard, batch_shardings),
+            out_shardings=None,
+            donate_argnums=(0, 1),
+            rules=rules,
+            meta={**meta, "optimizer": type(optimizer).__name__},
+        )
+
+    # ---- inference kinds ----------------------------------------------------
+    B = shape.global_batch
+    if kind == "hat_verify":
+        split = split_model(cfg, model.abstract_params(), dtype=dtype)
+        mid = split.middle_model
+        acache = jax.eval_shape(
+            lambda: mid.init_cache(None, B, shape.seq_len, dtype=dtype)
+        )
+        cshard = _cache_shardings(mid, rules, acache)
+        hidden = jax.ShapeDtypeStruct((B, HAT_VERIFY_T, cfg.d_model), dtype)
+        offsets = jax.ShapeDtypeStruct((B,), jnp.int32)
+        mid_pshard = param_shardings(rules, mid.param_spec())
+
+        def verify_step(mparams, cache, hidden, offsets):
+            with use_rules(rules):
+                deep, new_cache, _ = mid.apply(
+                    mparams, None, inputs_embeds=hidden, cache=cache,
+                    offset=offsets,
+                )
+                return deep, new_cache
+
+        return BuiltStep(
+            name=f"{cfg.name}:{shape.name}:hat_verify",
+            fn=verify_step,
+            abstract_args=(split.middle_model.abstract_params(), acache, hidden, offsets),
+            in_shardings=(
+                mid_pshard, cshard,
+                _named(rules, rules.spec("act_btd")), _named(rules, rules.spec("batch_vec")),
+            ),
+            out_shardings=None,
+            donate_argnums=(1,),
+            rules=rules,
+            meta={**meta, "verify_T": HAT_VERIFY_T},
+        )
+
+    # prefill / decode on the full model
+    cache_len = shape.seq_len
+    acache = jax.eval_shape(
+        lambda: model.init_cache(None, B, cache_len, dtype=dtype)
+    )
+    cshard = _cache_shardings(model, rules, acache)
+    extra = {k: v for k, v in ins.items() if k != "tokens"}
+    extra_shardings = {
+        k: _named(rules, rules.spec("memory_bmd")) for k in extra
+    }
+    offset_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def infer_step(params, cache, tokens, offset, extra):
+        with use_rules(rules):
+            memory = extra.get("memory")
+            if cfg.frontend == "audio" and "frames" in extra:
+                memory = model.encode(params, extra["frames"])
+            logits, new_cache, _ = model.apply(
+                params, tokens, cache=cache, offset=offset, memory=memory,
+            )
+            return logits[:, -1, :], new_cache
+
+    return BuiltStep(
+        name=f"{cfg.name}:{shape.name}:{kind}",
+        fn=infer_step,
+        abstract_args=(aparams, acache, ins["tokens"], offset_spec, extra),
+        in_shardings=(
+            pshard, cshard, _tokens_sharding(rules),
+            _named(rules, P()), extra_shardings,
+        ),
+        out_shardings=None,
+        donate_argnums=(1,),
+        rules=rules,
+        meta=meta,
+    )
+
+
+def lower_step(built: BuiltStep, mesh):
+    jitted = jax.jit(
+        built.fn,
+        in_shardings=built.in_shardings,
+        out_shardings=built.out_shardings,
+        donate_argnums=built.donate_argnums,
+    )
+    with mesh:
+        return jitted.lower(*built.abstract_args)

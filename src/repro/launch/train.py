@@ -1,0 +1,72 @@
+"""Training launcher.
+
+Two modes:
+  * ``--smoke``: really train a reduced config on the local device(s) with
+    synthetic data (what the CPU container can execute).
+  * default: build the production train step for the full config on the
+    requested mesh and AOT-compile it (execution requires the real pod; on
+    this container that is the dry-run path).
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        import jax
+        import numpy as np
+
+        from ..configs import get_config
+        from ..data import markov_corpus, token_batches
+        from ..models import Model
+        from ..training import AdamW, save_checkpoint, train_loop
+
+        cfg = get_config(args.arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        corpus = markov_corpus(rng, cfg.vocab_size, 50_000)
+        batches = token_batches(rng, corpus, args.batch, args.seq)
+        params, res = train_loop(
+            model, params, AdamW(lr=args.lr), batches,
+            max_steps=args.steps, log_every=max(args.steps // 10, 1),
+        )
+        print(f"done: {res.steps} steps in {res.wall_s:.1f}s, "
+              f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}")
+        if args.checkpoint:
+            save_checkpoint(args.checkpoint, params, step=res.steps)
+            print("checkpoint ->", args.checkpoint)
+        return
+
+    # production path: AOT-build the sharded step (see dryrun for sweeps)
+    from .dryrun import run_one
+
+    rec = run_one(args.arch, args.shape, args.multi_pod, out_dir="reports/dryrun")
+    if rec["ok"]:
+        rf = rec["roofline"]
+        print(f"compiled {args.arch}/{args.shape} on {rec['mesh']}: "
+              f"compute={rf['compute_s']*1e3:.1f}ms memory={rf['memory_s']*1e3:.1f}ms "
+              f"collective={rf['collective_s']*1e3:.1f}ms dominant={rf['dominant']}")
+    else:
+        raise SystemExit(f"FAILED: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .model import Model, group_layers
+from . import layers, ssm
+
+__all__ = ["Model", "group_layers", "layers", "ssm"]

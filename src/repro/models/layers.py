@@ -1,0 +1,404 @@
+"""Transformer primitives: RMSNorm, RoPE, GQA attention (full / sliding
+window / cross), SwiGLU MLP, and capacity-based MoE dispatch.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Each
+``init_*`` returns ``(params, spec)`` where ``spec`` mirrors ``params`` with
+logical sharding names (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+
+Params = Dict
+F32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# abstract-init mode: build ShapeDtypeStruct params instead of real arrays.
+# The multi-pod dry-run initializes trillion-parameter configs this way —
+# zero allocation, exact shapes/dtypes for .lower().
+# ---------------------------------------------------------------------------
+
+_ABSTRACT = False
+
+
+@contextlib.contextmanager
+def abstract_init():
+    global _ABSTRACT
+    prev, _ABSTRACT = _ABSTRACT, True
+    try:
+        yield
+    finally:
+        _ABSTRACT = prev
+
+
+def is_abstract() -> bool:
+    return _ABSTRACT
+
+
+def zeros(shape, dtype):
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def normal(key, shape, dtype, scale: float):
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return (jax.random.normal(key, shape, F32) * scale).astype(dtype)
+
+
+def const(fn, shape, dtype):
+    """Deterministic initializer (linspace, log-spaced decay rates, ...)."""
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    out = fn()
+    assert out.shape == tuple(shape), (out.shape, shape)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(F32))).astype(dt)
+
+
+def _rope_angles(pos: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    # pos: [...]; returns cos/sin of shape [..., head_dim//2]
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=F32) / half)
+    ang = pos.astype(F32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, hd]; pos: [T] or [B, T]."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(pos, hd, theta)          # [T, hd/2] or [B, T, hd/2]
+    if cos.ndim == 2:                                 # [T, hd/2] -> broadcast B
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]  # [B, T, 1, hd/2]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return normal(key, (d_in, d_out), dtype, scale)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attend(
+    q: jax.Array,            # [B, T, nh, hd]
+    k: jax.Array,            # [B, S, nkv, hd]  (or [B, nkv, S, hd], kv_layout="bnsh")
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,        # [T] or [B, T]
+    k_pos: jax.Array,        # [S] or [B, S]; entries < 0 are invalid slots
+    window: Optional[int] = None,
+    causal: bool = True,
+    kv_layout: str = "bsnh",
+) -> jax.Array:
+    """Reference GQA attention with position-based masking.
+
+    Works for training (T == S, no cache), chunked prefill (T = chunk,
+    S = cache + chunk), decode/verification (T = k draft tokens), sliding
+    windows (ring-buffer slots carry their absolute position in ``k_pos``),
+    and cross-attention (``causal=False``, ``k_pos >= 0`` everywhere).
+    """
+    B, T, nh, hd = q.shape
+    if kv_layout == "bnsh":
+        # cache-native layout: avoids materializing a transposed copy of
+        # the (potentially huge) KV cache — see EXPERIMENTS.md §Perf
+        S, nkv = k.shape[2], k.shape[1]
+        kv_eq, pv_eq = "btkgh,bksh->bkgts", "bkgts,bksh->btkgh"
+    else:
+        S, nkv = k.shape[1], k.shape[2]
+        kv_eq, pv_eq = "btkgh,bskh->bkgts", "bkgts,bskh->btkgh"
+    g = nh // nkv
+    qg = q.reshape(B, T, nkv, g, hd)
+
+    scores = jnp.einsum(kv_eq, qg, k).astype(F32)
+    scores *= 1.0 / math.sqrt(hd)
+
+    qp = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(q_pos[None], (B, T))
+    kp = k_pos if k_pos.ndim == 2 else jnp.broadcast_to(k_pos[None], (B, S))
+    mask = kp[:, None, :] >= 0                       # [B, 1, S] valid slots
+    if causal:
+        mask = mask & (kp[:, None, :] <= qp[:, :, None])
+    if window is not None:
+        mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(pv_eq, probs.astype(v.dtype), v)
+    return out.reshape(B, T, nh, hd)
+
+
+def init_attn(cfg: ModelConfig, key, dtype, *, cross: bool = False):
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "norm": zeros((d,), dtype),
+        "wq": dense_init(ks[0], d, nh * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nh * hd, d, dtype, scale=1.0 / math.sqrt(nh * hd * 2 * cfg.n_layers)),
+    }
+    s = {"norm": "norm", "wq": "attn_q", "wk": "attn_kv", "wv": "attn_kv", "wo": "attn_o"}
+    if cfg.qkv_bias and not cross:
+        p.update(
+            bq=zeros((nh * hd,), dtype),
+            bk=zeros((nkv * hd,), dtype),
+            bv=zeros((nkv * hd,), dtype),
+        )
+        s.update(bq="attn_bias", bk="attn_bias", bv="attn_bias")
+    return p, s
+
+
+def attn_qkv(p: Params, x: jax.Array, cfg: ModelConfig):
+    B, T, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(B, T, nh, hd), "act_bthd")
+    k = k.reshape(B, T, nkv, hd)
+    v = v.reshape(B, T, nkv, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "norm": zeros((d,), dtype),
+        "wi": dense_init(ks[0], d, f, dtype),
+        "wg": dense_init(ks[1], d, f, dtype),
+        "wo": dense_init(ks[2], f, d, dtype, scale=1.0 / math.sqrt(f * 2 * cfg.n_layers)),
+    }
+    s = {"norm": "norm", "wi": "mlp_in", "wg": "mlp_in", "wo": "mlp_out"}
+    return p, s
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    y = (jax.nn.silu(h @ p["wg"]) * (h @ p["wi"])) @ p["wo"]
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity-based dispatch)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    p = {
+        "norm": zeros((d,), dtype),
+        "router": dense_init(ks[0], d, e, dtype, scale=0.02),
+        "wi": normal(ks[1], (e, d, f), dtype, scale_in),
+        "wg": normal(ks[2], (e, d, f), dtype, scale_in),
+        "wo": normal(ks[3], (e, f, d), dtype, scale_out),
+    }
+    s = {"norm": "norm", "router": "router", "wi": "moe_in", "wg": "moe_in", "wo": "moe_out"}
+    if cfg.n_shared_experts:
+        fs_ = cfg.n_shared_experts * f
+        p["shared_wi"] = dense_init(ks[4], d, fs_, dtype)
+        p["shared_wg"] = dense_init(jax.random.fold_in(ks[4], 1), d, fs_, dtype)
+        p["shared_wo"] = dense_init(jax.random.fold_in(ks[4], 2), fs_, d, dtype, scale=scale_out)
+        s.update(shared_wi="mlp_in", shared_wg="mlp_in", shared_wo="mlp_out")
+    return p, s
+
+
+def moe_apply(
+    p: Params, x: jax.Array, cfg: ModelConfig, *, capacity_factor: Optional[float] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE with sort-based capacity dispatch.
+
+    Returns (output, aux_load_balance_loss).  Tokens are flattened, routed
+    to ``experts_per_token`` experts each, sorted by expert id, scattered
+    into per-expert capacity buffers [E, C, D] (overflow dropped — GShard
+    semantics), processed with batched expert matmuls, and combined back
+    with router weights.  The [E, C, D] buffers carry the "moe_buf" logical
+    sharding (expert-parallel over the model axis): under pjit the
+    token→expert resharding lowers to an all-to-all.
+    """
+    B, T, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    flat = h.reshape(B * T, d)
+    n = B * T
+
+    logits = (flat @ p["router"]).astype(F32)                 # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                          # [N, k]
+    w = (w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)                                   # [E]
+    ce = jnp.zeros((e,), F32).at[idx.reshape(-1)].add(1.0) / (n * k)
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(max(k, math.ceil(n * k / e * capacity_factor)))
+    cap = min(cap, n * k)
+
+    e_flat = idx.reshape(-1)                                  # [N*k]
+    order = jnp.argsort(e_flat)                               # stable
+    se = e_flat[order]
+    counts = jnp.zeros((e,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n * k, dtype=jnp.int32) - starts[se]     # slot in expert
+    tok = order // k                                          # source token
+
+    ok = pos < cap
+    slot = jnp.where(ok, se * cap + pos, e * cap)             # overflow slot
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(flat[tok])
+    buf = constrain(buf[: e * cap].reshape(e, cap, d), "moe_buf")
+
+    up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wi"]
+    )
+    out_buf = constrain(jnp.einsum("ecf,efd->ecd", up, p["wo"]), "moe_buf")
+
+    gathered = out_buf.reshape(e * cap, d)[jnp.clip(slot, 0, e * cap - 1)]
+    gathered = jnp.where(ok[:, None], gathered, 0.0)          # dropped -> 0
+    w_sorted = w.reshape(-1)[order]
+    y = jnp.zeros((n, d), x.dtype).at[tok].add(gathered * w_sorted[:, None])
+
+    if "shared_wi" in p:
+        y = y + (jax.nn.silu(flat @ p["shared_wg"]) * (flat @ p["shared_wi"])) @ p["shared_wo"]
+    return x + y.reshape(B, T, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel MoE via shard_map (EXPERIMENTS.md §Perf H1 — beyond-paper)
+#
+# The pjit dispatch above builds globally-sharded capacity buffers; XLA
+# lowers the token→expert resharding through global sorts/scatters whose
+# collective traffic dwarfs the expert FLOPs (kimi train: 26x the compute
+# term).  This variant keeps ALL dispatch local: every model-axis rank holds
+# E/tp experts and the full dp-shard of tokens (already replicated across
+# the model axis), routes locally (local top-k, local sort, local capacity
+# buffers — zero collectives), computes its experts' contributions, and the
+# ONLY cross-chip exchange is one psum of the [n_local, d] partial outputs
+# over the model axis per layer.  Enabled with REPRO_MOE_SHARDMAP=1.
+# ---------------------------------------------------------------------------
+
+import os as _os
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as _P
+
+
+def moe_shardmap_enabled() -> bool:
+    return bool(int(_os.environ.get("REPRO_MOE_SHARDMAP", "0")))
+
+
+def moe_apply_sharded(p: Params, x: jax.Array, cfg: ModelConfig, rules):
+    """Drop-in replacement for moe_apply under active sharding rules."""
+    B, T, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    mesh = rules.mesh
+    tp = mesh.shape["model"]
+    e_loc = e // tp
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    n_loc = (B * T) // n_dp
+    cap = int(max(k, math.ceil(n_loc * k / e * cfg.moe_capacity_factor)))
+
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    flat = h.reshape(B * T, d)
+
+    def body(xs, router, wi, wg, wo):
+        # xs: [n_loc, d] (local dp shard; identical across model ranks)
+        # wi/wg/wo: my expert shard [e_loc, d, f] / [e_loc, f, d]
+        j = jax.lax.axis_index("model")
+        logits = (xs @ router).astype(F32)                    # [n_loc, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, k)                      # [n_loc, k]
+        w = (w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)).astype(xs.dtype)
+
+        # local slots for MY experts only
+        e_flat = idx.reshape(-1)                              # [n_loc*k]
+        local_e = e_flat - j * e_loc
+        mine = (local_e >= 0) & (local_e < e_loc)
+        key = jnp.where(mine, local_e, e_loc)                 # overflow bin
+        order = jnp.argsort(key)
+        se = key[order]
+        counts = jnp.zeros((e_loc + 1,), jnp.int32).at[key].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(n_loc * k, dtype=jnp.int32) - starts[se]
+        tok = order // k
+        ok = (se < e_loc) & (pos < cap)
+        slot = jnp.where(ok, se * cap + pos, e_loc * cap)
+        buf = jnp.zeros((e_loc * cap + 1, d), xs.dtype).at[slot].set(xs[tok])
+        buf = buf[: e_loc * cap].reshape(e_loc, cap, d)
+
+        up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+            "ecd,edf->ecf", buf, wi
+        )
+        out_buf = jnp.einsum("ecf,efd->ecd", up, wo).reshape(e_loc * cap, d)
+        gathered = out_buf[jnp.clip(slot, 0, e_loc * cap - 1)]
+        gathered = jnp.where(ok[:, None], gathered, 0.0)
+        w_sorted = w.reshape(-1)[order]
+        y = jnp.zeros((n_loc, d), xs.dtype).at[tok].add(gathered * w_sorted[:, None])
+        # the ONLY collective: combine expert partials across the model axis
+        y = jax.lax.psum(y, "model")
+
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((e,), F32).at[e_flat].add(1.0) / (n_loc * k)
+        aux = e * jnp.sum(me * ce)
+        for a in dp_axes:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    y_flat, aux = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            _P(dp_spec, None), _P(None, None),
+            _P("model", None, None), _P("model", None, None),
+            _P("model", None, None),
+        ),
+        out_specs=(_P(dp_spec, None), _P()),
+        check_rep=False,
+    )(flat, p["router"], p["wi"], p["wg"], p["wo"])
+
+    y = y_flat
+    if "shared_wi" in p:
+        y = y + (jax.nn.silu(flat @ p["shared_wg"]) * (flat @ p["shared_wi"])) @ p["shared_wo"]
+    return x + y.reshape(B, T, d), aux

@@ -1,0 +1,639 @@
+"""The unified multi-family model.
+
+One :class:`Model` covers every assigned architecture: dense GQA, MoE,
+xLSTM, Mamba2 hybrids, VLM cross-attention, and encoder-decoder.  Layers are
+grouped into maximal scan groups (identical period bodies) with stacked
+parameters, so HLO size and compile time are O(distinct pattern), not
+O(n_layers) — a 61-layer MoE lowers as one 60-iteration ``lax.scan``.
+
+Entry points (all pure functions over a params pytree):
+  init(key)                        real parameters
+  abstract_params()                ShapeDtypeStruct params (dry-run)
+  param_spec()                     logical sharding names (same tree)
+  apply(params, tokens, ...)       training forward  -> (logits, aux)
+  init_cache(params, B, S, ...)    decode/prefill cache pytree
+  cache_spec(B, S)                 logical sharding names for the cache
+  prefill / decode == apply(..., cache=..., offset=...) -> (logits, cache, aux)
+  encode(params, frames)           encoder memory (enc-dec archs)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from ..configs.base import LayerDef, ModelConfig
+from ..distributed.sharding import constrain, current_rules
+from . import layers as layers_mod
+from . import ssm
+from .layers import (
+    F32,
+    abstract_init,
+    apply_rope,
+    attend,
+    attn_qkv,
+    dense_init,
+    init_attn,
+    init_mlp,
+    init_moe,
+    is_abstract,
+    mlp_apply,
+    moe_apply,
+    rms_norm,
+    zeros,
+)
+
+Params = Dict
+PyTree = Any
+
+# Perf-iteration switch (EXPERIMENTS.md §Perf, iteration 1): the cache-native
+# "bnsh" attention layout avoids transposing the full KV cache per layer.
+# REPRO_KV_TRANSPOSE=1 restores the baseline (transpose-copy) behavior so the
+# before/after roofline numbers stay reproducible.
+_KV_BASELINE = bool(int(os.environ.get("REPRO_KV_TRANSPOSE", "0")))
+
+
+# ---------------------------------------------------------------------------
+# layer grouping
+# ---------------------------------------------------------------------------
+
+
+def group_layers(cfg: ModelConfig) -> List[Tuple[Tuple[LayerDef, ...], int]]:
+    """Split cfg.layers into (body, repeats) scan groups.
+
+    If the layer list tiles the pattern exactly (>1 reps), scan over pattern
+    repetitions with the period unrolled inside the body.  Otherwise fall
+    back to maximal runs of identical layers (e.g. Kimi's 1 dense + 60 MoE,
+    Zamba2's non-divisible 38 = 6x6+2).
+    """
+    layers = cfg.layers
+    n, p = len(layers), len(cfg.pattern)
+    if n % p == 0 and n // p > 1 and layers == cfg.pattern * (n // p):
+        return [(cfg.pattern, n // p)]
+    groups: List[Tuple[Tuple[LayerDef, ...], int]] = []
+    run: List[LayerDef] = []
+    for ld in layers:
+        if run and ld == run[0]:
+            run.append(ld)
+        else:
+            if run:
+                groups.append(((run[0],), len(run)))
+            run = [ld]
+    if run:
+        groups.append(((run[0],), len(run)))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, ld: LayerDef, key, dtype):
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    s: Params = {}
+    if ld.kind in ("attn", "cross_attn", "moe"):
+        p["attn"], s["attn"] = init_attn(cfg, ks[0], dtype)
+    if ld.kind == "cross_attn":
+        p["xattn"], s["xattn"] = init_attn(cfg, ks[1], dtype, cross=True)
+    if ld.kind == "attn" and cfg.d_ff:
+        p["mlp"], s["mlp"] = init_mlp(cfg, ks[2], dtype)
+    if ld.kind == "cross_attn":
+        p["mlp"], s["mlp"] = init_mlp(cfg, ks[2], dtype)
+    if ld.kind == "moe":
+        p["moe"], s["moe"] = init_moe(cfg, ks[3], dtype)
+    if ld.kind == "mamba2":
+        p["m2"], s["m2"] = ssm.init_mamba2(cfg, ks[0], dtype)
+    if ld.kind == "mlstm":
+        p["mlstm"], s["mlstm"] = ssm.init_mlstm(cfg, ks[0], dtype)
+    if ld.kind == "slstm":
+        p["slstm"], s["slstm"] = ssm.init_slstm(cfg, ks[0], dtype)
+    return p, s
+
+
+class _Ctx:
+    """Per-apply context threaded through layers."""
+
+    __slots__ = ("offset", "memory", "shared", "training")
+
+    def __init__(self, offset, memory, shared, training):
+        self.offset = offset          # scalar int32: absolute pos of chunk[0]
+        self.memory = memory          # [B, M, D] frontend/encoder memory
+        self.shared = shared          # zamba2 shared-attn params (or None)
+        self.training = training
+
+
+def _attn_block(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: Optional[Params],
+    ctx: _Ctx,
+    window: Optional[int],
+    causal: bool = True,
+    rope: bool = True,
+):
+    """Self-attention sublayer with optional KV cache (full or ring).
+
+    ``ctx.offset`` may be a scalar (whole batch at one position) or a [B]
+    vector (continuous batching: each slot at its own position)."""
+    B, T, _ = x.shape
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    q, k, v = attn_qkv(p, h, cfg)
+    vec_off = ctx.offset.ndim == 1
+    if vec_off:
+        pos = ctx.offset[:, None] + jnp.arange(T, dtype=jnp.int32)[None]   # [B,T]
+    else:
+        pos = ctx.offset + jnp.arange(T, dtype=jnp.int32)
+    if rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        out = attend(q, k, v, q_pos=pos, k_pos=pos, window=window, causal=causal)
+    elif vec_off:
+        if window is not None and cache["k"].shape[2] == window:
+            raise NotImplementedError(
+                "per-slot offsets with ring-buffer windows: the batched "
+                "engine targets full-cache layers (DESIGN.md)"
+            )
+        # per-slot offsets: scatter each row's chunk at its own position
+        S = cache["k"].shape[2]
+        b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+        t_idx = jnp.clip(pos, 0, S - 1)                        # [B, T]
+        nk = cache["k"].at[b_idx, :, t_idx, :].set(k)          # adv-idx -> [B,T,nkv,hd]
+        nv = cache["v"].at[b_idx, :, t_idx, :].set(v)
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+        out = attend(
+            q, nk, nv, q_pos=pos, k_pos=k_pos, window=window, causal=causal,
+            kv_layout="bnsh",
+        )
+        new_cache = {"k": nk, "v": nv}
+    elif window is not None and cache["k"].shape[2] == window:
+        # ring buffer of W slots; slot s holds the latest pos ≡ s (mod W)
+        W = window
+        off = ctx.offset
+        slots = jnp.arange(W, dtype=jnp.int32)
+        # latest position < off congruent to slot s (or -1 if none yet)
+        last = off - 1 - jnp.mod(off - 1 - slots, W)
+        slot_pos = jnp.where((off > 0) & (last >= 0), last, -1)
+        k_all = jnp.concatenate([jnp.moveaxis(cache["k"], 2, 1), k], axis=1)
+        v_all = jnp.concatenate([jnp.moveaxis(cache["v"], 2, 1), v], axis=1)
+        k_pos = jnp.concatenate([slot_pos, pos])
+        out = attend(q, k_all, v_all, q_pos=pos, k_pos=k_pos, window=W)
+        if T >= W:
+            nk = jnp.moveaxis(k[:, -W:], 1, 2)        # [B, nkv, W, hd]
+            nv = jnp.moveaxis(v[:, -W:], 1, 2)
+            # roll so that entry at ring-slot (pos % W) is the right token
+            shift = jnp.mod(off + T - W, W)
+            nk = jnp.roll(nk, shift, axis=2)
+            nv = jnp.roll(nv, shift, axis=2)
+            new_cache = {"k": nk, "v": nv}
+        else:
+            wslots = jnp.mod(pos, W)                   # unique since T < W
+            nk = cache["k"].at[:, :, wslots, :].set(jnp.moveaxis(k, 1, 2))
+            nv = cache["v"].at[:, :, wslots, :].set(jnp.moveaxis(v, 1, 2))
+            new_cache = {"k": nk, "v": nv}
+    else:
+        S = cache["k"].shape[2]
+        nk = jax.lax.dynamic_update_slice(
+            cache["k"], jnp.moveaxis(k, 1, 2), (0, 0, ctx.offset, 0)
+        )
+        nv = jax.lax.dynamic_update_slice(
+            cache["v"], jnp.moveaxis(v, 1, 2), (0, 0, ctx.offset, 0)
+        )
+        nk = constrain(nk, "kv_cache")
+        nv = constrain(nv, "kv_cache")
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+        if _KV_BASELINE:
+            out = attend(
+                q, jnp.moveaxis(nk, 2, 1), jnp.moveaxis(nv, 2, 1),
+                q_pos=pos, k_pos=k_pos, window=window, causal=causal,
+            )
+        else:
+            out = attend(
+                q, nk, nv, q_pos=pos, k_pos=k_pos, window=window,
+                causal=causal, kv_layout="bnsh",
+            )
+        new_cache = {"k": nk, "v": nv}
+
+    y = out.reshape(B, T, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return constrain(x + y, "act_btd"), new_cache
+
+
+def _cross_block(cfg: ModelConfig, p: Params, x, cache, ctx: _Ctx):
+    """Cross-attention sublayer; KV from frontend/encoder memory."""
+    B, T, _ = x.shape
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(B, T, nh, hd)
+    if ctx.offset.ndim == 1:
+        pos = ctx.offset[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    else:
+        pos = ctx.offset + jnp.arange(T, dtype=jnp.int32)
+    if cache is not None and "xk" in cache:
+        xk, xv = cache["xk"], cache["xv"]             # [B, M, nkv, hd]
+    else:
+        mem = ctx.memory
+        xk = (mem @ p["wk"]).reshape(B, -1, nkv, hd)
+        xv = (mem @ p["wv"]).reshape(B, -1, nkv, hd)
+    M = xk.shape[1]
+    out = attend(
+        q, xk, xv,
+        q_pos=pos, k_pos=jnp.zeros((M,), jnp.int32), causal=False,
+    )
+    y = out.reshape(B, T, nh * hd) @ p["wo"]
+    new_cache = {"xk": xk, "xv": xv} if cache is not None else None
+    return x + y, new_cache
+
+
+def _apply_layer(cfg: ModelConfig, ld: LayerDef, p: Params, x, cpiece, ctx: _Ctx):
+    aux = jnp.zeros((), F32)
+    nc: Params = {}
+    cp = cpiece or {}
+    if ld.kind == "attn":
+        x, c = _attn_block(cfg, p["attn"], x, cp.get("sa"), ctx, ld.window)
+        if c is not None:
+            nc["sa"] = c
+        if cfg.d_ff:
+            x = mlp_apply(p["mlp"], x, cfg)
+    elif ld.kind == "moe":
+        x, c = _attn_block(cfg, p["attn"], x, cp.get("sa"), ctx, ld.window)
+        if c is not None:
+            nc["sa"] = c
+        rules = current_rules()
+        if rules is not None and layers_mod.moe_shardmap_enabled():
+            x, aux = layers_mod.moe_apply_sharded(p["moe"], x, cfg, rules)
+        else:
+            x, aux = moe_apply(p["moe"], x, cfg)
+    elif ld.kind == "cross_attn":
+        x, c = _attn_block(cfg, p["attn"], x, cp.get("sa"), ctx, ld.window)
+        if c is not None:
+            nc["sa"] = c
+        x, xc = _cross_block(cfg, p["xattn"], x, cp.get("xa"), ctx)
+        if xc is not None:
+            nc["xa"] = xc
+        x = mlp_apply(p["mlp"], x, cfg)
+    elif ld.kind == "mamba2":
+        st = cp.get("m2") or ssm.mamba2_init_state(cfg, x.shape[0], x.dtype)
+        x, st = ssm.mamba2_apply(p["m2"], x, st, cfg)
+        nc["m2"] = st
+    elif ld.kind == "mlstm":
+        st = cp.get("ml") or ssm.mlstm_init_state(cfg, x.shape[0], x.dtype)
+        x, st = ssm.mlstm_apply(p["mlstm"], x, st, cfg)
+        nc["ml"] = st
+    elif ld.kind == "slstm":
+        st = cp.get("sl") or ssm.slstm_init_state(cfg, x.shape[0], x.dtype)
+        x, st = ssm.slstm_apply(p["slstm"], x, st, cfg)
+        nc["sl"] = st
+
+    if ld.shared_attn:
+        sp = ctx.shared
+        x, c = _attn_block(cfg, sp["attn"], x, cp.get("sh"), ctx, None)
+        if c is not None:
+            nc["sh"] = c
+        x = mlp_apply(sp["mlp"], x, cfg)
+    return x, (nc if cpiece is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ModelConfig, ld: LayerDef, batch: int, max_len: int,
+                 dtype, memory=None, layer_params=None):
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    c: Params = {}
+    if ld.kind in ("attn", "moe", "cross_attn"):
+        S = min(ld.window, max_len) if ld.window else max_len
+        c["sa"] = {
+            "k": jnp.zeros((batch, nkv, S, hd), dtype),
+            "v": jnp.zeros((batch, nkv, S, hd), dtype),
+        }
+    if ld.kind == "cross_attn":
+        if memory is not None and layer_params is not None:
+            p = layer_params["xattn"]
+            xk = (memory @ p["wk"]).reshape(batch, -1, nkv, hd)
+            xv = (memory @ p["wv"]).reshape(batch, -1, nkv, hd)
+        else:
+            M = cfg.n_frontend_tokens or 1
+            xk = jnp.zeros((batch, M, nkv, hd), dtype)
+            xv = jnp.zeros((batch, M, nkv, hd), dtype)
+        c["xa"] = {"xk": xk, "xv": xv}
+    if ld.kind == "mamba2":
+        c["m2"] = ssm.mamba2_init_state(cfg, batch, dtype)
+    if ld.kind == "mlstm":
+        c["ml"] = ssm.mlstm_init_state(cfg, batch, dtype)
+    if ld.kind == "slstm":
+        c["sl"] = ssm.slstm_init_state(cfg, batch, dtype)
+    if ld.shared_attn:
+        c["sh"] = {
+            "k": jnp.zeros((batch, nkv, max_len, hd), dtype),
+            "v": jnp.zeros((batch, nkv, max_len, hd), dtype),
+        }
+    return c
+
+
+_CACHE_SPECS = {  # leaf-key -> logical sharding name (stacked at group level)
+    "k": "kv_cache", "v": "kv_cache", "xk": "kv_xmem", "xv": "kv_xmem",
+    "conv": "ssm_small", "h": "ssm_state_bhps", "C": "mlstm_C",
+    "n": "ssm_small", "m": "ssm_small", "c": "ssm_small", "h_prev": "ssm_small",
+}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, dtype=jnp.float32, remat: bool = False):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.remat = remat
+        self.groups = group_layers(cfg)
+
+    # ----------------------------------------------------------------- init
+    def _init(self, key):
+        cfg, dtype = self.cfg, self.dtype
+        ks = jax.random.split(key, 8 + len(self.groups))
+        p: Params = {}
+        s: Params = {}
+        if cfg.include_embed or (cfg.include_head and cfg.tie_embeddings):
+            p["embed"] = dense_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype, scale=0.02)
+            s["embed"] = "embed_vd"
+        if cfg.include_head:
+            p["final_norm"] = zeros((cfg.d_model,), dtype)
+            s["final_norm"] = "norm"
+            if not cfg.tie_embeddings:
+                p["head"] = dense_init(ks[1], cfg.d_model, cfg.padded_vocab, dtype)
+                s["head"] = "head_dv"
+
+        p["groups"], s["groups"] = [], []
+        for gi, (body, reps) in enumerate(self.groups):
+            gk = ks[8 + gi]
+
+            def body_init(k):
+                bp, bs = {}, {}
+                bks = jax.random.split(k, len(body))
+                for li, ld in enumerate(body):
+                    bp[f"l{li}"], bs[f"l{li}"] = _init_layer(cfg, ld, bks[li], dtype)
+                return bp, bs
+
+            if is_abstract():
+                bp, bs = body_init(gk)
+                bp = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct((reps,) + a.shape, a.dtype), bp
+                )
+            else:
+                bp = jax.vmap(lambda k: body_init(k)[0])(jax.random.split(gk, reps))
+                _, bs = body_init(gk)
+            bs = jax.tree.map(
+                lambda name: "*" + name, bs, is_leaf=lambda x: isinstance(x, str)
+            )
+            p["groups"].append(bp)
+            s["groups"].append(bs)
+
+        if any(ld.shared_attn for ld in cfg.layers):
+            sa_p, sa_s = init_attn(cfg, ks[2], dtype)
+            mlp_p, mlp_s = init_mlp(cfg, ks[3], dtype)
+            p["shared_attn"] = {"attn": sa_p, "mlp": mlp_p}
+            s["shared_attn"] = {"attn": sa_s, "mlp": mlp_s}
+
+        if cfg.is_encoder_decoder:
+            enc_def = LayerDef("attn")
+
+            def enc_init(k):
+                ep, es = {}, {}
+                ep["l0"], es["l0"] = _init_layer(cfg, enc_def, k, dtype)
+                return ep, es
+
+            reps = cfg.n_encoder_layers
+            ek = ks[4]
+            if is_abstract():
+                ep, es = enc_init(ek)
+                ep = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct((reps,) + a.shape, a.dtype), ep
+                )
+            else:
+                ep = jax.vmap(lambda k: enc_init(k)[0])(jax.random.split(ek, reps))
+                _, es = enc_init(ek)
+            es = jax.tree.map(
+                lambda n: "*" + n, es, is_leaf=lambda x: isinstance(x, str)
+            )
+            p["encoder"] = {"layers": ep, "final_norm": zeros((cfg.d_model,), dtype)}
+            s["encoder"] = {"layers": es, "final_norm": "norm"}
+        return p, s
+
+    def init(self, key) -> Params:
+        return self._init(key)[0]
+
+    def abstract_params(self) -> Params:
+        with abstract_init():
+            return self._init(jax.random.PRNGKey(0))[0]
+
+    def param_spec(self) -> Params:
+        with abstract_init():
+            return self._init(jax.random.PRNGKey(0))[1]
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Bidirectional encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        ctx = _Ctx(jnp.zeros((), jnp.int32), None, None, False)
+        x = constrain(frames.astype(self.dtype), "memory_bmd")
+
+        def body(h, lp):
+            h, _ = _attn_block(cfg, lp["l0"]["attn"], h, None, ctx, None, causal=False)
+            h = mlp_apply(lp["l0"]["mlp"], h, cfg)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+        return rms_norm(x, params["encoder"]["final_norm"], cfg.rmsnorm_eps)
+
+    # ---------------------------------------------------------------- apply
+    def apply(
+        self,
+        params: Params,
+        tokens: jax.Array,            # [B, T] int32
+        *,
+        cache: Optional[PyTree] = None,
+        offset=0,
+        memory: Optional[jax.Array] = None,
+        frames: Optional[jax.Array] = None,
+        layer_range: Optional[Tuple[int, int]] = None,
+        inputs_embeds: Optional[jax.Array] = None,
+        return_hidden: bool = False,
+    ):
+        """Unified forward.
+
+        cache=None  -> training/full-context forward over the whole sequence.
+        cache given -> chunked prefill / decode / speculative verification:
+                       processes the T-token chunk starting at ``offset``.
+        layer_range -> run only decoder layers [lo, hi) — this implements the
+                       HAT U-shaped split (device: [0, m) + head; cloud:
+                       [m, n)).  Embedding applies iff lo == 0; final norm +
+                       head apply iff hi == n_layers and return_hidden=False.
+        Returns (out, new_cache, aux); new_cache is None when cache is None.
+        """
+        cfg = self.cfg
+        lo, hi = layer_range or (0, cfg.n_layers)
+        offset = jnp.asarray(offset, jnp.int32)
+
+        if cfg.is_encoder_decoder and memory is None and frames is not None:
+            memory = self.encode(params, frames)
+
+        if inputs_embeds is not None:
+            x = inputs_embeds.astype(self.dtype)
+        else:
+            if not cfg.include_embed:
+                raise ValueError("this submodel takes inputs_embeds, not tokens")
+            x = jnp.take(params["embed"], tokens, axis=0)
+            x = x * math.sqrt(cfg.d_model)
+        x = constrain(x, "act_btd")
+
+        ctx = _Ctx(offset, memory, params.get("shared_attn"), cache is None)
+        aux_total = jnp.zeros((), F32)
+        new_cache_groups = [] if cache is not None else None
+
+        layer_idx = 0
+        for gi, (body, reps) in enumerate(self.groups):
+            g_start, g_end = layer_idx, layer_idx + len(body) * reps
+            layer_idx = g_end
+            # group entirely outside [lo, hi): skip
+            if g_end <= lo or g_start >= hi:
+                if cache is not None:
+                    new_cache_groups.append(cache["groups"][gi])
+                continue
+            if g_start < lo or g_end > hi:
+                # partial overlap: slice the stacked params to whole repeats
+                r0 = max(0, (lo - g_start)) // len(body)
+                r1 = reps - max(0, g_end - hi) // len(body)
+            else:
+                r0, r1 = 0, reps
+
+            gp = params["groups"][gi]
+            gp = jax.tree.map(lambda a: a[r0:r1], gp) if (r0, r1) != (0, reps) else gp
+            gc = None
+            if cache is not None:
+                gc = cache["groups"][gi]
+                gc = jax.tree.map(lambda a: a[r0:r1], gc) if (r0, r1) != (0, reps) else gc
+
+            def body_fn(h, xs):
+                lp, lc = xs
+                nlc: Params = {}
+                aux_g = jnp.zeros((), F32)
+                for li, ld in enumerate(body):
+                    piece = None if lc is None else lc.get(f"l{li}")
+                    h, npiece, aux = _apply_layer(cfg, ld, lp[f"l{li}"], h, piece, ctx)
+                    if npiece is not None:
+                        nlc[f"l{li}"] = npiece
+                    aux_g = aux_g + aux
+                return h, (nlc if lc is not None else None, aux_g)
+
+            fn = jax.checkpoint(body_fn) if (self.remat and cache is None) else body_fn
+            if cache is not None:
+                x, (ngc, auxs) = jax.lax.scan(fn, x, (gp, gc))
+                if (r0, r1) != (0, reps):
+                    full = cache["groups"][gi]
+                    ngc = jax.tree.map(
+                        lambda old, new: jax.lax.dynamic_update_slice_in_dim(old, new, r0, 0),
+                        full, ngc,
+                    )
+                new_cache_groups.append(ngc)
+            else:
+                x, (_, auxs) = jax.lax.scan(fn, x, (gp, None))
+            aux_total = aux_total + auxs.sum()
+
+        if return_hidden or hi < cfg.n_layers or not cfg.include_head:
+            out = x
+        else:
+            x = rms_norm(x, params["final_norm"], cfg.rmsnorm_eps)
+            head = params["embed"].T if cfg.tie_embeddings else params["head"]
+            out = constrain((x @ head), "logits")
+            if cfg.padded_vocab != cfg.vocab_size:
+                # mask padded vocab columns (never sampled / zero CE mass)
+                col = jnp.arange(cfg.padded_vocab)
+                out = jnp.where(col < cfg.vocab_size, out, -1e30)
+
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["groups"] = new_cache_groups
+        return out, new_cache, aux_total
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(
+        self,
+        params: Optional[Params],
+        batch: int,
+        max_len: int,
+        *,
+        memory: Optional[jax.Array] = None,
+        dtype=None,
+        layer_range: Optional[Tuple[int, int]] = None,
+    ) -> PyTree:
+        """Build the (zero) cache pytree.  ``memory`` (if given with params)
+        precomputes cross-attention KV once — the paper's cloud caches the
+        encoder/vision memory projections instead of recomputing per step."""
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        groups = []
+        layer_idx = 0
+        lo, hi = layer_range or (0, cfg.n_layers)
+        for body, reps in self.groups:
+
+            def one(r):
+                c = {}
+                for li, ld in enumerate(body):
+                    lp = None
+                    if params is not None:
+                        lp = jax.tree.map(lambda a: a[r], params["groups"][len(groups)])[f"l{li}"]
+                    c[f"l{li}"] = _layer_cache(cfg, ld, batch, max_len, dtype, memory, lp)
+                return c
+
+            if params is not None and memory is not None:
+                stacked = jax.vmap(lambda r: one(r))(jnp.arange(reps))
+            else:
+                proto = one(0)
+                stacked = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), proto
+                )
+            groups.append(stacked)
+            layer_idx += len(body) * reps
+        return {"groups": groups}
+
+    def cache_spec(self) -> PyTree:
+        """Logical sharding names mirroring init_cache output."""
+
+        import jax.tree_util as jtu
+
+        proto = jax.eval_shape(lambda: self.init_cache(None, 1, 8))
+        return jtu.tree_map_with_path(
+            lambda path, a: "*" + _cache_key_spec(path), proto
+        )
+
+
+def _cache_key_spec(path) -> str:
+    keys = [p.key if hasattr(p, "key") else str(p) for p in path]
+    leaf = keys[-1]
+    parent = keys[-2] if len(keys) > 1 else ""
+    if leaf in ("k", "v"):
+        return "kv_cache"
+    if leaf in ("xk", "xv"):
+        return "kv_xmem"
+    if parent == "m2":                    # mamba2: conv tail + state
+        return "ssm_state" if leaf == "h" else "ssm_small"
+    if parent == "ml":                    # mlstm: C matrix + n/m stats
+        return "mlstm_C" if leaf == "C" else "ssm_small"
+    if parent == "sl":                    # slstm: all small [B, d] vectors
+        return "ssm_small"
+    return "replicated"

@@ -1,0 +1,408 @@
+"""Recurrent blocks: Mamba-2 (SSD), xLSTM mLSTM (matrix memory) and sLSTM
+(scalar memory).
+
+Each block exposes ``init_*`` → (params, spec), ``*_apply(params, x, state,
+cfg)`` → (y, new_state) and ``*_init_state(cfg, batch, dtype)``.  ``apply``
+processes a chunk of T tokens from a carried recurrent state — the same
+entry point serves training (zero state, T = seq_len), chunked prefill, and
+speculative verification (T = draft length).  HAT's rejection rollback for
+SSM archs snapshots the state before verification (see core/speculative.py).
+
+Time recursion uses ``lax.scan`` over T in the paper-faithful baseline;
+the EXACT chunkwise-parallel reformulations at the bottom of this module
+(enabled with REPRO_SSM_CHUNK, oracle in kernels/ref.py) cut the recurrent
+state's HBM traffic by the chunk length — EXPERIMENTS.md §Perf H2.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import F32, const, dense_init, normal, rms_norm, zeros
+
+Params = Dict
+
+# §Perf H2 switch: chunkwise-parallel SSM forms (exact; see bottom of file).
+# 0 = per-token scan (paper-faithful baseline); >0 = chunk length.
+def _ssm_chunk() -> int:
+    return int(os.environ.get("REPRO_SSM_CHUNK", "0"))
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def _m2_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_ch
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype):
+    d, s = cfg.d_model, cfg.ssm_state
+    d_in, nh, conv_ch = _m2_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm": zeros((d,), dtype),
+        "w_in": dense_init(ks[0], d, 2 * d_in + 2 * s + nh, dtype),
+        "conv_w": normal(ks[1], (cfg.ssm_conv, conv_ch), dtype, 0.1),
+        "conv_b": zeros((conv_ch,), dtype),
+        "A_log": const(lambda: jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=F32)), (nh,), F32),
+        "D": const(lambda: jnp.ones((nh,), F32), (nh,), F32),
+        "dt_bias": zeros((nh,), F32),
+        "gnorm": zeros((d_in,), dtype),
+        "w_out": dense_init(ks[2], d_in, d, dtype, scale=1.0 / math.sqrt(d_in * 2 * cfg.n_layers)),
+    }
+    s_ = {
+        "norm": "norm", "w_in": "ssm_in", "conv_w": "replicated",
+        "conv_b": "replicated", "A_log": "replicated", "D": "replicated",
+        "dt_bias": "replicated", "gnorm": "replicated", "w_out": "ssm_out",
+    }
+    return p, s_
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype):
+    d_in, nh, conv_ch = _m2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state), F32),
+    }
+
+
+def mamba2_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
+    B, T, d = x.shape
+    s = cfg.ssm_state
+    d_in, nh, conv_ch = _m2_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    zxbcdt = h @ p["w_in"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * s], axis=-1)
+
+    # depthwise causal conv over the chunk, seeded with the carried tail
+    ext = jnp.concatenate([state["conv"].astype(xBC.dtype), xBC], axis=1)
+    wc = cfg.ssm_conv
+    conv = sum(ext[:, i : i + T, :] * p["conv_w"][i] for i in range(wc))
+    xBC = jax.nn.silu(conv + p["conv_b"])
+    new_conv = ext[:, T:, :].astype(state["conv"].dtype)
+
+    x_in, Bm, Cm = jnp.split(xBC, [d_in, d_in + s], axis=-1)
+    xh = x_in.reshape(B, T, nh, hd).astype(F32)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])       # [B,T,nh]
+    dA = jnp.exp(-jnp.exp(p["A_log"]) * dt)                    # [B,T,nh]
+    dBx = (dt * 1.0)[..., None] * xh                           # [B,T,nh,hd]
+    Bm, Cm = Bm.astype(F32), Cm.astype(F32)
+
+    chunk = _ssm_chunk()
+    if chunk > 0 and T > 1:
+        y, h_final = mamba2_chunkwise(dBx, Bm, Cm, dA, state["h"], chunk)
+    else:
+        def step(hc, inp):
+            xt, Bt, Ct, dAt = inp                              # [B,nh,hd],[B,s],[B,s],[B,nh]
+            hc = hc * dAt[..., None, None] + xt[..., None] * Bt[:, None, None, :]
+            yt = jnp.einsum("bhps,bs->bhp", hc, Ct)
+            return hc, yt
+
+        xs = (
+            jnp.moveaxis(dBx, 1, 0),
+            jnp.moveaxis(Bm, 1, 0),
+            jnp.moveaxis(Cm, 1, 0),
+            jnp.moveaxis(dA, 1, 0),
+        )
+        h_final, ys = jax.lax.scan(step, state["h"], xs)
+        y = jnp.moveaxis(ys, 0, 1)
+    y = y + p["D"][None, None, :, None] * xh                   # [B,T,nh,hd]
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.rmsnorm_eps)
+    return x + y @ p["w_out"], {"conv": new_conv, "h": h_final}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    return d_in, nh, d_in // nh
+
+
+def init_mlstm(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    d_in, nh, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    p = {
+        "norm": zeros((d,), dtype),
+        "w_up": dense_init(ks[0], d, 2 * d_in, dtype),
+        "wq": dense_init(ks[1], d_in, d_in, dtype),
+        "wk": dense_init(ks[2], d_in, d_in, dtype),
+        "wv": dense_init(ks[3], d_in, d_in, dtype),
+        "w_i": dense_init(ks[4], d_in, nh, dtype, scale=0.02),
+        "b_i": zeros((nh,), F32),
+        "w_f": dense_init(ks[5], d_in, nh, dtype, scale=0.02),
+        "b_f": const(lambda: jnp.linspace(3.0, 6.0, nh, dtype=F32), (nh,), F32),  # forget bias
+        "gnorm": zeros((d_in,), dtype),
+        "w_down": dense_init(ks[6], d_in, d, dtype, scale=1.0 / math.sqrt(d_in * 2 * cfg.n_layers)),
+    }
+    s = {
+        "norm": "norm", "w_up": "ssm_in", "wq": "replicated", "wk": "replicated",
+        "wv": "replicated", "w_i": "replicated", "b_i": "replicated",
+        "w_f": "replicated", "b_f": "replicated", "gnorm": "replicated",
+        "w_down": "ssm_out",
+    }
+    return p, s
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), F32),
+        "n": jnp.zeros((batch, nh, hd), F32),
+        "m": jnp.full((batch, nh), -jnp.inf, F32),
+    }
+
+
+def mlstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
+    B, T, d = x.shape
+    d_in, nh, hd = _mlstm_dims(cfg)
+
+    h = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    up = h @ p["w_up"]
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q = (x_in @ p["wq"]).reshape(B, T, nh, hd).astype(F32) / math.sqrt(hd)
+    k = (x_in @ p["wk"]).reshape(B, T, nh, hd).astype(F32)
+    v = (x_in @ p["wv"]).reshape(B, T, nh, hd).astype(F32)
+    ig = (x_in @ p["w_i"]).astype(F32) + p["b_i"]              # [B,T,nh]
+    fg = (x_in @ p["w_f"]).astype(F32) + p["b_f"]
+
+    chunk = _ssm_chunk()
+    if chunk > 0 and T > 1:
+        hs, new_state = mlstm_chunkwise(
+            q, k, v, ig, fg,
+            {"C": state["C"], "n": state["n"], "m": state["m"]}, chunk,
+        )
+        C, n, m = new_state["C"], new_state["n"], new_state["m"]
+        y = hs.reshape(B, T, d_in).astype(x.dtype)
+    else:
+        def step(carry, inp):
+            C, n, m = carry
+            qt, kt, vt, it, ft = inp
+            log_f = -jax.nn.softplus(-ft)                      # log sigmoid(f)
+            m_new = jnp.maximum(log_f + m, it)
+            i_p = jnp.exp(it - m_new)[..., None]               # [B,nh,1]
+            f_p = jnp.exp(log_f + m - m_new)[..., None]
+            C = f_p[..., None] * C + i_p[..., None] * (vt[..., None] * kt[..., None, :])
+            n = f_p * n + i_p * kt
+            denom = jnp.maximum(
+                jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new)
+            )[..., None]
+            ht = jnp.einsum("bhvd,bhd->bhv", C, qt) / denom
+            return (C, n, m_new), ht
+
+        xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ig, fg))
+        (C, n, m), ys = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.rmsnorm_eps)
+    return x + y @ p["w_down"], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ModelConfig, key, dtype):
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm": zeros((d,), dtype),
+        "w_izfo": dense_init(ks[0], d, 4 * d, dtype),
+        "b_izfo": const(
+            lambda: jnp.concatenate(
+                [jnp.zeros((2 * d,), F32), jnp.full((d,), 3.0, F32), jnp.zeros((d,), F32)]
+            ),
+            (4 * d,), F32,
+        ),
+        # head-block-diagonal recurrent projections (i, z, f, o)
+        "r_izfo": normal(ks[1], (4, nh, hd, hd), dtype, 1.0 / math.sqrt(hd)),
+        "gnorm": zeros((d,), dtype),
+    }
+    s = {"norm": "norm", "w_izfo": "ssm_in", "b_izfo": "replicated",
+         "r_izfo": "replicated", "gnorm": "replicated"}
+    return p, s
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), F32),
+        "n": jnp.full((batch, d), 1e-6, F32),
+        "h": jnp.zeros((batch, d), F32),
+        "m": jnp.full((batch, d), -jnp.inf, F32),
+    }
+
+
+def slstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
+    B, T, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+
+    xin = rms_norm(x, p["norm"], cfg.rmsnorm_eps)
+    pre = (xin @ p["w_izfo"]).astype(F32) + p["b_izfo"]        # [B,T,4d]
+
+    r = p["r_izfo"].astype(F32)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, nh, hd)
+        rec = jnp.einsum("gnij,bnj->bgni", r, hh).reshape(B, 4 * d)
+        g = pre_t + rec
+        gi, gz, gf, go = jnp.split(g, 4, axis=-1)
+        log_f = -jax.nn.softplus(-gf)
+        m_new = jnp.maximum(log_f + m, gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(gz)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = jnp.moveaxis(pre, 1, 0)
+    (c, n, h, m), ys = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]), xs
+    )
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                 # [B,T,d]
+    y = rms_norm(y, p["gnorm"], cfg.rmsnorm_eps)
+    return x + y, {"c": c, "n": n, "h": h, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise-parallel forms (EXPERIMENTS.md §Perf H2 — beyond-paper)
+#
+# The per-token scans above read+write the recurrent state (mLSTM's C matrix,
+# Mamba2's SSD state) every token: HBM traffic O(T · |state|).  The chunkwise
+# forms below are EXACT reformulations (stabilizer-invariance of the mLSTM
+# output holds; Mamba2's decays telescope) that materialize the state once
+# per chunk: traffic O(T/L · |state|) plus attention-like intra-chunk terms
+# that are MXU-friendly matmuls.  Enabled via ssm_chunk (env
+# REPRO_SSM_CHUNK for the launchers); chunk=0 falls back to the scan.
+# ---------------------------------------------------------------------------
+
+
+def _pad_chunks(x, L, axis=1):
+    T = x.shape[axis]
+    pad = (-T) % L
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, T + pad
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, state, chunk: int):
+    """q,k,v: [B,T,nh,hd] (q pre-scaled); ig/fg: [B,T,nh] raw gates.
+    Returns ([B,T,nh,hd], new_state).  Exact vs the per-token recurrence."""
+    B, T, nh, hd = q.shape
+    L = min(chunk, T)
+    qs, Tp = _pad_chunks(q.astype(F32), L)
+    ks, _ = _pad_chunks(k.astype(F32), L)
+    vs, _ = _pad_chunks(v.astype(F32), L)
+    igs, _ = _pad_chunks(ig.astype(F32), L)
+    # padded steps must not affect state: forget=1 (lf=0), input=-inf
+    pad = Tp - T
+    if pad:
+        igs = igs.at[:, T:].set(-jnp.inf)
+        fgs = jnp.concatenate(
+            [fg.astype(F32), jnp.full((B, pad, nh), 1e9, F32)], axis=1
+        )
+    else:
+        fgs = fg.astype(F32)
+    nC = Tp // L
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, nC, L, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (qs, ks, vs, igs, fgs))
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(carry, xs):
+        C, n, m0 = carry                       # [B,nh,hd,hd],[B,nh,hd],[B,nh]
+        qt, kt, vt, it, ft = xs                # [B,L,...]
+        lf = -jax.nn.softplus(-ft)             # [B,L,nh]
+        b = jnp.cumsum(lf, axis=1)
+        D = b[:, :, None, :] - b[:, None, :, :] + it[:, None, :, :]
+        D = jnp.where(mask[None, :, :, None], D, -jnp.inf)
+        m_intra = D.max(axis=2)                                  # [B,L,nh]
+        m_hat = jnp.maximum(b + m0[:, None, :], m_intra)
+        inter = jnp.exp(b + m0[:, None, :] - m_hat)              # [B,L,nh]
+        S = jnp.exp(D - m_hat[:, :, None, :])                    # [B,L,S,nh]
+        sc = jnp.einsum("blnk,bsnk->blsn", qt, kt)
+        w = S * sc
+        num = inter[..., None] * jnp.einsum("bnvk,blnk->blnv", C, qt) \
+            + jnp.einsum("blsn,bsnv->blnv", w, vt)
+        nvec = inter[..., None] * n[:, None] + jnp.einsum("blsn,bsnk->blnk", S, kt)
+        dot = jnp.abs(jnp.einsum("blnk,blnk->bln", nvec, qt))
+        h = num / jnp.maximum(dot, jnp.exp(-m_hat))[..., None]
+
+        BL = b[:, -1, :]                                          # [B,nh]
+        m_new = jnp.maximum(BL + m0, (BL[:, None] - b + it).max(axis=1))
+        cdec = jnp.exp(BL + m0 - m_new)
+        src = jnp.exp(BL[:, None] - b + it - m_new[:, None])      # [B,L,nh]
+        C = cdec[..., None, None] * C + jnp.einsum("bln,blnv,blnk->bnvk", src, vt, kt)
+        n = cdec[..., None] * n + jnp.einsum("bln,blnk->bnk", src, kt)
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]),
+                                 (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, Tp, nh, hd)[:, :T]
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mamba2_chunkwise(xh, Bm, Cm, dA, h0, chunk: int):
+    """xh: [B,T,nh,hd] (dt-scaled inputs); Bm/Cm: [B,T,state]; dA: [B,T,nh]
+    per-token decay in (0,1].  Returns ([B,T,nh,hd], h_final)."""
+    B, T, nh, hd = xh.shape
+    st = Bm.shape[-1]
+    L = min(chunk, T)
+    xs_, Tp = _pad_chunks(xh, L)
+    Bs, _ = _pad_chunks(Bm, L)
+    Cs, _ = _pad_chunks(Cm, L)
+    dAs, _ = _pad_chunks(dA, L)
+    pad = Tp - T
+    if pad:  # padded steps: decay 1, zero input (xh already zero-padded)
+        dAs = dAs.at[:, T:].set(1.0)
+    nC = Tp // L
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, nC, L, *x.shape[2:]), 1, 0)
+
+    xc, Bc, Cc, ac = map(to_chunks, (xs_, Bs, Cs, dAs))
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(h, xs):
+        xt, Bt, Ct, at = xs
+        la = jnp.log(jnp.maximum(at, 1e-38))                      # [B,L,nh]
+        cum = jnp.cumsum(la, axis=1)
+        G = cum[:, :, None, :] - cum[:, None, :, :]               # t,s
+        G = jnp.where(mask[None, :, :, None], jnp.exp(G), 0.0)
+        sc = jnp.einsum("blc,bsc->bls", Ct, Bt)                   # [B,L,S]
+        y_intra = jnp.einsum("blsn,bsnv->blnv", sc[..., None] * G, xt)
+        y_inter = jnp.exp(cum)[..., None] * jnp.einsum("blc,bnvc->blnv", Ct, h)
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)              # [B,L,nh]
+        h = jnp.exp(cum[:, -1])[..., None, None] * h + jnp.einsum(
+            "bln,blnv,blc->bnvc", decay_to_end, xt, Bt
+        )
+        return h, y_intra + y_inter
+
+    h, ys = jax.lax.scan(step, h0, (xc, Bc, Cc, ac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Tp, nh, hd)[:, :T]
+    return y, h

@@ -1,0 +1,14 @@
+from .analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    RooflineTerms,
+    analyze,
+    collective_bytes,
+    model_flops,
+)
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16", "RooflineTerms", "analyze",
+    "collective_bytes", "model_flops",
+]

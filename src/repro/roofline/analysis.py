@@ -1,0 +1,165 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+  compute    = FLOPs_per_chip / 197e12
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9   (per-link ICI)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` of the SPMD-partitioned
+module — these are *per-partition* (per-chip) quantities, so no further
+division by chip count (equivalent to the global-HLO/(chips·peak) form).
+Collective bytes are not in cost_analysis: we parse the optimized HLO text
+and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (again per-partition).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = bf16[16,128,4096]{2,1,0} all-gather(...)
+#       %y = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?\)?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes (per partition) from optimized HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue                      # avoid double counting async pairs
+        out[kind] += _shape_bytes(type_str)
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    kind: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0          # 6·N·D (train) or 2·N·D (inference)
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_chip / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips): catches remat and
+        redundant compute (≈1/3 under full remat of a train step)."""
+        total = self.flops_per_chip * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            useful_flops_ratio=self.useful_flops_ratio,
+        )
+        return d
+
+
+def model_flops(cfg, shape, kind: str = None) -> float:
+    """Analytic 'useful' FLOPs for the step (instructions: 6·N·D / 6·N_act·D)."""
+    n_act = cfg.active_param_count()
+    kind = kind or shape.kind
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    if kind == "hat_verify":
+        m = cfg.hat_shallow_layers
+        frac = 1.0 - m / cfg.n_layers      # middle submodel share
+        return 2.0 * n_act * frac * shape.global_batch * 8
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def analyze(
+    *, cfg, shape, mesh_name: str, n_chips: int,
+    cost: Dict, hlo_text: str, kind: str = None,
+) -> RooflineTerms:
+    """Loop-corrected accounting from the optimized HLO (hlo_parse):
+    XLA's cost_analysis counts scan bodies once, so flops/bytes/collectives
+    are re-derived with while-trip multipliers; ``cost`` is kept only as a
+    cross-check in the JSON record."""
+    from .hlo_parse import analyze_hlo
+
+    c = analyze_hlo(hlo_text)
+    return RooflineTerms(
+        arch=cfg.name,
+        shape=shape.name,
+        kind=kind or shape.kind,
+        mesh=mesh_name,
+        n_chips=n_chips,
+        flops_per_chip=c.flops,
+        hbm_bytes_per_chip=c.hbm_bytes,
+        coll_bytes_per_chip=c.collective_bytes,
+        coll_breakdown={k: int(v) for k, v in c.collective_breakdown.items()},
+        model_flops=model_flops(cfg, shape, kind=kind),
+    )

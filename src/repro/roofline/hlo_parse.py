@@ -1,0 +1,344 @@
+"""Optimized-HLO analyzer with loop-aware accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — under a
+layer-stacked ``lax.scan`` that undercounts flops/bytes by n_layers.  This
+module parses the post-SPMD optimized HLO text, builds the computation call
+graph (while bodies x trip count from ``backend_config known_trip_count``,
+fusion bodies inline, conditionals x1), and produces loop-corrected
+per-chip totals:
+
+  * flops       — dot contractions (the MXU term) wherever they appear,
+                  weighted by their computation's execution multiplier;
+  * hbm_bytes   — result + operand bytes of *top-level* instructions
+                  (ENTRY + while/conditional bodies).  Post-fusion these are
+                  the HBM-visible boundaries; fusion internals stay in VMEM;
+  * collectives — result bytes of all-gather / all-reduce / reduce-scatter /
+                  all-to-all / collective-permute, weighted likewise.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INS_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_DOT_DIMS = {
+    "lc": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "rc": re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}"),
+    "lb": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+    "rb": re.compile(r"rhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+
+def _shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+# CPU lowering upcasts bf16 compute to f32 (no native bf16 on host).  For
+# TPU-roofline byte accounting we count floating tensors at native bf16
+# width; deliberate-f32 stats (softmax/optimizer moments) are then counted
+# at 2 B too — a mild, documented underestimate (EXPERIMENTS.md §Roofline).
+_NATIVE_BYTES = dict(_DTYPE_BYTES)
+_NATIVE_BYTES.update({"f32": 2, "f64": 4})
+
+
+def _bytes_of(type_str: str, native_bf16: bool = False) -> float:
+    table = _NATIVE_BYTES if native_bf16 else _DTYPE_BYTES
+    total = 0
+    for dt, dims in _shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * table[dt]
+    return float(total)
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    args: str                 # text inside the top-level call parens
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    is_entry: bool = False
+
+
+def _split_call_args(line: str, opcode: str) -> str:
+    i = line.find(opcode + "(")
+    if i < 0:
+        return ""
+    j = i + len(opcode) + 1
+    depth, out = 1, []
+    while j < len(line) and depth:
+        ch = line[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(ch)
+        j += 1
+    return "".join(out)
+
+
+def parse_computations(hlo: str):
+    comps: Dict[str, Computation] = {}
+    types: Dict[str, str] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        if raw and not raw[0].isspace() and "->" in raw and raw.rstrip().endswith("{"):
+            hdr = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)\s*\(", raw)
+            if hdr:
+                cur = Computation(hdr.group(2), is_entry=bool(hdr.group(1)))
+                comps[cur.name] = cur
+            continue
+        m = _INS_RE.match(raw)
+        if m and cur is not None:
+            name, type_str, opcode = m.groups()
+            args = _split_call_args(raw, opcode)
+            ins = Instruction(name, type_str, opcode, args, raw)
+            cur.instructions.append(ins)
+            types[name] = type_str
+    return comps, types
+
+
+def _trip_count(line: str, comps, cond_name: Optional[str]) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    if cond_name and cond_name in comps:
+        best = 1
+        for ins in comps[cond_name].instructions:
+            for c in re.finditer(r"constant\((\d+)\)", ins.line):
+                best = max(best, int(c.group(1)))
+        return best
+    return 1
+
+
+def _multipliers(comps) -> Dict[str, Tuple[float, bool]]:
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    result: Dict[str, Tuple[float, bool]] = {}
+
+    def visit(name: str, m: float, fused: bool):
+        if name not in comps:
+            return
+        prev = result.get(name)
+        if prev is not None and prev[0] >= m:
+            return
+        result[name] = (m, fused if prev is None else (prev[1] and fused))
+        for ins in comps[name].instructions:
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                tc = _trip_count(ins.line, comps, cm.group(1) if cm else None)
+                if bm:
+                    visit(bm.group(1), m * tc, fused)
+                if cm:
+                    visit(cm.group(1), m * tc, fused)
+            elif ins.opcode == "conditional":
+                b = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if b:
+                    for br in re.findall(r"%?([\w\.\-]+)", b.group(1)):
+                        visit(br, m, fused)
+            elif ins.opcode == "fusion":
+                c = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if c:
+                    visit(c.group(1), m, True)
+            else:
+                for attr in ("to_apply", "calls"):
+                    c = re.search(attr + r"=%?([\w\.\-]+)", ins.line)
+                    if c:
+                        visit(c.group(1), m, True)
+
+    if entry is not None:
+        visit(entry.name, 1.0, False)
+    return result
+
+
+def _dot_flops(ins: Instruction, types: Dict[str, str]) -> float:
+    """2 x (output elements) x (contracted extent) from operand shapes."""
+    ops = _OPERAND_RE.findall(ins.args)
+    if not ops:
+        return 0.0
+    lhs_t = types.get(ops[0], "")
+    lhs_shapes = _shapes(lhs_t)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    lc = _DOT_DIMS["lc"].search(ins.line)
+    k_prod = 1
+    if lc:
+        for d in [int(x) for x in lc.group(1).split(",") if x]:
+            if d < len(lhs_dims):
+                k_prod *= lhs_dims[d]
+    out_prod = 1
+    out_shapes = _shapes(ins.type_str)
+    if out_shapes:
+        for d in out_shapes[0][1]:
+            out_prod *= d
+    return 2.0 * out_prod * k_prod
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    n_while: int = 0
+    max_trip: int = 1
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_breakdown": dict(self.collective_breakdown),
+            "n_while": self.n_while, "max_trip": self.max_trip,
+        }
+
+
+_NO_HBM = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+}
+
+
+def analyze_hlo(hlo: str, native_bf16: bool = True) -> HloCosts:
+    comps, types = parse_computations(hlo)
+    mult = _multipliers(comps)
+    out = HloCosts(collective_breakdown={k: 0.0 for k in _COLLECTIVES})
+    for name, comp in comps.items():
+        m, fused = mult.get(name, (0.0, True))
+        if m == 0.0:
+            continue
+        for ins in comp.instructions:
+            op = ins.opcode
+            if op in ("dot", "dot-general"):
+                out.flops += m * _dot_flops(ins, types)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                b = _bytes_of(ins.type_str, native_bf16)
+                out.collective_bytes += m * b
+                out.collective_breakdown[base] += m * b
+            if op == "while":
+                out.n_while += 1
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                out.max_trip = max(
+                    out.max_trip,
+                    _trip_count(ins.line, comps, cm.group(1) if cm else None),
+                )
+            if not fused and op not in _NO_HBM:
+                if _is_pure_convert(ins, comps):
+                    continue
+                out.hbm_bytes += m * _hbm_bytes_of(ins, types, comps, native_bf16)
+    return out
+
+
+_CONVERT_ONLY = {"parameter", "convert", "bitcast", "copy"}
+
+
+def _fusion_body(ins: Instruction, comps):
+    c = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+    if c and c.group(1) in comps:
+        return comps[c.group(1)].instructions
+    return []
+
+
+def _fusion_root_opcode(ins: Instruction, comps) -> str:
+    body = _fusion_body(ins, comps)
+    for b in body:
+        if "ROOT" in b.line.split("=")[0]:
+            return b.opcode
+    return body[-1].opcode if body else ""
+
+
+def _is_pure_convert(ins: Instruction, comps) -> bool:
+    """Fusions that only change dtype — CPU-backend artifacts of bf16
+    emulation; identity on TPU, so excluded from HBM accounting."""
+    if ins.opcode == "convert":
+        return True
+    if ins.opcode != "fusion":
+        return False
+    body = _fusion_body(ins, comps)
+    return bool(body) and all(b.opcode in _CONVERT_ONLY for b in body)
+
+
+def _hbm_bytes_of(ins: Instruction, types, comps, native_bf16: bool = True) -> float:
+    """Physical HBM traffic of one top-level instruction.
+
+    Slicing ops touch only the slice, not the sliced buffer; in-place
+    dynamic-update-slice (bare or as a fusion root — the layer-scan cache
+    write) touches only the update region.  Everything else: result write +
+    operand reads at fusion boundaries."""
+    op = ins.opcode
+    operands = _OPERAND_RE.findall(ins.args)
+    if op == "dynamic-slice" or op == "slice":
+        return 2.0 * _bytes_of(ins.type_str, native_bf16)   # read + write slice
+    if op == "dynamic-update-slice":
+        upd = types.get(operands[1], "") if len(operands) > 1 else ""
+        return 2.0 * _bytes_of(upd, native_bf16)
+    if op == "fusion":
+        root = _fusion_root_opcode(ins, comps)
+        if root == "dynamic-update-slice":
+            # in-place cache write: the physical traffic is the update
+            # region ~= the smallest operand (read update + write region)
+            small = [
+                _bytes_of(types.get(o, ""), native_bf16)
+                for o in operands if types.get(o, "")
+            ]
+            return 2.0 * min(small) if small else 0.0
+        if root in ("dynamic-slice", "slice"):
+            return 2.0 * _bytes_of(ins.type_str, native_bf16)
+        if root == "convert":
+            # dtype-sandwich fusions around the cache: pure CPU-backend
+            # bf16-emulation churn; the real reads are counted at the
+            # consumers (dots/fusions that use the converted buffer)
+            return 0.0
+        body = _fusion_body(ins, comps)
+        ds_bytes = sum(
+            _bytes_of(b.type_str, native_bf16)
+            for b in body
+            if b.opcode in ("dynamic-slice", "slice")
+        )
+        if ds_bytes:
+            # the fusion reads SLICES of its big operands (scan-over-time
+            # bodies slicing loop-invariant activations): cap each operand's
+            # contribution at result + total sliced bytes
+            res = _bytes_of(ins.type_str, native_bf16)
+            cap = res + ds_bytes
+            b = res
+            for o in operands:
+                b += min(_bytes_of(types.get(o, ""), native_bf16), cap)
+            return b
+    b = _bytes_of(ins.type_str, native_bf16)
+    for o in operands:
+        b += _bytes_of(types.get(o, ""), native_bf16)
+    return b

@@ -1,0 +1,15 @@
+from .backends import RealBackend
+from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
+from .engine import CloudEngine, EngineJob, EngineResult
+from .kv_manager import KVBudget, SlotKVManager
+from .medusa import init_medusa, medusa_logits, medusa_loss, medusa_param_count
+from .request import FleetMetrics, Phase, Request
+from .simulator import FRAMEWORKS, SimConfig, Simulator, StatisticalBackend, run_fleet
+
+__all__ = [
+    "RealBackend", "CloudDelayModel", "DeviceProfile", "NetworkModel",
+    "make_fleet", "CloudEngine", "EngineJob", "EngineResult", "KVBudget",
+    "SlotKVManager", "init_medusa", "medusa_logits", "medusa_loss",
+    "medusa_param_count", "FleetMetrics", "Phase", "Request",
+    "FRAMEWORKS", "SimConfig", "Simulator", "StatisticalBackend", "run_fleet",
+]

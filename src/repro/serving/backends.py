@@ -1,0 +1,225 @@
+"""Real-model backend for the device-cloud simulator.
+
+Where ``StatisticalBackend`` samples outcomes, ``RealBackend`` runs actual
+JAX models: the device's draft model (shallow layers + distilled Λ + head),
+the cloud's middle submodel, and (for U-Medusa) real Medusa heads with tree
+verification.  The simulator still owns all wall-clock accounting — this
+backend answers *what tokens happen*, which is where accept lengths
+(Table 4) and ablation effects (Table 5) come from.
+
+SSM/hybrid archs roll back recurrent state by snapshot + re-advance over the
+accepted prefix (core/speculative.py, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.adapter import DraftModel
+from ..core.speculative import (
+    draft_until_threshold,
+    accept_greedy_rows,
+    has_ssm_state,
+    restore_states,
+    snapshot_states,
+)
+from ..core.split import SplitModels
+from . import medusa as medusa_mod
+from .request import Request
+
+Params = Dict
+
+
+@dataclass
+class _ReqState:
+    in_cache: Dict
+    mid_cache: Dict
+    offset: int                      # U-path cache position (verified tokens)
+    draft_cache: Optional[Dict]
+    draft_offset: int
+    last_token: int = -1
+    topk_last: Optional[np.ndarray] = None
+    last_bonus: int = -1
+    deep_last: Optional[np.ndarray] = None
+    prompt: Optional[np.ndarray] = None
+
+
+class RealBackend:
+    def __init__(
+        self,
+        split: SplitModels,
+        adapter_params: Optional[Params] = None,
+        medusa_params: Optional[Params] = None,
+        *,
+        eta: float = 0.6,
+        max_draft: int = 8,
+        topk: int = 4,
+        max_len: int = 512,
+        rng: Optional[np.random.Generator] = None,
+        memory: Optional[jax.Array] = None,
+    ):
+        self.split = split
+        self.cfg = split.cfg
+        self.draft_model = (
+            DraftModel(split, adapter_params) if adapter_params is not None else None
+        )
+        self.medusa_params = medusa_params
+        self.eta = eta
+        self.max_draft = max_draft
+        self.topk = topk
+        self.max_len = max_len
+        self.rng = rng or np.random.default_rng(0)
+        self.memory = memory
+        self.ssm = has_ssm_state(self.cfg)
+        self.states: Dict[int, _ReqState] = {}
+
+    # ------------------------------------------------------------ plumbing
+    def _u_forward(self, st: _ReqState, tokens: np.ndarray):
+        """Run [1, T] tokens through the U path at st.offset; returns
+        (logits [T, V], deep [T, D]) and updates both caches."""
+        toks = jnp.asarray(tokens, jnp.int32)[None]
+        shallow, st.in_cache, _ = self.split.input_model.apply(
+            self.split.input_params, toks, cache=st.in_cache,
+            offset=st.offset, memory=self.memory, return_hidden=True,
+        )
+        deep, st.mid_cache, _ = self.split.middle_model.apply(
+            self.split.middle_params, None, inputs_embeds=shallow,
+            cache=st.mid_cache, offset=st.offset, memory=self.memory,
+            return_hidden=True,
+        )
+        logits = self.split.head_logits(deep)
+        return np.asarray(logits[0], np.float32), np.asarray(deep[0], np.float32)
+
+    def _prompt(self, req: Request) -> np.ndarray:
+        if req.prompt is not None:
+            return np.asarray(req.prompt, np.int32)
+        return self.rng.integers(
+            3, self.cfg.vocab_size, size=req.prompt_len
+        ).astype(np.int32)
+
+    # ----------------------------------------------------------- interface
+    def first_token(self, req: Request) -> int:
+        prompt = self._prompt(req)[: self.max_len // 2]
+        st = _ReqState(
+            in_cache=self.split.input_model.init_cache(
+                self.split.input_params, 1, self.max_len, memory=self.memory
+            ),
+            mid_cache=self.split.middle_model.init_cache(
+                self.split.middle_params, 1, self.max_len, memory=self.memory
+            ),
+            offset=0,
+            draft_cache=None,
+            draft_offset=0,
+            prompt=prompt,
+        )
+        logits, deep = self._u_forward(st, prompt)
+        st.offset = len(prompt)
+        st.deep_last = deep[-1]
+        tok = int(logits[-1].argmax())
+        st.last_token = tok
+        if self.draft_model is not None:
+            st.draft_cache = self.draft_model.init_cache(
+                1, self.max_len, memory=self.memory
+            )
+            _, st.draft_cache, _ = self.draft_model.forward(
+                jnp.asarray(prompt, jnp.int32)[None], cache=st.draft_cache,
+                offset=0, memory=self.memory,
+            )
+            st.draft_offset = len(prompt)
+        self.states[req.req_id] = st
+        return tok
+
+    def draft(self, req: Request, max_draft: int) -> List[int]:
+        st = self.states[req.req_id]
+        snap = snapshot_states(st.draft_cache["input"]) if self.ssm else None
+        res, st.draft_cache, st.draft_offset = draft_until_threshold(
+            self.draft_model, st.draft_cache,
+            jnp.asarray([[st.last_token]], jnp.int32),
+            st.draft_offset, eta=self.eta,
+            max_draft=min(max_draft, self.max_draft), topk=self.topk,
+            memory=self.memory,
+        )
+        st.topk_last = res.topk_last
+        st._draft_snap = snap
+        return res.tokens.tolist()
+
+    def verify(self, req: Request, draft: List[int]) -> Tuple[int, int]:
+        st = self.states[req.req_id]
+        toks = np.asarray([st.last_token] + list(draft), np.int32)
+        mid_snap = snapshot_states(st.mid_cache) if self.ssm else None
+        in_snap = snapshot_states(st.in_cache) if self.ssm else None
+        logits, deep = self._u_forward(st, toks)
+        if draft:
+            n, bonus = accept_greedy_rows(np.asarray(draft), logits)
+        else:
+            n, bonus = 0, int(logits[-1].argmax())
+        accepted = 1 + n                 # last_token + accepted drafts
+        if self.ssm and n < len(draft):
+            # roll back recurrent state and re-advance the accepted prefix
+            st.mid_cache = restore_states(st.mid_cache, mid_snap)
+            st.in_cache = restore_states(st.in_cache, in_snap)
+            logits2, deep2 = self._u_forward(st, toks[:accepted])
+            deep = deep2
+        st.offset += accepted
+        st.deep_last = deep[accepted - 1]
+        # device-side draft cache: positional rollback for attention; state
+        # rollback + re-advance for SSM draft layers
+        if self.draft_model is not None:
+            if self.ssm and getattr(st, "_draft_snap", None) is not None:
+                st.draft_cache["input"] = restore_states(
+                    st.draft_cache["input"], st._draft_snap
+                )
+            _, st.draft_cache, _ = self.draft_model.forward(
+                jnp.asarray(toks[:accepted], jnp.int32)[None],
+                cache=st.draft_cache, offset=st.offset - accepted,
+                memory=self.memory,
+            )
+            st.draft_offset = st.offset
+        st.last_bonus = bonus
+        st.last_token = bonus
+        return n, bonus
+
+    def parallel_draft_hit(self, req: Request) -> bool:
+        st = self.states.get(req.req_id)
+        if st is None or st.topk_last is None:
+            return False
+        return int(st.last_bonus) in set(np.asarray(st.topk_last).tolist())
+
+    # ------------------------------------------------------------- medusa
+    def medusa_tree(self, req: Request) -> int:
+        st = self.states[req.req_id]
+        paths = medusa_mod.build_tree_paths(
+            self.medusa_params, jnp.asarray(st.deep_last), tree_size=8
+        )
+        st._paths = paths
+        return 8                          # tree size charged to the wire/cloud
+
+    def medusa_verify(self, req: Request) -> Tuple[int, int]:
+        st = self.states[req.req_id]
+        paths = getattr(st, "_paths", None) or [[0]]
+        mid_snap = snapshot_states(st.mid_cache) if self.ssm else None
+        in_snap = snapshot_states(st.in_cache) if self.ssm else None
+        greedy_rows = []
+        for path in paths:
+            toks = np.asarray([st.last_token] + list(path), np.int32)
+            if self.ssm:
+                st.mid_cache = restore_states(st.mid_cache, mid_snap)
+                st.in_cache = restore_states(st.in_cache, in_snap)
+            logits, _ = self._u_forward(st, toks)
+            greedy_rows.append(logits.argmax(-1))
+            # positional rollback: next path overwrites the same offsets
+        best_pi, n, bonus = medusa_mod.accept_best_path(paths, greedy_rows)
+        # commit the winning path's prefix
+        commit = np.asarray([st.last_token] + list(paths[best_pi][:n]), np.int32)
+        if self.ssm:
+            st.mid_cache = restore_states(st.mid_cache, mid_snap)
+            st.in_cache = restore_states(st.in_cache, in_snap)
+        logits, deep = self._u_forward(st, commit)
+        st.offset += len(commit)
+        st.deep_last = deep[-1]
+        st.last_token = bonus
+        return n, bonus

@@ -1,0 +1,136 @@
+"""Calibrated delay models for the device-cloud testbed (paper §2.3, §4.1).
+
+All constants trace to measurements reported in the paper:
+
+* Hidden-state wire size  A = d_model × 2 B (fp16).  Vicuna-7B: 8 KiB/token.
+  Anchor: §2.3 — a 2k-token prompt costs 3.20 s of communication in U-shaped
+  inference; 2048 × 8 KiB = 16 MiB at ~5 MB/s ≈ 3.2 s.  ✓
+* Device→cloud bandwidth 5–10 MB/s up, 10–15 MB/s down (§4.1, iperf3).
+* In-cloud computation: §2.3 — 0.28 s for a 2k-token prompt on the A6000
+  server ⇒ ≈0.137 ms/token in the linear regime; Fig. 1(c) — batching ≤~256
+  tokens costs ≈ +10% over a 1-token batch (base latency dominates).
+* Device compute: Jetson AGX Orin ≈10× AGX Xavier-low (§4.1); local shallow
+  layers ≈ 2.5% of the 2k-prompt TTFT = 0.09 s ⇒ ≈ 44 µs/token on Orin.
+* Draft-model step (2 layers + Λ + head on Vicuna-7B): anchored so that HAT's
+  measured TBT (≈26–39 ms) is reproduced with accept length ≈ 2.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class CloudDelayModel:
+    """g(batched tokens) -> seconds, per pipeline stage group.
+
+    delay(n) = base · (1 + 0.1 · min(n, sat)/sat) + slope · max(n − sat, 0)
+
+    matches Fig. 1(c): near-flat to ``sat`` tokens (+10% at sat), then linear.
+    ``pipeline_len`` P: stage occupancy = delay/P (a new batch may enter a
+    P-deep pipeline every delay/P; full traversal still costs ~delay).
+    """
+
+    base_s: float = 0.045
+    sat_tokens: int = 256
+    slope_s_per_token: float = 0.000137
+    pipeline_len: int = 4
+
+    def delay(self, tokens: int) -> float:
+        t = max(int(tokens), 0)
+        d = self.base_s * (1.0 + 0.1 * min(t, self.sat_tokens) / self.sat_tokens)
+        if t > self.sat_tokens:
+            d += self.slope_s_per_token * (t - self.sat_tokens)
+        return d
+
+    def stage_time(self, tokens: int) -> float:
+        return self.delay(tokens) / max(self.pipeline_len, 1)
+
+
+@dataclass
+class DeviceProfile:
+    """One Jetson-class device with mode-dependent compute (paper §4.1).
+
+    ``speed`` multiplies compute delays: Orin mode-0 = 1.0; Xavier low
+    mode = 10.0 (the paper's 10× span).  Modes are re-drawn every 5 requests.
+    """
+
+    dev_id: int
+    kind: str                          # "orin" | "xavier"
+    rng: np.random.Generator
+    distance_m: float = 2.0            # 2 / 8 / 14 m from the WiFi router
+
+    speed: float = 1.0
+    requests_since_mode_change: int = 0
+
+    # calibrated per-token / per-step costs at speed=1.0 (Orin mode 0)
+    shallow_s_per_token: float = 44e-6     # input-submodel compute
+    draft_step_s: float = 0.003            # one draft-model AR step
+    head_s: float = 0.0005                 # output head on deep hidden
+
+    def __post_init__(self):
+        self.resample_mode()
+
+    def resample_mode(self) -> None:
+        if self.kind == "orin":
+            self.speed = float(self.rng.uniform(1.0, 2.0))
+        else:
+            # Xavier spans up to the paper's 10x at its lowest mode
+            self.speed = float(self.rng.uniform(1.5, 5.0))
+        self.requests_since_mode_change = 0
+
+    def maybe_rotate_mode(self) -> None:
+        self.requests_since_mode_change += 1
+        if self.requests_since_mode_change >= 5:       # paper: every 5 requests
+            self.resample_mode()
+
+    def shallow_delay(self, tokens: int) -> float:
+        return self.speed * self.shallow_s_per_token * tokens
+
+    def draft_delay(self, steps: int) -> float:
+        return self.speed * self.draft_step_s * steps
+
+    def head_delay(self) -> float:
+        return self.speed * self.head_s
+
+
+@dataclass
+class NetworkModel:
+    """WiFi links: per-device time-varying bandwidth (paper §4.1).
+
+    Up 5–10 MB/s, down 10–15 MB/s, modulated by distance group and random
+    channel noise per transfer; transfers on one device's link serialize."""
+
+    rng: np.random.Generator
+
+    # distance group -> measured bandwidth sub-range (iperf3, §4.1: overall
+    # 5-10 MB/s up, 10-15 MB/s down across the three placements)
+    UP_RANGE = {2.0: (8e6, 10e6), 8.0: (6.5e6, 8.5e6), 14.0: (5e6, 7e6)}
+    DOWN_RANGE = {2.0: (13e6, 15e6), 8.0: (11.5e6, 13.5e6), 14.0: (10e6, 12e6)}
+
+    def up_bw(self, dev: DeviceProfile) -> float:
+        lo, hi = self.UP_RANGE.get(dev.distance_m, (5e6, 10e6))
+        return self.rng.uniform(lo, hi)
+
+    def down_bw(self, dev: DeviceProfile) -> float:
+        lo, hi = self.DOWN_RANGE.get(dev.distance_m, (10e6, 15e6))
+        return self.rng.uniform(lo, hi)
+
+    def up_time(self, dev: DeviceProfile, nbytes: float) -> float:
+        return nbytes / self.up_bw(dev)
+
+    def down_time(self, dev: DeviceProfile, nbytes: float) -> float:
+        return nbytes / self.down_bw(dev)
+
+
+def make_fleet(rng: np.random.Generator, n_devices: int = 30):
+    """20 Xavier + 10 Orin across 3 distance groups (paper §4.1)."""
+    fleet = []
+    for i in range(n_devices):
+        kind = "orin" if i % 3 == 2 else "xavier"      # 10 orin / 20 xavier
+        dist = [2.0, 8.0, 14.0][i % 3]
+        fleet.append(DeviceProfile(dev_id=i, kind=kind, rng=rng, distance_m=dist))
+    return fleet

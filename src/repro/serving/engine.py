@@ -1,0 +1,147 @@
+"""Batched cloud engine: continuous batching over the HAT middle submodel.
+
+The cloud holds the middle submodel sharded over the mesh (or a single
+device in the runnable examples).  Requests occupy *slots*; each engine step
+builds one [n_slots, T_step] chunk where every active slot contributes its
+pending work (a prefill chunk or a verification strip), padded to the step
+width; per-slot vector offsets place each row at its own cache position.
+Admission follows the Sarathi-style token budget (scheduler semantics shared
+with the simulator), capacity follows SlotKVManager.
+
+This is the *real-tensor* counterpart of the simulator's cloud: the serve
+example and the engine tests run actual JAX compute through it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.split import SplitModels
+from .kv_manager import KVBudget, SlotKVManager
+
+F32 = jnp.float32
+
+
+@dataclass
+class EngineJob:
+    req_id: int
+    hidden: np.ndarray          # [T, D] shallow hidden states (the wire data)
+    offset: int                 # cache position of hidden[0]
+    kind: str                   # "prefill" | "verify"
+    want_deep: bool = True      # return deep hidden states (last chunk/verify)
+
+
+@dataclass
+class EngineResult:
+    req_id: int
+    deep: Optional[np.ndarray]  # [T, D] deep hidden states (device runs head)
+    kind: str
+
+
+class CloudEngine:
+    def __init__(
+        self,
+        split: SplitModels,
+        *,
+        n_slots: int = 8,
+        max_len: int = 512,
+        max_batch_tokens: int = 256,
+        kv_budget: Optional[KVBudget] = None,
+        memory: Optional[jax.Array] = None,
+    ):
+        self.split = split
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.max_batch_tokens = max_batch_tokens
+        self.kv = SlotKVManager(n_slots, max_len, kv_budget)
+        mem = None
+        if memory is not None:
+            mem = jnp.broadcast_to(memory, (n_slots,) + memory.shape[-2:])
+        self.cache = split.middle_model.init_cache(
+            split.middle_params, n_slots, max_len, memory=mem
+        )
+        self.queue: List[EngineJob] = []
+        self.d_model = split.cfg.d_model
+        self._step_fn = jax.jit(self._raw_step, static_argnames=("t_step",))
+        self.steps = 0
+        self.batched_token_history: List[int] = []
+
+    # --------------------------------------------------------------- admit
+    def add_request(self, req_id: int, expected_tokens: int) -> bool:
+        if not self.kv.can_admit(expected_tokens):
+            return False
+        self.kv.admit(req_id, expected_tokens)
+        return True
+
+    def finish_request(self, req_id: int) -> None:
+        self.kv.release(req_id)
+
+    def submit(self, job: EngineJob) -> None:
+        assert job.req_id in self.kv.slot_of, "request not admitted"
+        self.queue.append(job)
+
+    # ---------------------------------------------------------------- step
+    def _raw_step(self, params, cache, hidden, offsets, t_step: int):
+        deep, new_cache, _ = self.split.middle_model.apply(
+            params, None, inputs_embeds=hidden, cache=cache, offset=offsets,
+        )
+        return deep, new_cache
+
+    def step(self) -> List[EngineResult]:
+        """One engine iteration: admit jobs under the token budget, run the
+        middle submodel once, return deep hidden states per job."""
+        if not self.queue:
+            return []
+        # --- budgeted admission: verifies first, then prefill chunks -------
+        budget = self.max_batch_tokens
+        chosen: List[EngineJob] = []
+        busy_slots = set()
+        rest: List[EngineJob] = []
+        for job in sorted(self.queue, key=lambda j: 0 if j.kind == "verify" else 1):
+            t = len(job.hidden)
+            slot = self.kv.slot_of[job.req_id]
+            if slot in busy_slots or (chosen and t > budget):
+                rest.append(job)
+                continue
+            chosen.append(job)
+            busy_slots.add(slot)
+            budget -= t
+            if budget <= 0:
+                break
+        chosen_ids = {id(j) for j in chosen}
+        self.queue = [j for j in self.queue if id(j) not in chosen_ids]
+
+        t_step = max(len(j.hidden) for j in chosen)
+        B = self.n_slots
+        hidden = np.zeros((B, t_step, self.d_model), np.float32)
+        offsets = np.zeros((B,), np.int32)
+        for j in chosen:
+            slot = self.kv.slot_of[j.req_id]
+            hidden[slot, : len(j.hidden)] = j.hidden
+            offsets[slot] = j.offset
+            self.kv.extend(j.req_id, j.offset + len(j.hidden))
+
+        deep, self.cache = self._step_fn(
+            self.split.middle_params, self.cache,
+            jnp.asarray(hidden), jnp.asarray(offsets), t_step=t_step,
+        )
+        deep = np.asarray(deep)
+        self.steps += 1
+        self.batched_token_history.append(sum(len(j.hidden) for j in chosen))
+
+        out = []
+        for j in chosen:
+            slot = self.kv.slot_of[j.req_id]
+            d = deep[slot, : len(j.hidden)] if j.want_deep else None
+            out.append(EngineResult(j.req_id, d, j.kind))
+        return out
+
+    def drain(self) -> List[EngineResult]:
+        res = []
+        while self.queue:
+            res.extend(self.step())
+        return res

@@ -1,0 +1,79 @@
+"""KV-cache capacity management for the batched cloud engine.
+
+TPU adaptation note (DESIGN.md §3): vLLM's PagedAttention block tables are a
+GPU pointer idiom; XLA wants static shapes.  The TPU-idiomatic equivalent
+(cf. JetStream) is a fixed pool of *slots* with dense per-slot caches plus
+block-granular *accounting* for admission control: a request is admitted
+only when enough cache blocks are free, blocks are charged as the sequence
+grows and released on completion.  This keeps HBM bounded and admission
+honest while the physical layout stays static for XLA.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class KVBudget:
+    block_tokens: int = 128          # accounting granularity
+    total_blocks: int = 1024         # pool capacity (HBM budget / block size)
+    used_blocks: int = 0
+
+
+class SlotKVManager:
+    """Slot allocator + block accountant."""
+
+    def __init__(self, n_slots: int, max_len: int, budget: Optional[KVBudget] = None):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.budget = budget or KVBudget()
+        self.free_slots: List[int] = list(range(n_slots))
+        self.slot_of: Dict[int, int] = {}          # req_id -> slot
+        self.blocks_of: Dict[int, int] = {}        # req_id -> charged blocks
+        self.len_of: Dict[int, int] = {}           # req_id -> current length
+
+    # ----------------------------------------------------------- admission
+    def _blocks_for(self, tokens: int) -> int:
+        bt = self.budget.block_tokens
+        return (tokens + bt - 1) // bt
+
+    def can_admit(self, expected_tokens: int) -> bool:
+        if not self.free_slots:
+            return False
+        need = self._blocks_for(min(expected_tokens, self.max_len))
+        return self.budget.used_blocks + need <= self.budget.total_blocks
+
+    def admit(self, req_id: int, expected_tokens: int) -> int:
+        assert self.can_admit(expected_tokens), "admission denied"
+        slot = self.free_slots.pop(0)
+        self.slot_of[req_id] = slot
+        need = self._blocks_for(min(expected_tokens, self.max_len))
+        self.blocks_of[req_id] = need
+        self.budget.used_blocks += need
+        self.len_of[req_id] = 0
+        return slot
+
+    # ------------------------------------------------------------- growth
+    def extend(self, req_id: int, new_len: int) -> bool:
+        """Charge blocks as the sequence grows; False if out of budget."""
+        need = self._blocks_for(min(new_len, self.max_len))
+        have = self.blocks_of[req_id]
+        if need > have:
+            delta = need - have
+            if self.budget.used_blocks + delta > self.budget.total_blocks:
+                return False
+            self.budget.used_blocks += delta
+            self.blocks_of[req_id] = need
+        self.len_of[req_id] = new_len
+        return True
+
+    def release(self, req_id: int) -> None:
+        slot = self.slot_of.pop(req_id)
+        self.budget.used_blocks -= self.blocks_of.pop(req_id)
+        self.len_of.pop(req_id, None)
+        self.free_slots.append(slot)
+
+    @property
+    def active(self) -> int:
+        return self.n_slots - len(self.free_slots)

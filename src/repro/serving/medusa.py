@@ -1,0 +1,114 @@
+"""U-Medusa baseline (paper §4.1): Medusa heads + tree verification inside
+the U-shaped framework.
+
+4 Medusa heads live on the device with the input/output submodels; head i
+predicts the token at position t+1+i from the deep hidden state at t.  Each
+head is a residual SiLU block + its own unembedding — this is why U-Medusa
+trains 591M/760M parameters where HAT's Λ needs 67M/105M (Table 4).
+
+Tree verification: the heads' top candidates form ``tree_size`` root-to-leaf
+paths; all paths are verified against the LLM in one step.  We evaluate the
+tree as batched candidate paths (mathematically identical to tree-attention
+masking; DESIGN.md §5) and the cost model charges the paper's tree size.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.layers import F32, dense_init, rms_norm, zeros
+
+Params = Dict
+
+N_HEADS = 4
+
+
+def init_medusa(cfg: ModelConfig, key, dtype=jnp.float32) -> Tuple[Params, Params]:
+    d, v = cfg.d_model, cfg.vocab_size
+    ks = jax.random.split(key, 2 * N_HEADS)
+    p, s = {}, {}
+    for i in range(N_HEADS):
+        p[f"h{i}"] = {
+            "w": dense_init(ks[2 * i], d, d, dtype, scale=0.01),
+            "b": zeros((d,), dtype),
+            "out": dense_init(ks[2 * i + 1], d, v, dtype),
+        }
+        s[f"h{i}"] = {"w": "mlp_in", "b": "norm", "out": "head_dv"}
+    return p, s
+
+
+def medusa_param_count(cfg: ModelConfig) -> int:
+    d, v = cfg.d_model, cfg.vocab_size
+    return N_HEADS * (d * d + d + d * v)
+
+
+def medusa_logits(params: Params, deep_hidden: jax.Array) -> jax.Array:
+    """deep_hidden [..., D] -> [N_HEADS, ..., V]."""
+    outs = []
+    for i in range(N_HEADS):
+        h = params[f"h{i}"]
+        x = deep_hidden + jax.nn.silu(deep_hidden @ h["w"] + h["b"])
+        outs.append(x @ h["out"])
+    return jnp.stack(outs)
+
+
+def medusa_loss(params: Params, deep_hidden: jax.Array, tokens: jax.Array):
+    """CE of head i against the token i+1 steps ahead.
+
+    deep_hidden [B, T, D] (teacher pre-head states), tokens [B, T]."""
+    logits = medusa_logits(params, deep_hidden)        # [H, B, T, V]
+    loss = jnp.zeros((), F32)
+    for i in range(N_HEADS):
+        tgt = tokens[:, i + 1 :]
+        lg = logits[i][:, : tgt.shape[1]]
+        logp = jax.nn.log_softmax(lg.astype(F32), -1)
+        loss += -jnp.mean(jnp.take_along_axis(logp, tgt[..., None], -1))
+    return loss / N_HEADS
+
+
+def build_tree_paths(
+    params: Params,
+    deep_hidden_last: jax.Array,        # [D] deep hidden at current position
+    *,
+    tree_size: int = 8,
+    branching: Tuple[int, ...] = (4, 2, 1, 1),
+) -> List[List[int]]:
+    """Top candidates per head -> root-to-leaf token paths (≤ tree_size)."""
+    logits = medusa_logits(params, deep_hidden_last[None])[:, 0]   # [H, V]
+    tops = [
+        np.asarray(jax.lax.top_k(logits[i], branching[i])[1]).tolist()
+        for i in range(N_HEADS)
+    ]
+    paths = []
+    for combo in itertools.product(*tops):
+        paths.append(list(combo))
+        if len(paths) >= tree_size:
+            break
+    return paths
+
+
+def accept_best_path(
+    paths: List[List[int]],
+    greedy_rows: List[np.ndarray],
+) -> Tuple[int, int, int]:
+    """Pick the path with the longest greedy-matched prefix.
+
+    ``greedy_rows[p]`` are the LLM's greedy tokens for path p's positions
+    (k+1 rows: one per path token plus the bonus position).  Returns
+    (best_path_idx, n_accept, bonus_token)."""
+    best = (0, 0, int(greedy_rows[0][0]))
+    for pi, (path, greedy) in enumerate(zip(paths, greedy_rows)):
+        n = 0
+        while n < len(path) and int(path[n]) == int(greedy[n]):
+            n += 1
+        if n > best[1]:
+            best = (pi, n, int(greedy[n]))
+    if best[1] == 0:
+        best = (0, 0, int(greedy_rows[0][0]))
+    return best

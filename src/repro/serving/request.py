@@ -1,0 +1,133 @@
+"""Request lifecycle and per-request metrics (TTFT / TBT / SLA)."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    req_id: int
+    device_id: int
+    arrival_s: float
+    prompt_len: int
+    max_new_tokens: int
+    prompt: Optional[np.ndarray] = None
+
+    phase: Phase = Phase.WAITING
+    prefilled: int = 0                       # prompt tokens processed so far
+    chunk_sizes: List[int] = field(default_factory=list)
+    chunk_idx: int = 0
+    generated: List[int] = field(default_factory=list)
+
+    # --- timing ------------------------------------------------------------
+    first_token_s: Optional[float] = None    # absolute time of first token
+    token_times_s: List[float] = field(default_factory=list)
+    done_s: Optional[float] = None
+
+    # --- speculative-decoding stats -----------------------------------------
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tbt_s(self) -> Optional[float]:
+        """Mean time between consecutive output tokens."""
+        if len(self.token_times_s) < 2:
+            return None
+        ts = np.asarray(self.token_times_s)
+        return float(np.diff(ts).mean())
+
+    @property
+    def accept_length(self) -> Optional[float]:
+        """Mean accepted draft tokens per verification round (Table 4)."""
+        if self.rounds == 0:
+            return None
+        return self.accepted / self.rounds
+
+    def emit_tokens(self, tokens: List[int], now: float) -> None:
+        for t in tokens:
+            if self.first_token_s is None:
+                self.first_token_s = now
+            self.token_times_s.append(now)
+            self.generated.append(int(t))
+        if len(self.generated) >= self.max_new_tokens:
+            self.phase = Phase.DONE
+            self.done_s = now
+
+
+@dataclass
+class FleetMetrics:
+    """Aggregates over completed requests (paper Figs. 6–12)."""
+
+    requests: List[Request] = field(default_factory=list)
+    cloud_step_delays_s: List[float] = field(default_factory=list)
+
+    def add(self, r: Request) -> None:
+        self.requests.append(r)
+
+    def ttft(self) -> np.ndarray:
+        return np.asarray([r.ttft_s for r in self.requests if r.ttft_s is not None])
+
+    def tbt(self) -> np.ndarray:
+        return np.asarray([r.tbt_s for r in self.requests if r.tbt_s is not None])
+
+    def accept_length(self) -> float:
+        rounds = sum(r.rounds for r in self.requests)
+        acc = sum(r.accepted for r in self.requests)
+        return acc / max(rounds, 1)
+
+    def prefill_sla_rate(self, sla_s_per_128: float) -> float:
+        """Fraction of requests whose TTFT meets the per-128-prompt-token SLA."""
+        ok = tot = 0
+        for r in self.requests:
+            if r.ttft_s is None:
+                continue
+            budget = sla_s_per_128 * max(r.prompt_len / 128.0, 1.0)
+            ok += r.ttft_s <= budget
+            tot += 1
+        return ok / max(tot, 1)
+
+    def decode_sla_rate(self, sla_s_per_10: float) -> float:
+        """Fraction of requests generating every 10 tokens within the SLA."""
+        ok = tot = 0
+        for r in self.requests:
+            ts = r.token_times_s
+            if len(ts) < 11:
+                continue
+            spans = [ts[i + 10] - ts[i] for i in range(len(ts) - 10)]
+            ok += max(spans) <= sla_s_per_10
+            tot += 1
+        return ok / max(tot, 1)
+
+    def summary(self) -> dict:
+        ttft, tbt = self.ttft(), self.tbt()
+        out = {
+            "n": len(self.requests),
+            "ttft_mean_ms": float(ttft.mean() * 1e3) if len(ttft) else None,
+            "ttft_p90_ms": float(np.percentile(ttft, 90) * 1e3) if len(ttft) else None,
+            "tbt_mean_ms": float(tbt.mean() * 1e3) if len(tbt) else None,
+            "tbt_p90_ms": float(np.percentile(tbt, 90) * 1e3) if len(tbt) else None,
+            "accept_length": self.accept_length(),
+        }
+        if self.cloud_step_delays_s:
+            d = np.asarray(self.cloud_step_delays_s)
+            out["cloud_delay_mean_ms"] = float(d.mean() * 1e3)
+            out["cloud_delay_std_ms"] = float(d.std() * 1e3)
+        return out

@@ -1,0 +1,481 @@
+"""Discrete-event device-cloud simulator (30 Jetson-class devices + cloud).
+
+This is the testbed stand-in (DESIGN.md §3): all *algorithmic* components —
+threshold drafting, verification/acceptance, Eq. 3 chunk sizing, Eq. 6
+parallel drafting, EWMA monitoring, continuous batching with a token budget
+— are the real repro.core implementations; wall-clock is advanced by the
+calibrated delay models (delay_models.py), since the container has no
+Jetson fleet or WiFi.  A ``Backend`` supplies token-level outcomes: the
+``StatisticalBackend`` samples accept lengths (fleet-scale sweeps, Figs.
+6–12); the ``RealBackend`` (backends.py) runs actual JAX models (Table 4/5).
+
+Framework variants (paper baselines) are flag combinations:
+    U-shape    : sd=False, pc=False, pd=False
+    U-Sarathi  : sd=False, pc="server" (fixed chunks, no overlap)
+    U-Medusa   : sd="medusa", pc=False, pd=False
+    HAT        : sd="draft", pc="device" (dynamic chunks, overlap), pd=True
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.chunking import chunk_prompt, optimal_chunk_size
+from ..core.monitor import StateMonitor
+from ..core.parallel_draft import parallel_draft_steps
+from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
+from .request import FleetMetrics, Phase, Request
+
+
+# ---------------------------------------------------------------------------
+# backends: token-level outcomes
+# ---------------------------------------------------------------------------
+
+
+class StatisticalBackend:
+    """Samples draft/accept outcomes from calibrated distributions.
+
+    Defaults tuned to reproduce Table 4: HAT accept ≈ 2.06 (incl. bonus),
+    U-Medusa ≈ 1.89, with threshold drafting of mean ≈ 3 steps."""
+
+    def __init__(self, rng: np.random.Generator, *, p_accept: float = 0.55,
+                 medusa_p: float = 0.48, mean_draft: float = 3.0,
+                 max_draft: int = 8, pd_hit: float = 0.55):
+        self.rng = rng
+        self.p_accept = p_accept
+        self.medusa_p = medusa_p
+        self.mean_draft = mean_draft
+        self.max_draft = max_draft
+        self.pd_hit = pd_hit
+
+    def first_token(self, req: Request) -> int:
+        return 1000
+
+    def draft(self, req: Request, max_draft: int) -> List[int]:
+        # threshold stopping yields a geometric-ish draft length
+        q = 1.0 / self.mean_draft
+        k = 1 + int(self.rng.geometric(q)) - 1
+        k = int(np.clip(k, 1, min(max_draft, self.max_draft)))
+        return [1000 + i for i in range(k)]
+
+    def verify(self, req: Request, draft: List[int]) -> Tuple[int, int]:
+        n = 0
+        while n < len(draft) and self.rng.random() < self.p_accept:
+            n += 1
+        return n, 2000
+
+    def medusa_tree(self, req: Request) -> int:
+        return 8                                    # tree size (paper: 8)
+
+    def medusa_verify(self, req: Request) -> Tuple[int, int]:
+        n = 0
+        while n < 4 and self.rng.random() < self.medusa_p:
+            n += 1
+        return n, 2000
+
+    def parallel_draft_hit(self, req: Request) -> bool:
+        return self.rng.random() < self.pd_hit
+
+
+# ---------------------------------------------------------------------------
+# cloud jobs / batching
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Job:
+    req: Request
+    dev: DeviceProfile
+    kind: str                  # "prefill" | "verify"
+    tokens: int                # batched token size contribution
+    on_done: Callable          # (finish_time) -> None
+    on_stage: Optional[Callable] = None   # (stage_clear_time) -> None
+    seq: int = 0
+
+
+@dataclass
+class SimConfig:
+    sd: Optional[str] = "draft"        # None | "draft" | "medusa"
+    pc: Optional[str] = "device"       # None | "device" (HAT) | "server" (Sarathi)
+    pd: bool = True
+    fixed_chunk: int = 128             # U-Sarathi chunk size
+    dynamic_chunks: bool = True        # HAT: Eq. 3; else fixed_chunk
+    eta: float = 0.6                   # draft threshold (Eq. 5)
+    max_draft: int = 8
+    topk: int = 4
+    hidden_bytes_per_token: float = 4096 * 2   # A (vicuna-7b fp16)
+    token_bytes: float = 4.0
+    # Cloud admission: Sarathi/HAT cap batched tokens; the naive baselines
+    # (U-shape, U-Medusa) batch every pending job -> long prompts interfere
+    # with decode (Fig. 1(c)); None = no budget.
+    max_batch_tokens: Optional[int] = 512
+    max_sim_s: float = 3600.0
+
+
+class Simulator:
+    def __init__(
+        self,
+        sim_cfg: SimConfig,
+        cloud: CloudDelayModel,
+        backend,
+        rng: np.random.Generator,
+        n_devices: int = 30,
+    ):
+        self.cfg = sim_cfg
+        self.cloud = cloud
+        self.backend = backend
+        self.rng = rng
+        self.fleet = {d.dev_id: d for d in make_fleet(rng, n_devices)}
+        self.net = NetworkModel(rng)
+        self.monitor = StateMonitor(alpha=0.8)
+        self.metrics = FleetMetrics()
+
+        self._pq: List = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+        # cloud state
+        self.jobs: List[Job] = []
+        self.cloud_free_at = 0.0
+        self.cloud_scheduled = False
+        # per-device link/compute availability
+        self.up_free = {i: 0.0 for i in self.fleet}
+        self.down_free = {i: 0.0 for i in self.fleet}
+        self.dev_free = {i: 0.0 for i in self.fleet}
+        # per-request in-flight chunk gating
+        self._chunks_ready: Dict[int, int] = {}
+        self._chunks_done: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ event core
+    def at(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._pq, (max(t, self.now), next(self._seq), fn))
+
+    def run(self) -> FleetMetrics:
+        while self._pq:
+            t, _, fn = heapq.heappop(self._pq)
+            self.now = t
+            if t > self.cfg.max_sim_s:
+                break
+            fn()
+        return self.metrics
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        self.at(req.arrival_s, lambda: self._start_request(req))
+
+    def _start_request(self, req: Request) -> None:
+        dev = self.fleet[req.device_id]
+        dev.maybe_rotate_mode()
+        req.phase = Phase.PREFILL
+        A = self.cfg.hidden_bytes_per_token
+
+        if self.cfg.pc == "device":
+            if self.cfg.dynamic_chunks:
+                x = optimal_chunk_size(
+                    prompt_len=req.prompt_len,
+                    hidden_bytes_per_token=A,
+                    beta_up=self.monitor.device(dev.dev_id).beta_up.get(7.5e6),
+                    g=self.monitor.g.predict,
+                    mu=self.monitor.mu.get(64.0),
+                    pipeline_len=self.cloud.pipeline_len,
+                )
+            else:
+                x = self.cfg.fixed_chunk
+            req.chunk_sizes = chunk_prompt(req.prompt_len, x)
+            self._chunks_ready[req.req_id] = 0
+            self._chunks_done[req.req_id] = 0
+            self._device_compute_chunk(req, dev, 0)
+        elif self.cfg.pc == "server":
+            # Sarathi: whole prompt's hidden states uploaded once; the CLOUD
+            # chunks them across inference steps (no transmission overlap).
+            req.chunk_sizes = chunk_prompt(req.prompt_len, self.cfg.fixed_chunk)
+            self._chunks_ready[req.req_id] = len(req.chunk_sizes)
+            self._chunks_done[req.req_id] = 0
+            comp = dev.shallow_delay(req.prompt_len)
+            t0 = max(self.now, self.dev_free[dev.dev_id]) + comp
+            self.dev_free[dev.dev_id] = t0
+            self._upload(req, dev, req.prompt_len * A, t0,
+                         lambda ft: self._enqueue_next_chunk(req, dev))
+        else:
+            # plain U-shape: one bulk upload, one bulk prefill job
+            req.chunk_sizes = [req.prompt_len]
+            self._chunks_ready[req.req_id] = 1
+            self._chunks_done[req.req_id] = 0
+            comp = dev.shallow_delay(req.prompt_len)
+            t0 = max(self.now, self.dev_free[dev.dev_id]) + comp
+            self.dev_free[dev.dev_id] = t0
+            self._upload(req, dev, req.prompt_len * A, t0,
+                         lambda ft: self._enqueue_next_chunk(req, dev))
+
+    # --- HAT device-side pipelined chunk prefill -----------------------------
+    def _device_compute_chunk(self, req: Request, dev: DeviceProfile, ci: int) -> None:
+        size = req.chunk_sizes[ci]
+        start = max(self.now, self.dev_free[dev.dev_id])
+        done = start + dev.shallow_delay(size)
+        self.dev_free[dev.dev_id] = done
+
+        def after_compute():
+            A = self.cfg.hidden_bytes_per_token
+            self._upload(req, dev, size * A, self.now,
+                         lambda ft: self._chunk_uploaded(req, dev))
+            if ci + 1 < len(req.chunk_sizes):
+                self._device_compute_chunk(req, dev, ci + 1)  # overlap
+
+        self.at(done, after_compute)
+
+    def _chunk_uploaded(self, req: Request, dev: DeviceProfile) -> None:
+        self._chunks_ready[req.req_id] += 1
+        self._enqueue_next_chunk(req, dev)
+
+    def _enqueue_next_chunk(self, req: Request, dev: DeviceProfile) -> None:
+        """Admit the next prefill chunk iff the previous one finished (chunks
+        of one request are sequentially dependent through the KV cache)."""
+        done = self._chunks_done[req.req_id]
+        if done >= len(req.chunk_sizes):
+            return
+        if self._chunks_ready[req.req_id] <= done:
+            return                                    # not uploaded yet
+        if getattr(req, "_chunk_inflight", False):
+            return
+        req._chunk_inflight = True
+        size = req.chunk_sizes[done]
+        ci = done
+
+        def on_stage(st):
+            # pipeline-parallel cloud: the next chunk may enter stage 1 as
+            # soon as this chunk clears it — the KV dependency is per-stage,
+            # not end-to-end (this is what makes Eq. 3's /P overlap real)
+            req._chunk_inflight = False
+            self._chunks_done[req.req_id] += 1
+            req.prefilled += size
+            if self._chunks_done[req.req_id] < len(req.chunk_sizes):
+                self._enqueue_next_chunk(req, dev)
+
+        def on_done(ft):
+            if self._chunks_done[req.req_id] == len(req.chunk_sizes) and ci == len(req.chunk_sizes) - 1:
+                self._finish_prefill(req, dev, ft)
+
+        self._push_job(Job(req, dev, "prefill", size, on_done, on_stage))
+
+    def _finish_prefill(self, req: Request, dev: DeviceProfile, t: float) -> None:
+        """Last chunk computed in cloud: deep hidden of the final position
+        returns to the device, head emits the first token."""
+        A = self.cfg.hidden_bytes_per_token
+
+        def after_down(ft):
+            t1 = ft + dev.head_delay()
+
+            def emit():
+                tok = self.backend.first_token(req)
+                req.emit_tokens([tok], self.now)
+                req.phase = Phase.DECODE
+                if req.phase != Phase.DONE and len(req.generated) < req.max_new_tokens:
+                    self._decode_round(req, dev)
+                else:
+                    self._complete(req)
+
+            self.at(t1, emit)
+
+        self._download(req, dev, A, t, after_down)
+
+    # ------------------------------------------------------------- decoding
+    def _decode_round(self, req: Request, dev: DeviceProfile) -> None:
+        cfg = self.cfg
+        A = cfg.hidden_bytes_per_token
+
+        if cfg.sd == "medusa":
+            tree = self.backend.medusa_tree(req)
+            comp = dev.shallow_delay(tree) + dev.head_delay() * 4
+            start = max(self.now, self.dev_free[dev.dev_id])
+            t0 = start + comp
+            self.dev_free[dev.dev_id] = t0
+            self._upload(req, dev, tree * A, t0,
+                         lambda ft: self._verify_job(req, dev, tree, medusa=True))
+            return
+
+        if cfg.sd == "draft":
+            draft = self.backend.draft(req, cfg.max_draft)
+            k = len(draft)
+            pd_hit = cfg.pd and req.rounds > 0 and self.backend.parallel_draft_hit(req)
+            draft_time = 0.0 if pd_hit else dev.draft_delay(k)
+            comp = draft_time + dev.shallow_delay(k + 1)
+            start = max(self.now, self.dev_free[dev.dev_id])
+            t0 = start + comp
+            self.dev_free[dev.dev_id] = t0
+            req._draft = draft
+            # report device state to the monitor (piggybacked, §3.2)
+            self.monitor.record_device(dev.dev_id, gamma=dev.draft_delay(1))
+            self._upload(req, dev, (k + 1) * A, t0,
+                         lambda ft: self._verify_job(req, dev, k + 1, medusa=False))
+            return
+
+        # plain U-shape: verify exactly one token per round
+        comp = dev.shallow_delay(1)
+        start = max(self.now, self.dev_free[dev.dev_id])
+        t0 = start + comp
+        self.dev_free[dev.dev_id] = t0
+        self._upload(req, dev, A, t0,
+                     lambda ft: self._verify_job(req, dev, 1, medusa=False))
+
+    def _verify_job(self, req: Request, dev: DeviceProfile, tokens: int, medusa: bool):
+        def on_done(ft):
+            A = self.cfg.hidden_bytes_per_token
+
+            def after_down(ft2):
+                t1 = ft2 + dev.head_delay()
+                self.at(t1, lambda: self._accept(req, dev, medusa))
+
+            self._download(req, dev, tokens * A, ft, after_down)
+
+        self._push_job(Job(req, dev, "verify", tokens, on_done))
+
+    def _accept(self, req: Request, dev: DeviceProfile, medusa: bool) -> None:
+        # "accept length" (Table 4) counts tokens emitted per verification
+        # round including the LLM's own (bonus) token -> U-shape == 1.00.
+        if self.cfg.sd == "draft":
+            draft = getattr(req, "_draft", [])
+            n, bonus = self.backend.verify(req, draft)
+            req.rounds += 1
+            req.drafted += len(draft)
+            emit = [*draft[:n], bonus]
+        elif medusa:
+            n, bonus = self.backend.medusa_verify(req)
+            req.rounds += 1
+            req.drafted += 4
+            emit = [1000 + i for i in range(n)] + [bonus]
+        else:
+            req.rounds += 1
+            emit = [self.backend.verify(req, [])[1]]
+        req.accepted += len(emit)
+        room = req.max_new_tokens - len(req.generated)
+        req.emit_tokens(emit[:room], self.now)
+        if req.phase == Phase.DONE:
+            self._complete(req)
+        else:
+            self._decode_round(req, dev)
+
+    def _complete(self, req: Request) -> None:
+        req.phase = Phase.DONE
+        req.done_s = self.now
+        self.metrics.add(req)
+
+    # ------------------------------------------------------------- transport
+    def _upload(self, req, dev, nbytes, ready_t, cb) -> None:
+        start = max(ready_t, self.up_free[dev.dev_id], self.now)
+        dur = self.net.up_time(dev, nbytes)
+        self.up_free[dev.dev_id] = start + dur
+        self.monitor.record_device(dev.dev_id, beta_up=nbytes / dur if dur > 0 else 1e9)
+        self.at(start + dur, lambda: cb(start + dur))
+
+    def _download(self, req, dev, nbytes, ready_t, cb) -> None:
+        start = max(ready_t, self.down_free[dev.dev_id], self.now)
+        dur = self.net.down_time(dev, nbytes)
+        self.down_free[dev.dev_id] = start + dur
+        self.monitor.record_device(dev.dev_id, beta_down=nbytes / dur if dur > 0 else 1e9)
+        self.at(start + dur, lambda: cb(start + dur))
+
+    # ------------------------------------------------------------ cloud loop
+    def _push_job(self, job: Job) -> None:
+        self.jobs.append(job)
+        self._maybe_run_batch()
+
+    def _maybe_run_batch(self) -> None:
+        if self.cloud_scheduled or not self.jobs:
+            return
+        self.cloud_scheduled = True
+        start = max(self.now, self.cloud_free_at)
+        self.at(start, self._run_batch)
+
+    def _run_batch(self) -> None:
+        self.cloud_scheduled = False
+        if not self.jobs:
+            return
+        if self.cfg.max_batch_tokens is None:
+            # naive continuous batching (vLLM-style, prefill-prioritized,
+            # no token budget): long prompts join decode batches and inflate
+            # every round in them (Fig. 1(c) interference)
+            batch = list(self.jobs)
+            self.jobs = []
+        else:
+            # continuous batching with a token budget: verifies (decode)
+            # first, then prefill chunks fill the remainder (Sarathi-style
+            # admission); an oversized job is admitted alone, not starved.
+            budget = self.cfg.max_batch_tokens
+            batch = []
+            for j in sorted(self.jobs, key=lambda j: 0 if j.kind == "verify" else 1):
+                if budget <= 0:
+                    break
+                if j.tokens <= budget or not batch:
+                    batch.append(j)
+                    budget -= j.tokens
+            in_batch = set(id(j) for j in batch)
+            self.jobs = [j for j in self.jobs if id(j) not in in_batch]
+
+        tokens = sum(j.tokens for j in batch)
+        full = self.cloud.delay(tokens)
+        stage = self.cloud.stage_time(tokens)
+        self.monitor.record_batch(tokens, full)
+        self.metrics.cloud_step_delays_s.append(stage)
+
+        done_t = self.now + full
+        stage_t = self.now + stage
+        # batch-level scheduling (naive baselines) cannot fully hide pipeline
+        # bubbles: effective cadence ~2 stages (Sarathi-Serve's observation);
+        # chunked/budgeted admission pipelines microbatches at 1-stage cadence
+        bubble = 1.0 if self.cfg.max_batch_tokens is not None else 2.0
+        self.cloud_free_at = self.now + min(bubble * stage, full)
+        for j in batch:
+            if j.on_stage is not None:
+                self.at(stage_t, (lambda jj: (lambda: jj.on_stage(stage_t)))(j))
+            self.at(done_t, (lambda jj: (lambda: jj.on_done(done_t)))(j))
+        if self.jobs:
+            self._maybe_run_batch()
+
+
+# ---------------------------------------------------------------------------
+# convenience drivers
+# ---------------------------------------------------------------------------
+
+FRAMEWORKS = {
+    "u-shape": dict(sd=None, pc=None, pd=False, max_batch_tokens=None),
+    "u-sarathi": dict(sd=None, pc="server", pd=False),
+    "u-medusa": dict(sd="medusa", pc=None, pd=False, max_batch_tokens=None),
+    "hat": dict(sd="draft", pc="device", pd=True),
+}
+
+
+def run_fleet(
+    framework: str,
+    requests,
+    *,
+    rng: Optional[np.random.Generator] = None,
+    pipeline_len: int = 4,
+    hidden_bytes: float = 4096 * 2,
+    backend=None,
+    n_devices: int = 30,
+    overrides: Optional[dict] = None,
+) -> FleetMetrics:
+    rng = rng or np.random.default_rng(0)
+    kw = dict(FRAMEWORKS[framework])
+    if framework == "u-sarathi":
+        kw["dynamic_chunks"] = False
+    if overrides:
+        kw.update(overrides)
+    sim_cfg = SimConfig(hidden_bytes_per_token=hidden_bytes, **kw)
+    cloud = CloudDelayModel(pipeline_len=pipeline_len)
+    backend = backend or StatisticalBackend(rng)
+    sim = Simulator(sim_cfg, cloud, backend, rng, n_devices=n_devices)
+    for r in requests:
+        sim.submit(
+            Request(
+                req_id=r.req_id, device_id=r.device_id, arrival_s=r.arrival_s,
+                prompt_len=r.prompt_len, max_new_tokens=r.max_new_tokens,
+                prompt=r.prompt,
+            )
+        )
+    return sim.run()

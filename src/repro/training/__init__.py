@@ -1,0 +1,18 @@
+from .checkpoint import checkpoint_step, load_checkpoint, save_checkpoint
+from .optim import (
+    AdamW,
+    Adafactor,
+    SGD,
+    clip_by_global_norm,
+    constant_schedule,
+    cosine_schedule,
+    global_norm,
+)
+from .trainer import TrainLoopResult, lm_loss, make_train_step, train_loop
+
+__all__ = [
+    "AdamW", "Adafactor", "SGD", "clip_by_global_norm", "constant_schedule",
+    "cosine_schedule", "global_norm", "lm_loss", "make_train_step",
+    "train_loop", "TrainLoopResult", "save_checkpoint", "load_checkpoint",
+    "checkpoint_step",
+]

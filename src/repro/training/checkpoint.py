@@ -1,0 +1,62 @@
+"""Checkpointing: pytree <-> .npz + JSON manifest (no orbax dependency).
+
+Flattens any params/opt-state pytree with ``jax.tree_util`` key-paths as
+stable names, saves arrays into a single compressed ``.npz`` and the tree
+structure into ``manifest.json``.  Restores onto host then (optionally)
+device_put with a target sharding tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0, extra: Optional[Dict] = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez_compressed(os.path.join(path, "arrays.npz"), **flat)
+    treedef = jax.tree.structure(tree)
+    manifest = {
+        "step": step,
+        "keys": sorted(flat.keys()),
+        "treedef": str(treedef),
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (names must match)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree.structure(like)
+    out = []
+    for path_, leaf in leaves_with_path:
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_)
+        arr = data[name]
+        assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

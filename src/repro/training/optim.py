@@ -1,0 +1,218 @@
+"""Pure-JAX optimizers: AdamW, Adafactor, SGD + schedules + grad clipping.
+
+No optax in this environment — these are self-contained, pjit-friendly
+(states are pytrees mirroring params, so param shardings transfer), and
+deliberately match the reference semantics:
+
+  AdamW      — Loshchilov & Hutter; fp32 moments.
+  Adafactor  — Shazeer & Stern; factored second moment, no first moment by
+               default.  The dry-run uses it for the ≥100B configs: ~2 extra
+               bytes/param instead of AdamW's 8 (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, F32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, F32)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Optimizer interface
+# ---------------------------------------------------------------------------
+
+
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params) -> (updates, state).
+    ``updates`` are *deltas* to add to params."""
+
+    def init(self, params: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def update(self, grads: PyTree, state: PyTree, params: PyTree):
+        raise NotImplementedError
+
+
+@dataclass
+class AdamW(Optimizer):
+    lr: Callable = constant_schedule(1e-3)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def __post_init__(self):
+        if not callable(self.lr):
+            self.lr = constant_schedule(self.lr)
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, F32)
+        return {
+            "mu": jax.tree.map(z, params),
+            "nu": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        if self.clip_norm:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(F32), state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(F32)), state["nu"], grads
+        )
+        bc1 = 1 - b1 ** step.astype(F32)
+        bc2 = 1 - b2 ** step.astype(F32)
+
+        def upd(p, m, v):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if self.weight_decay:
+                u = u - lr * self.weight_decay * p.astype(F32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+
+@dataclass
+class Adafactor(Optimizer):
+    """Factored second-moment optimizer for giant models."""
+
+    lr: Callable = constant_schedule(1e-2)
+    decay: float = 0.8                # step-dependent: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+
+    def __post_init__(self):
+        if not callable(self.lr):
+            self.lr = constant_schedule(self.lr)
+
+    def _factored(self, shape) -> bool:
+        return (
+            len(shape) >= 2
+            and shape[-1] >= self.min_dim_size_to_factor
+            and shape[-2] >= self.min_dim_size_to_factor
+        )
+
+    def init(self, params):
+        def st(p):
+            if self._factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], F32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32),
+                }
+            return {"v": jnp.zeros(p.shape, F32)}
+
+        return {"f": jax.tree.map(st, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - jnp.power(step.astype(F32), -self.decay)
+        lr = self.lr(step)
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_p = tdef.flatten_up_to(params)
+        flat_s = tdef.flatten_up_to(state["f"])
+        new_s, ups = [], []
+        for g, p, s in zip(flat_g, flat_p, flat_s):
+            g = g.astype(F32)
+            g2 = jnp.square(g) + self.eps
+            if self._factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                rms = (
+                    vr[..., :, None]
+                    / jnp.maximum(vr.mean(-1, keepdims=True), self.eps)[..., :, None]
+                ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(rms + self.eps)
+                new_s.append({"vr": vr, "vc": vc})
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + self.eps)
+                new_s.append({"v": v})
+            # update clipping (RMS of update <= clip_threshold)
+            urms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, urms / self.clip_threshold)
+            u = -lr * u
+            if self.weight_decay:
+                u = u - lr * self.weight_decay * p.astype(F32)
+            ups.append(u.astype(p.dtype))
+        return (
+            tdef.unflatten(ups),
+            {"f": tdef.unflatten(new_s), "step": step},
+        )
+
+
+@dataclass
+class SGD(Optimizer):
+    lr: Callable = constant_schedule(1e-2)
+    momentum: float = 0.0
+
+    def __post_init__(self):
+        if not callable(self.lr):
+            self.lr = constant_schedule(self.lr)
+
+    def init(self, params):
+        if self.momentum:
+            return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step)
+        if self.momentum:
+            m = jax.tree.map(
+                lambda m, g: self.momentum * m + g.astype(F32), state["m"], grads
+            )
+            ups = jax.tree.map(lambda p, m_: (-lr * m_).astype(p.dtype), params, m)
+            return ups, {"m": m, "step": step}
+        ups = jax.tree.map(lambda p, g: (-lr * g.astype(F32)).astype(p.dtype), params, grads)
+        return ups, {"step": step}

@@ -1,0 +1,96 @@
+"""Training substrate: LM loss, train step factory, adapter-distillation
+driver, and a minimal training loop used by tests/examples.
+
+The same ``make_train_step`` builds both the smoke-test step (single CPU
+device, f32) and the dry-run production step (bf16, pjit over the 16x16 or
+2x16x16 mesh with Adafactor) — the launcher only changes shardings/dtypes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import Model
+from .optim import Optimizer
+
+F32 = jnp.float32
+PyTree = Any
+
+
+def lm_loss(
+    model: Model,
+    params: PyTree,
+    tokens: jax.Array,              # [B, T]: loss over next-token prediction
+    *,
+    memory: Optional[jax.Array] = None,
+    aux_coef: Optional[float] = None,
+) -> Tuple[jax.Array, Dict]:
+    cfg = model.cfg
+    logits, _, aux = model.apply(params, tokens[:, :-1], memory=memory)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    coef = cfg.router_aux_coef if aux_coef is None else aux_coef
+    total = loss + coef * aux
+    return total, {"loss": loss, "aux": aux, "ppl": jnp.exp(loss)}
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    memory_fn: Optional[Callable] = None):
+    """Returns ``step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+
+    ``batch`` is {"tokens": [B, T]} plus optional {"memory": [B, M, D]}.
+    Jit/pjit is applied by the caller (launcher decides shardings)."""
+
+    def step(params, opt_state, batch):
+        memory = batch.get("memory")
+
+        def loss_fn(p):
+            return lm_loss(model, p, batch["tokens"], memory=memory)
+
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, metrics
+
+    return step
+
+
+@dataclass
+class TrainLoopResult:
+    losses: list
+    metrics: Dict
+    steps: int
+    wall_s: float
+
+
+def train_loop(
+    model: Model,
+    params: PyTree,
+    optimizer: Optimizer,
+    batches: Iterable[Dict],
+    *,
+    max_steps: int = 100,
+    log_every: int = 20,
+    log_fn: Callable = print,
+) -> Tuple[PyTree, TrainLoopResult]:
+    step_fn = jax.jit(make_train_step(model, optimizer))
+    opt_state = optimizer.init(params)
+    losses = []
+    t0 = time.time()
+    last_metrics: Dict = {}
+    for i, batch in enumerate(batches):
+        if i >= max_steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        last_metrics = {k: float(v) for k, v in metrics.items()}
+        if log_every and i % log_every == 0:
+            log_fn(f"step {i:5d} loss {losses[-1]:.4f} ppl {last_metrics['ppl']:.2f}")
+    return params, TrainLoopResult(losses, last_metrics, len(losses), time.time() - t0)

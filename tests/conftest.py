@@ -1,0 +1,44 @@
+import os
+import sys
+
+# NOTE: deliberately NOT forcing xla_force_host_platform_device_count here —
+# tests must see the real single CPU device (the 512-device override belongs
+# exclusively to repro.launch.dryrun).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+_PARAM_CACHE = {}
+
+
+def reduced_model(arch: str):
+    """Session-cached (cfg, model, params) for a reduced config."""
+    if arch not in _PARAM_CACHE:
+        from repro.configs import get_config
+        from repro.models import Model
+
+        cfg = get_config(arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _PARAM_CACHE[arch] = (cfg, model, params)
+    return _PARAM_CACHE[arch]
+
+
+@pytest.fixture
+def make_reduced():
+    return reduced_model

@@ -1,0 +1,86 @@
+"""Config registry: exact assigned specs, param counts, reduced variants."""
+import pytest
+
+from repro.configs import ASSIGNED, CONFIGS, SHAPES, get_config, shape_applicable
+
+EXPECTED_SPECS = {
+    # arch: (layers, d_model, heads, kv, vocab)
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163_840),
+    "qwen2-72b": (80, 8192, 64, 8, 152_064),
+    "xlstm-350m": (24, 1024, 4, 4, 50_304),
+    "llama-3.2-vision-90b": (100, 8192, 64, 8, 128_256),
+    "internlm2-1.8b": (24, 2048, 16, 8, 92_544),
+    "zamba2-1.2b": (38, 2048, 32, 32, 32_000),
+    "dbrx-132b": (40, 6144, 48, 8, 100_352),
+    "phi4-mini-3.8b": (32, 3072, 24, 8, 200_064),
+    "gemma3-12b": (48, 3840, 16, 8, 262_144),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 256_206),
+}
+
+PARAM_RANGES = {  # billions, generous brackets around the nameplate size
+    "kimi-k2-1t-a32b": (900, 1150),
+    "qwen2-72b": (70, 76),
+    "xlstm-350m": (0.3, 0.5),
+    "llama-3.2-vision-90b": (85, 96),
+    "internlm2-1.8b": (1.6, 2.1),
+    "zamba2-1.2b": (0.9, 1.4),
+    "dbrx-132b": (125, 138),
+    "phi4-mini-3.8b": (3.5, 4.2),
+    "gemma3-12b": (11, 13),
+    "seamless-m4t-large-v2": (1.6, 2.4),
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_assigned_spec(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, v = EXPECTED_SPECS[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.vocab_size == v
+    assert len(cfg.layers) == L
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_count_matches_nameplate(arch):
+    lo, hi = PARAM_RANGES[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert 25 <= kimi.active_param_count() / 1e9 <= 40      # "a32b"
+    dbrx = get_config("dbrx-132b")
+    assert 30 <= dbrx.active_param_count() / 1e9 <= 45
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 2 or (arch == "zamba2-1.2b" and r.n_layers <= 6)
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.vocab_size <= 512
+
+
+def test_qwen2_bias_and_gemma_window():
+    assert get_config("qwen2-72b").qkv_bias
+    g = get_config("gemma3-12b")
+    windows = [l.window for l in g.layers]
+    assert windows.count(None) == 8 and windows.count(1024) == 40  # 5:1
+
+
+def test_long_500k_applicability():
+    shape = SHAPES["long_500k"]
+    runs = {a for a in ASSIGNED if shape_applicable(get_config(a), shape)[0]}
+    assert runs == {"xlstm-350m", "zamba2-1.2b", "gemma3-12b"}
+    for a in ASSIGNED:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), SHAPES[s])[0]
+
+
+def test_vicuna_present():
+    assert CONFIGS["vicuna-7b"].n_layers == 32
+    assert CONFIGS["vicuna-13b"].hat_shallow_layers == 3

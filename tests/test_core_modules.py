@@ -1,0 +1,111 @@
+"""Chunking (Eq. 3), monitoring (Eqs. 1-2), parallel drafting (Eq. 6)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DelayPredictor,
+    Ewma,
+    StateMonitor,
+    chunk_offsets,
+    chunk_prompt,
+    optimal_chunk_size,
+    parallel_draft_steps,
+)
+
+
+def test_ewma_matches_eq1():
+    e = Ewma(alpha=0.8)
+    e.update(10.0)
+    assert e.get() == 10.0
+    e.update(20.0)
+    assert abs(e.get() - (0.8 * 10 + 0.2 * 20)) < 1e-9
+
+
+def test_delay_predictor_learns_linear():
+    g = DelayPredictor(alpha=0.5)
+    for t in (64, 256, 1024, 4096):
+        for _ in range(5):
+            g.update(t, 0.01 + t * 1e-5)
+    for t in (128, 512, 2048):
+        pred = g.predict(t)
+        true = 0.01 + t * 1e-5
+        assert abs(pred - true) / true < 0.6
+    # extrapolates monotonically
+    assert g.predict(8192) > g.predict(4096)
+
+
+def test_chunk_prompt_invariants():
+    for plen in (1, 17, 128, 1000):
+        for cs in (1, 32, 128, 2048):
+            chunks = chunk_prompt(plen, cs)
+            assert sum(chunks) == plen
+            assert all(0 < c <= cs for c in chunks)
+            offs = chunk_offsets(chunks)
+            assert offs[0] == 0 and offs[-1] + chunks[-1] == plen
+
+
+def _g_affine(base, slope):
+    return lambda t: base + slope * t
+
+
+def test_eq3_balances_upload_and_compute():
+    A, beta, P = 8192.0, 8e6, 4
+    g = _g_affine(0.04, 1.4e-4)
+    x = optimal_chunk_size(
+        prompt_len=2048, hidden_bytes_per_token=A, beta_up=beta,
+        g=g, mu=64, pipeline_len=P, align=1, min_chunk=1,
+    )
+    lhs = x * A / beta
+    rhs = (g(64) + g(64 + x)) / P
+    assert abs(lhs - rhs) / rhs < 0.1      # crossing found
+
+
+def test_eq3_monotonicity():
+    g = _g_affine(0.04, 1.4e-4)
+    common = dict(prompt_len=4096, hidden_bytes_per_token=8192.0,
+                  g=g, mu=64, pipeline_len=4)
+    fast = optimal_chunk_size(beta_up=20e6, **common)
+    slow = optimal_chunk_size(beta_up=2e6, **common)
+    assert fast >= slow                    # faster uplink -> larger chunks
+    p1 = optimal_chunk_size(beta_up=8e6, pipeline_len=1,
+                            **{k: v for k, v in common.items() if k != "pipeline_len"})
+    p8 = optimal_chunk_size(beta_up=8e6, pipeline_len=8,
+                            **{k: v for k, v in common.items() if k != "pipeline_len"})
+    assert p1 >= p8                        # deeper pipeline -> smaller chunks OK
+
+
+def test_eq3_cold_start_and_clamping():
+    x = optimal_chunk_size(
+        prompt_len=1000, hidden_bytes_per_token=8192, beta_up=8e6,
+        g=lambda t: 0.0, mu=0,
+    )
+    assert x == 128                        # cold-start fallback
+    x2 = optimal_chunk_size(
+        prompt_len=40, hidden_bytes_per_token=8192, beta_up=8e6,
+        g=_g_affine(0.04, 1e-4), mu=0,
+    )
+    assert x2 <= 40 + 8                    # never (much) beyond the prompt
+
+
+def test_eq6_parallel_draft_steps():
+    n = parallel_draft_steps(
+        draft_len=4, hidden_bytes_per_token=8192, beta_up=8e6,
+        beta_down=12e6, g_mu=0.045, gamma=0.01,
+    )
+    rt = 4 * 8192 / 8e6 + 0.045 + 4 * 8192 / 12e6
+    assert n == int(rt / 0.01)
+    assert parallel_draft_steps(
+        draft_len=4, hidden_bytes_per_token=8192, beta_up=8e6,
+        beta_down=12e6, g_mu=0.045, gamma=1e9,
+    ) == 0
+
+
+def test_state_monitor_roundtrip():
+    m = StateMonitor(alpha=0.8)
+    for i in range(20):
+        m.record_batch(100 + i, 0.02 + i * 1e-4)
+        m.record_device(3, gamma=0.005, beta_up=8e6, beta_down=12e6)
+    assert 100 < m.mu.get() < 120
+    assert m.predict_delay() > 0
+    d = m.device(3)
+    assert abs(d.beta_up.get() - 8e6) < 1.0

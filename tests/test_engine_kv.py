@@ -1,0 +1,84 @@
+"""Batched cloud engine + KV capacity manager."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import split_model
+from repro.serving import CloudEngine, EngineJob, KVBudget, SlotKVManager
+from conftest import reduced_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg, model, params = reduced_model("internlm2-1.8b")
+    return cfg, model, params, split_model(cfg, params)
+
+
+def test_kv_manager_accounting():
+    kv = SlotKVManager(2, 256, KVBudget(block_tokens=64, total_blocks=7))
+    assert kv.can_admit(128)
+    kv.admit(0, 128)                         # 2 blocks
+    assert kv.budget.used_blocks == 2
+    kv.admit(1, 256)                         # 4 blocks
+    assert not kv.can_admit(64)              # out of slots
+    assert kv.extend(0, 192)                 # 3 blocks now
+    assert kv.budget.used_blocks == 7
+    assert not kv.extend(0, 256)             # would need an 8th block
+    kv.release(1)
+    assert kv.budget.used_blocks == 3
+    assert kv.can_admit(64)
+
+
+def test_engine_chunked_prefill_matches_direct(setup):
+    cfg, model, params, sp = setup
+    eng = CloudEngine(sp, n_slots=4, max_len=64, max_batch_tokens=32)
+    rng = np.random.default_rng(0)
+    for rid, plen in [(0, 20), (1, 13)]:
+        assert eng.add_request(rid, plen + 16)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, plen))[None]
+        shallow, _, _ = sp.input_model.apply(sp.input_params, toks, return_hidden=True)
+        ref, _, _ = sp.middle_model.apply(
+            sp.middle_params, None, inputs_embeds=shallow, return_hidden=True
+        )
+        sh = np.asarray(shallow[0], np.float32)
+        outs = []
+        for off in range(0, plen, 8):
+            eng.submit(EngineJob(rid, sh[off:off + 8], off, "prefill"))
+            for r in eng.drain():
+                outs.append(r.deep)
+        err = float(np.abs(np.concatenate(outs, 0) - np.asarray(ref[0])).max())
+        assert err < 1e-3
+
+
+def test_engine_batches_multiple_slots(setup):
+    cfg, model, params, sp = setup
+    eng = CloudEngine(sp, n_slots=4, max_len=64, max_batch_tokens=64)
+    rng = np.random.default_rng(1)
+    refs = {}
+    for rid, plen in [(0, 10), (1, 6)]:
+        eng.add_request(rid, 40)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, plen))[None]
+        sh, _, _ = sp.input_model.apply(sp.input_params, toks, return_hidden=True)
+        refs[rid], _, _ = sp.middle_model.apply(
+            sp.middle_params, None, inputs_embeds=sh, return_hidden=True
+        )
+        eng.submit(EngineJob(rid, np.asarray(sh[0]), 0, "prefill"))
+    res = eng.step()
+    assert len(res) == 2 and eng.steps == 1          # ONE batched iteration
+    for r in res:
+        err = float(np.abs(r.deep - np.asarray(refs[r.req_id][0])).max())
+        assert err < 1e-3
+
+
+def test_engine_budget_splits_batches(setup):
+    cfg, model, params, sp = setup
+    eng = CloudEngine(sp, n_slots=4, max_len=64, max_batch_tokens=8)
+    rng = np.random.default_rng(2)
+    for rid in (0, 1):
+        eng.add_request(rid, 40)
+        sh = rng.normal(size=(12, cfg.d_model)).astype(np.float32)
+        eng.submit(EngineJob(rid, sh, 0, "prefill"))
+    eng.drain()
+    assert eng.steps == 2                            # budget forced two rounds
+    assert max(eng.batched_token_history) <= 12

@@ -1,0 +1,126 @@
+"""Perf-iteration variants must be EXACT vs the baseline implementations
+(EXPERIMENTS.md §Perf): chunkwise SSM forms, shard_map MoE, microbatched
+train step, cache-native attention layout."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from conftest import reduced_model
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "zamba2-1.2b"])
+def test_chunkwise_ssm_equals_scan(arch, key):
+    cfg, model, params = reduced_model(arch)
+    toks = jax.random.randint(key, (2, 33), 0, cfg.vocab_size)
+    os.environ["REPRO_SSM_CHUNK"] = "0"
+    jax.clear_caches()
+    base, _, _ = model.apply(params, toks)
+    try:
+        os.environ["REPRO_SSM_CHUNK"] = "16"
+        jax.clear_caches()
+        opt, _, _ = model.apply(params, toks)
+    finally:
+        os.environ["REPRO_SSM_CHUNK"] = "0"
+    assert float(jnp.max(jnp.abs(base - opt))) < 5e-4
+
+
+def test_chunkwise_ssm_cache_continuation(key):
+    """Chunked prefill with chunkwise SSM still matches the full forward."""
+    cfg, model, params = reduced_model("zamba2-1.2b")
+    toks = jax.random.randint(key, (1, 24), 0, cfg.vocab_size)
+    try:
+        os.environ["REPRO_SSM_CHUNK"] = "8"
+        jax.clear_caches()
+        full, _, _ = model.apply(params, toks)
+        cache = model.init_cache(params, 1, 32)
+        outs, off = [], 0
+        for ch in (toks[:, :10], toks[:, 10:17], toks[:, 17:]):
+            lg, cache, _ = model.apply(params, ch, cache=cache, offset=off)
+            outs.append(lg)
+            off += ch.shape[1]
+        err = float(jnp.max(jnp.abs(full - jnp.concatenate(outs, 1))))
+    finally:
+        os.environ["REPRO_SSM_CHUNK"] = "0"
+        jax.clear_caches()
+    assert err < 5e-4
+
+
+def test_shardmap_moe_equals_pjit(key):
+    from repro.distributed.sharding import make_rules, use_rules
+
+    cfg, model, params = reduced_model("dbrx-132b")
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    base, _, aux0 = model.apply(params, toks)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    try:
+        os.environ["REPRO_MOE_SHARDMAP"] = "1"
+        jax.clear_caches()
+        with mesh, use_rules(make_rules(mesh)):
+            opt, _, aux1 = model.apply(params, toks)
+    finally:
+        os.environ["REPRO_MOE_SHARDMAP"] = "0"
+        jax.clear_caches()
+    assert float(jnp.max(jnp.abs(base - opt))) < 3e-4
+    assert float(jnp.abs(aux0 - aux1)) < 1e-4
+
+
+def test_kv_layout_baseline_switch(key):
+    """REPRO_KV_TRANSPOSE=1 (baseline transpose path) must agree with the
+    optimized cache-native layout."""
+    import subprocess
+    import sys
+
+    code = """
+import os, jax, jax.numpy as jnp, sys
+sys.path.insert(0, "src")
+from repro.configs import get_config
+from repro.models import Model
+cfg = get_config("internlm2-1.8b").reduced()
+m = Model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+cache = m.init_cache(params, 1, 16)
+lg, _, _ = m.apply(params, toks, cache=cache, offset=0)
+print(float(jnp.sum(jnp.abs(lg))))
+"""
+    outs = []
+    for env_val in ("0", "1"):
+        env = dict(os.environ, REPRO_KV_TRANSPOSE=env_val)
+        r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                           text=True, env=env, cwd=os.path.join(os.path.dirname(__file__), ".."))
+        assert r.returncode == 0, r.stderr[-500:]
+        outs.append(float(r.stdout.strip().splitlines()[-1]))
+    assert outs[0] == pytest.approx(outs[1], rel=1e-4)
+
+
+def test_microbatch_equals_full_batch(key):
+    from repro.configs.base import InputShape
+    from repro.launch.steps import build_step, make_optimizer
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("internlm2-1.8b").reduced()
+    small = InputShape("train_4k", seq_len=32, global_batch=4, kind="train")
+    results = {}
+    for mb in (None, 2):
+        built = build_step(cfg, small, mesh, dtype=jnp.float32, microbatch=mb)
+        fn = jax.jit(built.fn, in_shardings=built.in_shardings)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = make_optimizer(cfg)
+        toks = jnp.asarray(
+            np.asarray(jax.random.randint(key, (4, 32), 0, cfg.vocab_size))
+        )
+        with mesh:
+            p2, _, loss = fn(params, opt.init(params), {"tokens": toks})
+        results[mb] = (float(loss), p2)
+    assert results[None][0] == pytest.approx(results[2][0], rel=1e-4)
+    d = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(results[None][1]), jax.tree.leaves(results[2][1]))
+    )
+    assert d < 1e-4

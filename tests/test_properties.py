@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunking import chunk_offsets, chunk_prompt, optimal_chunk_size
+from repro.core.monitor import Ewma
+from repro.core.speculative import accept_greedy_rows
+from repro.data import BPETokenizer, ByteTokenizer
+from repro.models.layers import attend
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@given(plen=st.integers(1, 5000), cs=st.integers(1, 4096))
+@settings(**SETTINGS)
+def test_chunk_prompt_partitions(plen, cs):
+    chunks = chunk_prompt(plen, cs)
+    assert sum(chunks) == plen
+    assert all(0 < c <= cs for c in chunks)
+    assert chunk_offsets(chunks)[-1] + chunks[-1] == plen
+    assert len(chunks) == -(-plen // cs)
+
+
+@given(
+    draft=st.lists(st.integers(0, 31), min_size=1, max_size=8),
+    greedy=st.lists(st.integers(0, 31), min_size=9, max_size=9),
+)
+@settings(**SETTINGS)
+def test_accept_greedy_rows_properties(draft, greedy):
+    k = len(draft)
+    rows = np.full((k + 1, 32), -1e9, np.float32)
+    for i, t in enumerate(greedy[: k + 1]):
+        rows[i, t] = 1.0
+    n, nxt = accept_greedy_rows(np.asarray(draft), rows)
+    assert 0 <= n <= k
+    assert draft[:n] == greedy[:n]                   # accepted prefix matches
+    if n < k:
+        assert draft[n] != greedy[n]                 # first reject diverges
+    assert nxt == greedy[n]                          # bonus = LLM's token
+
+
+@given(
+    samples=st.lists(st.floats(0.1, 1e3), min_size=1, max_size=30),
+    alpha=st.floats(0.0, 1.0),
+)
+@settings(**SETTINGS)
+def test_ewma_stays_in_range(samples, alpha):
+    e = Ewma(alpha=alpha)
+    for s in samples:
+        e.update(s)
+    assert min(samples) - 1e-6 <= e.get() <= max(samples) + 1e-6
+
+
+@given(
+    beta=st.floats(1e5, 1e8),
+    base=st.floats(1e-3, 0.2),
+    slope=st.floats(1e-6, 1e-3),
+    plen=st.integers(64, 8192),
+)
+@settings(**SETTINGS)
+def test_optimal_chunk_size_bounds(beta, base, slope, plen):
+    x = optimal_chunk_size(
+        prompt_len=plen, hidden_bytes_per_token=8192.0, beta_up=beta,
+        g=lambda t: base + slope * t, mu=64, pipeline_len=4,
+    )
+    assert 8 <= x <= max(4096, plen)
+
+
+@given(st.text(max_size=120))
+@settings(**SETTINGS)
+def test_byte_tokenizer_roundtrip(text):
+    bt = ByteTokenizer()
+    assert bt.decode(bt.encode(text)) == text
+
+
+@given(st.text(alphabet="abcdef ", min_size=0, max_size=60))
+@settings(max_examples=15, deadline=None)
+def test_bpe_roundtrip(text):
+    bpe = BPETokenizer(300).train(["abc abd abe fed " * 10])
+    assert bpe.decode(bpe.encode(text)) == text
+
+
+@given(
+    t=st.integers(1, 8),
+    s_extra=st.integers(0, 16),
+    window=st.one_of(st.none(), st.integers(2, 12)),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=20, deadline=None)
+def test_attend_causality(t, s_extra, window, seed):
+    """Perturbing masked (future / out-of-window / invalid) KV slots never
+    changes the attention output."""
+    B, nh, nkv, hd = 1, 2, 1, 8
+    S = t + s_extra + 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, t, nh, hd))
+    k = jax.random.normal(ks[1], (B, S, nkv, hd))
+    v = jax.random.normal(ks[2], (B, S, nkv, hd))
+    off = 2
+    q_pos = off + jnp.arange(t)
+    k_pos = jnp.arange(S)
+    out = attend(q, k, v, q_pos=q_pos, k_pos=k_pos, window=window)
+    # perturb strictly-future slots
+    fut = k_pos > (off + t - 1)
+    noise = jax.random.normal(ks[3], (B, S, nkv, hd)) * fut[None, :, None, None]
+    out2 = attend(q, k + noise, v + 3 * noise, q_pos=q_pos, k_pos=k_pos, window=window)
+    assert float(jnp.max(jnp.abs(out - out2))) < 1e-5

@@ -1,0 +1,111 @@
+"""Speculative decoding: losslessness, threshold stop, rollback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DraftModel,
+    accept_greedy_rows,
+    draft_until_threshold,
+    init_adapter,
+    restore_states,
+    snapshot_states,
+    split_model,
+)
+from repro.serving import RealBackend, Request
+from conftest import reduced_model
+
+
+def _greedy_reference(model, params, prompt, n_new, max_len=128):
+    cache = model.init_cache(params, 1, max_len)
+    lg, cache, _ = model.apply(params, prompt[None], cache=cache, offset=0)
+    out = [int(lg[0, -1].argmax())]
+    off = prompt.shape[0]
+    while len(out) < n_new:
+        lg, cache, _ = model.apply(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache=cache, offset=off
+        )
+        off += 1
+        out.append(int(lg[0, -1].argmax()))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "xlstm-350m", "zamba2-1.2b"])
+def test_speculative_losslessness(arch, key):
+    """HAT's U-shaped speculative pipeline must emit EXACTLY the full model's
+    greedy continuation — attention archs (positional rollback) and SSM
+    archs (state snapshot + re-advance) alike."""
+    cfg, model, params = reduced_model(arch)
+    sp = split_model(cfg, params)
+    ad, _ = init_adapter(cfg, jax.random.fold_in(key, 7))
+    be = RealBackend(sp, adapter_params=ad, max_len=128)
+    prompt = jnp.asarray(
+        jax.random.randint(key, (16,), 0, cfg.vocab_size), jnp.int32
+    )
+    req = Request(req_id=0, device_id=0, arrival_s=0, prompt_len=16,
+                  max_new_tokens=10, prompt=np.asarray(prompt))
+    out = [be.first_token(req)]
+    while len(out) < 10:
+        d = be.draft(req, 5)
+        n, bonus = be.verify(req, d)
+        out.extend(list(d[:n]) + [bonus])
+    assert out[:10] == _greedy_reference(model, params, prompt, 10)
+
+
+def test_accept_greedy_rows_unit():
+    V = 16
+
+    def rows(tokens):
+        r = np.full((len(tokens), V), -1e9, np.float32)
+        for i, t in enumerate(tokens):
+            r[i, t] = 1.0
+        return r
+
+    # all accepted
+    n, nxt = accept_greedy_rows(np.array([3, 5, 7]), rows([3, 5, 7, 9]))
+    assert (n, nxt) == (3, 9)
+    # first divergence
+    n, nxt = accept_greedy_rows(np.array([3, 5, 7]), rows([3, 6, 7, 9]))
+    assert (n, nxt) == (1, 6)
+    # none accepted
+    n, nxt = accept_greedy_rows(np.array([3]), rows([4, 9]))
+    assert (n, nxt) == (0, 4)
+
+
+def test_threshold_stops_drafting(key):
+    cfg, model, params = reduced_model("internlm2-1.8b")
+    sp = split_model(cfg, params)
+    ad, _ = init_adapter(cfg, key)
+    dm = DraftModel(sp, ad)
+    cache = dm.init_cache(1, 64)
+    prompt = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+    _, cache, _ = dm.forward(prompt, cache=cache, offset=0)
+    last = jnp.argmax(dm.forward(prompt, cache=None, offset=0)[0][:, -1:], -1)
+    # eta=1.01 can never be met -> exactly one draft step
+    res, _, _ = draft_until_threshold(
+        dm, cache, last.astype(jnp.int32), 8, eta=1.01, max_draft=6
+    )
+    assert res.steps == 1
+    # eta=0 -> runs to max_draft
+    cache2 = dm.init_cache(1, 64)
+    _, cache2, _ = dm.forward(prompt, cache=cache2, offset=0)
+    res2, _, _ = draft_until_threshold(
+        dm, cache2, last.astype(jnp.int32), 8, eta=0.0, max_draft=6
+    )
+    assert res2.steps == 6
+    assert res2.topk_last.shape == (4,)
+
+
+def test_ssm_snapshot_restore(key):
+    cfg, model, params = reduced_model("xlstm-350m")
+    cache = model.init_cache(params, 1, 32)
+    toks = jax.random.randint(key, (1, 6), 0, cfg.vocab_size)
+    _, cache1, _ = model.apply(params, toks, cache=cache, offset=0)
+    snap = snapshot_states(cache1)
+    _, cache2, _ = model.apply(params, toks, cache=cache1, offset=6)
+    cache3 = restore_states(cache2, snap)
+    s1 = jax.tree.leaves(snapshot_states(cache1))
+    s3 = jax.tree.leaves(snapshot_states(cache3))
+    for a, b in zip(s1, s3):
+        assert jnp.array_equal(a, b)

@@ -1,0 +1,104 @@
+"""U-shaped split + adapter/distillation correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.core import (
+    DraftModel,
+    adapter_param_count,
+    derive_configs,
+    init_adapter,
+    make_distill_step,
+    split_model,
+)
+from repro.training import AdamW
+from conftest import reduced_model
+
+TOL = 2e-4
+
+
+def _memory(cfg, model, params, key, B):
+    if cfg.frontend == "vision":
+        return jax.random.normal(key, (B, 8, cfg.d_model))
+    if cfg.is_encoder_decoder:
+        return model.encode(params, jax.random.normal(key, (B, 8, cfg.d_model)))
+    return None
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_split_equals_full(arch, key):
+    cfg, model, params = reduced_model(arch)
+    sp = split_model(cfg, params)
+    B, T = 2, 12
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    memory = _memory(cfg, model, params, key, B)
+    full, _, _ = model.apply(params, tokens, memory=memory)
+    shallow, _, _ = sp.device_forward(tokens, memory=memory)
+    deep, _, _ = sp.middle_forward(shallow, memory=memory)
+    err = float(jnp.max(jnp.abs(full - sp.head_logits(deep))))
+    assert err < TOL, f"{arch}: split path diverges by {err}"
+
+
+def test_derive_configs_partition():
+    from repro.configs import get_config
+
+    cfg = get_config("gemma3-12b")
+    cin, cmid = derive_configs(cfg)
+    assert cin.n_layers + cmid.n_layers == cfg.n_layers
+    assert cin.layers == cfg.layers[: cfg.hat_shallow_layers]
+    assert cmid.layers == cfg.layers[cfg.hat_shallow_layers:]
+    assert not cmid.include_embed and not cmid.include_head
+
+
+def test_adapter_is_lightweight():
+    from repro.configs import get_config
+
+    for arch, medusa_ratio in (("vicuna-7b", 5), ("vicuna-13b", 5)):
+        cfg = get_config(arch)
+        n_adapter = adapter_param_count(cfg)
+        # Table 4: HAT trains ~1 order of magnitude fewer params than Medusa
+        from repro.serving import medusa_param_count
+
+        assert n_adapter * medusa_ratio < medusa_param_count(cfg)
+        assert n_adapter < 0.03 * cfg.param_count()
+
+
+def test_draft_model_shapes(key):
+    cfg, model, params = reduced_model("internlm2-1.8b")
+    sp = split_model(cfg, params)
+    ad, _ = init_adapter(cfg, key)
+    dm = DraftModel(sp, ad)
+    cache = dm.init_cache(1, 32)
+    logits, cache, shallow = dm.forward(
+        jax.random.randint(key, (1, 5), 0, cfg.vocab_size), cache=cache, offset=0
+    )
+    assert logits.shape == (1, 5, cfg.vocab_size)
+    assert shallow.shape == (1, 5, cfg.d_model)
+
+
+def test_distillation_improves_agreement(key, rng):
+    from repro.data import markov_corpus, token_batches
+    from repro.training import train_loop
+    from repro.models import Model
+    from repro.configs import get_config
+
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = Model(cfg)
+    params = model.init(key)
+    corpus = markov_corpus(rng, cfg.vocab_size, 12_000)
+    params, _ = train_loop(model, params, AdamW(lr=3e-3),
+                           token_batches(rng, corpus, 8, 32),
+                           max_steps=30, log_every=0)
+    sp = split_model(cfg, params)
+    ad, _ = init_adapter(cfg, jax.random.fold_in(key, 3))
+    opt = AdamW(lr=1e-3)
+    step = make_distill_step(sp, model, params, opt)
+    ost = opt.init(ad)
+    first = None
+    for i, b in zip(range(60), token_batches(rng, corpus, 8, 32)):
+        ad, ost, metrics = step(ad, ost, jnp.asarray(b["tokens"][:, :32]))
+        first = first or {k: float(v) for k, v in metrics.items()}
+    assert float(metrics["loss"]) < first["loss"] * 0.7
+    assert float(metrics["agree"]) > first["agree"]

@@ -1,0 +1,116 @@
+"""Optimizers, checkpointing, tokenizers, workloads."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    CNN_DM,
+    SPECBENCH,
+    BPETokenizer,
+    ByteTokenizer,
+    markov_corpus,
+    sample_workload,
+    token_batches,
+)
+from repro.training import (
+    AdamW,
+    Adafactor,
+    SGD,
+    clip_by_global_norm,
+    cosine_schedule,
+    load_checkpoint,
+    save_checkpoint,
+    train_loop,
+)
+from conftest import reduced_model
+
+
+def _quadratic_min(opt, steps=400):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(steps):
+        grads = jax.grad(loss)(params)
+        ups, state = opt.update(grads, state, params)
+        params = jax.tree.map(lambda a, u: a + u, params, ups)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize("opt", [
+    AdamW(lr=0.1), Adafactor(lr=0.3), SGD(lr=0.1, momentum=0.9),
+])
+def test_optimizers_minimize(opt):
+    assert _quadratic_min(opt) < 0.05
+
+
+def test_adafactor_factored_state_is_small():
+    opt = Adafactor(lr=1e-2, min_dim_size_to_factor=4)
+    params = {"w": jnp.zeros((128, 256))}
+    st = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(st["f"]))
+    assert n_state == 128 + 256              # factored, not 128*256
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(5)) == pytest.approx(0.5)
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_training_reduces_loss(rng, key):
+    cfg, model, params = reduced_model("phi4-mini-3.8b")
+    corpus = markov_corpus(np.random.default_rng(1), cfg.vocab_size, 12_000)
+    params2, res = train_loop(
+        model, params, AdamW(lr=3e-3),
+        token_batches(np.random.default_rng(2), corpus, 8, 32),
+        max_steps=40, log_every=0,
+    )
+    assert res.losses[-1] < res.losses[0] - 0.5
+
+
+def test_checkpoint_roundtrip(key):
+    cfg, model, params = reduced_model("internlm2-1.8b")
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, step=7)
+        restored = load_checkpoint(d, params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            assert jnp.array_equal(a, b)
+        from repro.training import checkpoint_step
+
+        assert checkpoint_step(d) == 7
+
+
+def test_workload_stats_match_table3():
+    rng = np.random.default_rng(0)
+    for spec, mean, p90 in ((SPECBENCH, 351.2, 891.0), (CNN_DM, 1036.6, 1772.0)):
+        reqs = sample_workload(spec, rng, n_requests=4000, rate_per_s=6)
+        lens = np.array([r.prompt_len for r in reqs])
+        assert abs(lens.mean() - mean) / mean < 0.15
+        assert abs(np.percentile(lens, 90) - p90) / p90 < 0.2
+        # Poisson arrivals: increasing times
+        ts = [r.arrival_s for r in reqs]
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+def test_markov_corpus_is_learnable_structure():
+    rng = np.random.default_rng(0)
+    c = markov_corpus(rng, 256, 5000)
+    assert c.min() >= 3 and c.max() < 256
+    # strong bigram structure: repeated bigrams far above uniform chance
+    bigrams = set(zip(c[:-1], c[1:]))
+    assert len(bigrams) < 0.5 * len(c)
