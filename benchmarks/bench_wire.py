@@ -1,0 +1,77 @@
+"""Wire-codec sweep: HAT fleet TTFT/TBT vs transport codec × uplink rate.
+
+The wire subsystem's headline artifact: per-token-quantized hidden-state
+transport (repro.wire) shrinks A = bytes/token, which (a) cuts chunk upload
+time directly and (b) lets the Eq. 3 solver pick larger chunks on the same
+link.  Rows report both effects; the final row pins the acceptance anchor —
+int8 cuts TTFT ≥ 25% vs the fp16 wire at 5 MB/s uplink.
+
+    PYTHONPATH=src python benchmarks/bench_wire.py            # full sweep
+    PYTHONPATH=src python benchmarks/bench_wire.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from common import emit, fleet_run, n_requests
+
+CODECS = ["fp16", "bf16-trunc", "int8", "int4"]
+BWS_MBPS = [2.5, 5.0, 10.0]
+D_MODEL = 4096                       # vicuna-7b (paper anchor: fp16 = 8 KiB/tok)
+
+
+def _one(codec: str, bw_mbps: float, n: int):
+    from repro.data import SPECBENCH
+
+    m = fleet_run(
+        "hat", SPECBENCH, rate=6.0, n=n,
+        overrides=dict(
+            wire_codec=codec,
+            uplink_bps=bw_mbps * 1e6,
+            downlink_bps=2.0 * bw_mbps * 1e6,
+        ),
+    )
+    s = m.summary()
+    chunks = [max(r.chunk_sizes) for r in m.requests if r.chunk_sizes]
+    return s, float(np.mean(chunks)) if chunks else 0.0
+
+
+def main(argv=None) -> None:
+    from repro.wire import get_codec
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (fp16/int8 at 5 MB/s)")
+    args, _ = ap.parse_known_args(argv)
+
+    codecs = ["fp16", "int8"] if args.smoke else CODECS
+    bws = [5.0] if args.smoke else BWS_MBPS
+    n = 20 if args.smoke else n_requests(60, 300)
+
+    ttft = {}
+    for bw in bws:
+        for codec in codecs:
+            s, chunk = _one(codec, bw, n)
+            ttft[(codec, bw)] = s["ttft_mean_ms"]
+            bpt = get_codec(codec).bytes_per_token(D_MODEL)
+            emit(
+                f"wire_{codec}_{bw:g}MBps",
+                s["ttft_mean_ms"] * 1e3,          # TTFT in us_per_call slot
+                f"tbt_ms={s['tbt_mean_ms']:.1f};accept={s['accept_length']:.2f};"
+                f"chunk={chunk:.0f};B_per_tok={bpt:.0f}",
+            )
+
+    anchor_bw = 5.0
+    if ("fp16", anchor_bw) in ttft and ("int8", anchor_bw) in ttft:
+        cut = 1.0 - ttft[("int8", anchor_bw)] / ttft[("fp16", anchor_bw)]
+        emit("wire_int8_ttft_cut_5MBps", 0.0, f"{cut:.1%}")
+        if cut < 0.25:
+            raise SystemExit(
+                f"int8 wire TTFT cut {cut:.1%} < 25% acceptance bar at 5 MB/s"
+            )
+
+
+if __name__ == "__main__":
+    main()

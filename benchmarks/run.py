@@ -23,6 +23,7 @@ MODULES = [
     ("table4", "bench_table4_sd"),
     ("table5", "bench_table5_ablation"),
     ("fig1112", "bench_fig1112_pipeline"),
+    ("wire", "bench_wire"),
     ("kernels", "bench_kernels"),
     ("roofline", "bench_roofline"),
 ]

@@ -24,7 +24,7 @@ def fleet_comparison(args):
                            rate_per_s=args.rate, with_tokens=args.real)
 
     backend = None
-    hidden = 4096 * 2
+    d_model = 4096
     if args.real:
         import jax
 
@@ -51,7 +51,7 @@ def fleet_comparison(args):
         for i, b in zip(range(60), token_batches(np.random.default_rng(3), corpus, 8, 32)):
             adapter, ost, _ = dstep(adapter, ost, jnp.asarray(b["tokens"][:, :32]))
         medusa, _ = init_medusa(cfg, jax.random.PRNGKey(8))
-        hidden = cfg.d_model * 2
+        d_model = cfg.d_model
 
         def make_backend(fw):
             from repro.serving import RealBackend
@@ -61,16 +61,23 @@ def fleet_comparison(args):
                 adapter_params=adapter if fw == "hat" else None,
                 medusa_params=medusa if fw == "u-medusa" else None,
                 max_len=512,
+                wire_codec=args.wire_codec,
             )
     else:
         def make_backend(fw):
             return None
 
+    from repro.wire import get_codec
+
+    bpt = get_codec(args.wire_codec).bytes_per_token(d_model)
+    print(f"wire codec {args.wire_codec}: {bpt:.0f} B/token on the link")
     print(f"{'framework':12s} {'TTFT(ms)':>10s} {'TBT(ms)':>9s} "
           f"{'accept':>7s} {'cloud(ms)':>12s}")
     for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
         m = run_fleet(fw, reqs, rng=np.random.default_rng(9),
-                      pipeline_len=args.pipeline_len, hidden_bytes=hidden,
+                      pipeline_len=args.pipeline_len,
+                      wire_codec=args.wire_codec,
+                      overrides={"d_model": d_model},
                       backend=make_backend(fw))
         s = m.summary()
         print(f"{fw:12s} {s['ttft_mean_ms']:10.1f} {s['tbt_mean_ms']:9.1f} "
@@ -80,13 +87,16 @@ def fleet_comparison(args):
 
 def engine_demo(args):
     """The real batched cloud engine: several requests chunk-prefill and
-    decode concurrently through slot-batched middle-model steps."""
+    decode concurrently through slot-batched middle-model steps.  All
+    hidden states cross as serialized wire frames (repro.wire), encoded
+    with ``--wire-codec`` on the uplink and the downlink."""
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.core import split_model
-    from repro.serving import CloudEngine, EngineJob
+    from repro.serving import CloudEngine
+    from repro.wire import Frame, decode_hidden, encode_hidden, get_codec
 
     cfg = get_config(args.arch).reduced()
     from repro.models import Model
@@ -94,10 +104,12 @@ def engine_demo(args):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     split = split_model(cfg, params)
-    eng = CloudEngine(split, n_slots=4, max_len=128, max_batch_tokens=48)
+    eng = CloudEngine(split, n_slots=4, max_len=128, max_batch_tokens=48,
+                      wire_codec=args.wire_codec)
+    codec = get_codec(args.wire_codec)
     rng = np.random.default_rng(0)
 
-    print("admitting 3 requests, chunked prefill through the batched engine")
+    print(f"admitting 3 requests, chunked prefill via {codec.name} wire frames")
     deeps = {}
     for rid, plen in [(0, 40), (1, 25), (2, 33)]:
         assert eng.add_request(rid, plen + 32)
@@ -105,11 +117,21 @@ def engine_demo(args):
         sh, _, _ = split.input_model.apply(split.input_params, toks, return_hidden=True)
         sh = np.asarray(sh[0], np.float32)
         for off in range(0, plen, 16):
-            eng.submit(EngineJob(rid, sh[off:off + 16], off, "prefill"))
+            eng.submit_frame(encode_hidden(
+                codec, sh[off:off + 16], req_id=rid, offset=off, kind="prefill",
+                want_deep=off + 16 >= plen,     # only the last chunk feeds the head
+            ))
     for r in eng.drain():
-        deeps[r.req_id] = r.deep
+        if r.deep is None:
+            continue
+        down = eng.encode_result(r)                     # deep frame, cloud->device
+        frame = Frame.from_bytes(down)
+        deeps[r.req_id] = decode_hidden(frame, cfg.d_model)
     print(f"engine ran {eng.steps} batched steps; "
           f"batched tokens per step: {eng.batched_token_history}")
+    print(f"wire: {eng.wire_bytes_in} B up, {eng.wire_bytes_out} B down "
+          f"({codec.bytes_per_token(cfg.d_model):.0f} B/token payload; "
+          f"fp16 would be {2 * cfg.d_model} B/token)")
     for rid, d in sorted(deeps.items()):
         logits = split.head_logits(jnp.asarray(d[None]))
         print(f"  req {rid}: first token {int(logits[0, -1].argmax())}")
@@ -123,6 +145,10 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--engine", action="store_true")
+    from repro.wire import CODECS
+
+    ap.add_argument("--wire-codec", default="fp16", choices=sorted(CODECS),
+                    help="hidden-state transport codec on the device-cloud wire")
     args = ap.parse_args()
     if args.engine:
         engine_demo(args)

@@ -1,11 +1,14 @@
-from .ops import attention_op, backend_kind
+from .ops import attention_op, backend_kind, dequantize_op, quantize_op
 from .prefill_attention import prefill_attention
-from .ref import attention_ref, mlstm_chunkwise_ref
+from .ref import attention_ref, dequantize_ref, mlstm_chunkwise_ref, quantize_ref
 from .verify_attention import verify_attention
+from .wire_quant import dequantize_unpack, quantize_pack
 
 __all__ = [
-    "attention_op", "backend_kind", "prefill_attention", "attention_ref",
-    "mlstm_chunkwise_ref", "verify_attention",
+    "attention_op", "backend_kind", "dequantize_op", "quantize_op",
+    "prefill_attention", "attention_ref", "dequantize_ref",
+    "mlstm_chunkwise_ref", "quantize_ref", "verify_attention",
+    "dequantize_unpack", "quantize_pack",
 ]
 from .mlstm_chunk import mlstm_chunk_kernel
 

@@ -13,8 +13,9 @@ from typing import Optional
 import jax
 
 from .prefill_attention import prefill_attention
-from .ref import attention_ref
+from .ref import attention_ref, dequantize_ref, quantize_ref
 from .verify_attention import verify_attention
+from .wire_quant import dequantize_unpack, quantize_pack
 
 VERIFY_MAX_T = 32     # below this query length, the decode-shaped kernel wins
 
@@ -46,3 +47,22 @@ def attention_op(
         q, k, v, offset, valid_len,
         window=window, causal=causal, interpret=interpret,
     )
+
+
+def quantize_op(x, *, bits: int = 8, impl: str = "auto"):
+    """[T, D] hidden rows -> (packed int8, per-token f32 scales).
+
+    Same dispatch contract as attention_op: Pallas on TPU (or interpret
+    mode for CPU validation), jnp oracle otherwise."""
+    if impl == "reference" or (impl == "auto" and backend_kind() != "tpu"):
+        return quantize_ref(x, bits=bits)
+    interpret = impl == "interpret" or backend_kind() != "tpu"
+    return quantize_pack(x, bits=bits, interpret=interpret)
+
+
+def dequantize_op(packed, scales, *, bits: int = 8, impl: str = "auto"):
+    """Invert quantize_op -> f32 [T, D]."""
+    if impl == "reference" or (impl == "auto" and backend_kind() != "tpu"):
+        return dequantize_ref(packed, scales, bits=bits)
+    interpret = impl == "interpret" or backend_kind() != "tpu"
+    return dequantize_unpack(packed, scales, bits=bits, interpret=interpret)

@@ -52,6 +52,42 @@ def attention_ref(
     return out.reshape(B, T, nh, hd).astype(q.dtype)
 
 
+def quantize_ref(x: jax.Array, *, bits: int = 8):
+    """Oracle for the wire quantize/pack kernel (wire_quant.py).
+
+    x: [T, D] float.  Per-token (row) symmetric absmax quantization; int4
+    packs value pairs split at D/2 into int8 lanes (packed[:, j] holds
+    q[:, D/2+j] in the high nibble and q[:, j] in the low nibble).
+    Returns (packed int8 [T, D or D/2], scales f32 [T, 1]) — byte-identical
+    to repro.wire.codec's numpy encoder.
+    """
+    assert bits in (4, 8)
+    qmax = 127.0 if bits == 8 else 7.0
+    x = x.astype(F32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax).astype(F32)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    if bits == 4:
+        h = q.shape[-1] // 2
+        q = (q[..., h:] << 4) | (q[..., :h] & 0xF)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(packed: jax.Array, scales: jax.Array, *, bits: int = 8):
+    """Oracle for the wire dequantize/unpack kernel.
+
+    packed: int8 [T, D] (int8 codec) or [T, D/2] (int4); scales: f32 [T, 1].
+    Returns f32 [T, D].
+    """
+    assert bits in (4, 8)
+    p = packed.astype(jnp.int32)
+    if bits == 4:
+        lo = ((p & 0xF) ^ 8) - 8
+        hi = p >> 4
+        p = jnp.concatenate([lo, hi], axis=-1)
+    return p.astype(F32) * scales
+
+
 def mlstm_chunkwise_ref(q, k, v, ig, fg, *, initial=None):
     """Oracle for the chunkwise-parallel mLSTM kernel: plain recurrence.
 

@@ -1,0 +1,131 @@
+"""Wire quantize/pack and dequantize/unpack — Pallas TPU kernels.
+
+HAT's transport codec (repro.wire) quantizes hidden-state rows on their way
+to the NIC: per-token absmax scales fused with the cast, and — for int4 —
+nibble packing of value pairs into int8 lanes.  At fleet scale this runs on
+every uploaded chunk and every downloaded deep state, so it must stream at
+HBM bandwidth rather than bounce through host numpy.
+
+Kernel shape: the work is purely elementwise along lanes with one per-row
+reduction (absmax), so the grid tiles tokens only — grid = (T/bt,) with the
+full d_model kept resident per tile.  A [bt, D] f32 tile plus its int8
+output is ~5·bt·D bytes, comfortably inside VMEM for bt=256 and D=8192.
+
+int4 packing splits the row at D/2 instead of interleaving adjacent pairs:
+``packed[:, j] = (q[:, D/2 + j] << 4) | (q[:, j] & 0xF)``.  Both halves are
+contiguous lane slices, so the pack is two shifted loads and an OR on the
+VPU — no cross-lane shuffles.  The numpy codec (repro.wire.codec) and the
+jnp oracle (ref.quantize_ref) implement the same layout; tests pin all
+three byte-identical.
+
+Validated on CPU with ``interpret=True`` against ref.quantize_ref /
+ref.dequantize_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+DEFAULT_BT = 256
+
+
+def _quantize_kernel(x_ref, p_ref, s_ref, *, bits: int):
+    x = x_ref[...].astype(F32)                        # [bt, D]
+    qmax = 127.0 if bits == 8 else 7.0
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / qmax)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    if bits == 4:
+        h = q.shape[1] // 2
+        q = (q[:, h:] << 4) | (q[:, :h] & 0xF)        # lane-slice halves
+    p_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(F32)
+
+
+def _dequantize_kernel(p_ref, s_ref, o_ref, *, bits: int):
+    p = p_ref[...].astype(jnp.int32)                  # [bt, Dp]
+    if bits == 4:
+        lo = ((p & 0xF) ^ 8) - 8                      # sign-extend low nibble
+        hi = p >> 4                                   # arithmetic shift
+        p = jnp.concatenate([lo, hi], axis=1)
+    o_ref[...] = p.astype(F32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bt", "interpret"))
+def quantize_pack(
+    x: jax.Array,              # [T, D] float hidden-state rows
+    *,
+    bits: int = 8,
+    bt: int = DEFAULT_BT,
+    interpret: bool = False,
+):
+    """Per-token absmax quantize (+ int4 nibble pack).
+
+    Returns (packed int8 [T, D] or [T, D/2], scales f32 [T, 1])."""
+    assert bits in (4, 8), bits
+    T, D = x.shape
+    if bits == 4 and D % 2:
+        raise ValueError("int4 packing requires an even d_model")
+    Dp = D if bits == 8 else D // 2
+
+    bt = min(bt, max(8, T))
+    t_pad = (-T) % bt
+    if t_pad:
+        x = jnp.pad(x, ((0, t_pad), (0, 0)))
+    n_tiles = (T + t_pad) // bt
+
+    packed, scales = pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((bt, D), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T + t_pad, Dp), jnp.int8),
+            jax.ShapeDtypeStruct((T + t_pad, 1), F32),
+        ],
+        interpret=interpret,
+    )(x)
+    return packed[:T], scales[:T]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bt", "interpret"))
+def dequantize_unpack(
+    packed: jax.Array,         # int8 [T, D] (int8) or [T, D/2] (int4)
+    scales: jax.Array,         # f32 [T, 1]
+    *,
+    bits: int = 8,
+    bt: int = DEFAULT_BT,
+    interpret: bool = False,
+) -> jax.Array:
+    """Invert quantize_pack -> f32 [T, D]."""
+    assert bits in (4, 8), bits
+    T, Dp = packed.shape
+    D = Dp if bits == 8 else 2 * Dp
+
+    bt = min(bt, max(8, T))
+    t_pad = (-T) % bt
+    if t_pad:
+        packed = jnp.pad(packed, ((0, t_pad), (0, 0)))
+        scales = jnp.pad(scales, ((0, t_pad), (0, 0)))
+    n_tiles = (T + t_pad) // bt
+
+    out = pl.pallas_call(
+        functools.partial(_dequantize_kernel, bits=bits),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((bt, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T + t_pad, D), F32),
+        interpret=interpret,
+    )(packed, scales)
+    return out[:T]

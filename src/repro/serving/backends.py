@@ -9,6 +9,12 @@ backend answers *what tokens happen*, which is where accept lengths
 
 SSM/hybrid archs roll back recurrent state by snapshot + re-advance over the
 accepted prefix (core/speculative.py, DESIGN.md §4).
+
+With a lossy ``wire_codec`` the backend round-trips the actual hidden
+states through the codec at both wire crossings — shallow states before the
+middle submodel (uplink) and deep states before the output head (downlink)
+— so measured accept lengths carry the true quantization error rather than
+a calibrated penalty.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from ..core.speculative import (
     snapshot_states,
 )
 from ..core.split import SplitModels
+from ..wire import get_codec
 from . import medusa as medusa_mod
 from .request import Request
 
@@ -61,8 +68,10 @@ class RealBackend:
         max_len: int = 512,
         rng: Optional[np.random.Generator] = None,
         memory: Optional[jax.Array] = None,
+        wire_codec: Optional[str] = None,
     ):
         self.split = split
+        self.codec = get_codec(wire_codec) if wire_codec is not None else None
         self.cfg = split.cfg
         self.draft_model = (
             DraftModel(split, adapter_params) if adapter_params is not None else None
@@ -78,19 +87,34 @@ class RealBackend:
         self.states: Dict[int, _ReqState] = {}
 
     # ------------------------------------------------------------ plumbing
+    def set_wire_codec(self, codec) -> None:
+        """run_fleet hook: the fleet's wire codec governs the run."""
+        self.codec = codec
+
+    def _wire(self, hidden: jax.Array) -> jax.Array:
+        """One wire crossing: encode/decode through the transport codec."""
+        if self.codec is None or not self.codec.lossy:
+            return hidden
+        return jnp.asarray(self.codec.roundtrip(np.asarray(hidden, np.float32)))
+
     def _u_forward(self, st: _ReqState, tokens: np.ndarray):
         """Run [1, T] tokens through the U path at st.offset; returns
-        (logits [T, V], deep [T, D]) and updates both caches."""
+        (logits [T, V], deep [T, D]) and updates both caches.
+
+        The two ``_wire`` calls are the device->cloud and cloud->device
+        hops: the middle submodel only ever sees codec-round-tripped
+        shallow states, the head only codec-round-tripped deep states."""
         toks = jnp.asarray(tokens, jnp.int32)[None]
         shallow, st.in_cache, _ = self.split.input_model.apply(
             self.split.input_params, toks, cache=st.in_cache,
             offset=st.offset, memory=self.memory, return_hidden=True,
         )
         deep, st.mid_cache, _ = self.split.middle_model.apply(
-            self.split.middle_params, None, inputs_embeds=shallow,
+            self.split.middle_params, None, inputs_embeds=self._wire(shallow),
             cache=st.mid_cache, offset=st.offset, memory=self.memory,
             return_hidden=True,
         )
+        deep = self._wire(deep)
         logits = self.split.head_logits(deep)
         return np.asarray(logits[0], np.float32), np.asarray(deep[0], np.float32)
 

@@ -102,9 +102,14 @@ class NetworkModel:
     """WiFi links: per-device time-varying bandwidth (paper §4.1).
 
     Up 5–10 MB/s, down 10–15 MB/s, modulated by distance group and random
-    channel noise per transfer; transfers on one device's link serialize."""
+    channel noise per transfer; transfers on one device's link serialize.
+
+    ``up_fixed`` / ``down_fixed`` (bytes/s) pin the link to a constant rate
+    for controlled sweeps (benchmarks/bench_wire.py: codec × uplink grid)."""
 
     rng: np.random.Generator
+    up_fixed: Optional[float] = None
+    down_fixed: Optional[float] = None
 
     # distance group -> measured bandwidth sub-range (iperf3, §4.1: overall
     # 5-10 MB/s up, 10-15 MB/s down across the three placements)
@@ -112,10 +117,14 @@ class NetworkModel:
     DOWN_RANGE = {2.0: (13e6, 15e6), 8.0: (11.5e6, 13.5e6), 14.0: (10e6, 12e6)}
 
     def up_bw(self, dev: DeviceProfile) -> float:
+        if self.up_fixed is not None:
+            return self.up_fixed
         lo, hi = self.UP_RANGE.get(dev.distance_m, (5e6, 10e6))
         return self.rng.uniform(lo, hi)
 
     def down_bw(self, dev: DeviceProfile) -> float:
+        if self.down_fixed is not None:
+            return self.down_fixed
         lo, hi = self.DOWN_RANGE.get(dev.distance_m, (10e6, 15e6))
         return self.rng.uniform(lo, hi)
 

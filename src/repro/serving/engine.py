@@ -10,6 +10,12 @@ with the simulator), capacity follows SlotKVManager.
 
 This is the *real-tensor* counterpart of the simulator's cloud: the serve
 example and the engine tests run actual JAX compute through it.
+
+Ingress/egress is the repro.wire transport: ``submit_frame`` decodes a
+serialized chunk frame (codec-quantized hidden states) before the middle
+submodel runs, and ``encode_result`` re-encodes deep hidden states with the
+engine's downlink codec for the device-bound hop.  The bare-array
+``submit``/``EngineJob`` path remains for in-process callers.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.split import SplitModels
+from ..wire import KIND_DEEP, Frame, decode_hidden, encode_hidden, get_codec
 from .kv_manager import KVBudget, SlotKVManager
 
 F32 = jnp.float32
@@ -40,6 +47,7 @@ class EngineResult:
     req_id: int
     deep: Optional[np.ndarray]  # [T, D] deep hidden states (device runs head)
     kind: str
+    offset: int = 0             # cache position of deep[0]
 
 
 class CloudEngine:
@@ -52,8 +60,12 @@ class CloudEngine:
         max_batch_tokens: int = 256,
         kv_budget: Optional[KVBudget] = None,
         memory: Optional[jax.Array] = None,
+        wire_codec: str = "fp16",
     ):
         self.split = split
+        self.codec = get_codec(wire_codec)       # downlink (deep-state) codec
+        self.wire_bytes_in = 0
+        self.wire_bytes_out = 0
         self.n_slots = n_slots
         self.max_len = max_len
         self.max_batch_tokens = max_batch_tokens
@@ -84,6 +96,28 @@ class CloudEngine:
         assert job.req_id in self.kv.slot_of, "request not admitted"
         self.queue.append(job)
 
+    # ---------------------------------------------------------------- wire
+    def submit_frame(self, data: bytes) -> None:
+        """Decode one serialized chunk frame (repro.wire) and enqueue it.
+
+        The frame names its own codec, so a fleet of devices may mix
+        uplink codecs against one engine."""
+        frame = Frame.from_bytes(data) if isinstance(data, (bytes, bytearray)) else data
+        if frame.kind == KIND_DEEP:
+            raise ValueError("deep frames flow cloud->device, not into the engine")
+        self.wire_bytes_in += frame.nbytes()
+        hidden = decode_hidden(frame, self.d_model)
+        self.submit(EngineJob(frame.req_id, hidden, frame.offset,
+                              frame.kind_name, want_deep=frame.want_deep))
+
+    def encode_result(self, res: EngineResult) -> bytes:
+        """Serialize a step result's deep hidden states for the downlink."""
+        assert res.deep is not None, "result carries no deep states"
+        data = encode_hidden(self.codec, res.deep, req_id=res.req_id,
+                             offset=res.offset, kind="deep", want_deep=False)
+        self.wire_bytes_out += len(data)
+        return data
+
     # ---------------------------------------------------------------- step
     def _raw_step(self, params, cache, hidden, offsets, t_step: int):
         deep, new_cache, _ = self.split.middle_model.apply(
@@ -100,12 +134,10 @@ class CloudEngine:
         budget = self.max_batch_tokens
         chosen: List[EngineJob] = []
         busy_slots = set()
-        rest: List[EngineJob] = []
         for job in sorted(self.queue, key=lambda j: 0 if j.kind == "verify" else 1):
             t = len(job.hidden)
             slot = self.kv.slot_of[job.req_id]
             if slot in busy_slots or (chosen and t > budget):
-                rest.append(job)
                 continue
             chosen.append(job)
             busy_slots.add(slot)
@@ -137,7 +169,7 @@ class CloudEngine:
         for j in chosen:
             slot = self.kv.slot_of[j.req_id]
             d = deep[slot, : len(j.hidden)] if j.want_deep else None
-            out.append(EngineResult(j.req_id, d, j.kind))
+            out.append(EngineResult(j.req_id, d, j.kind, offset=j.offset))
         return out
 
     def drain(self) -> List[EngineResult]:

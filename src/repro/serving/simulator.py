@@ -28,6 +28,7 @@ import numpy as np
 from ..core.chunking import chunk_prompt, optimal_chunk_size
 from ..core.monitor import StateMonitor
 from ..core.parallel_draft import parallel_draft_steps
+from ..wire import get_codec
 from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
 from .request import FleetMetrics, Phase, Request
 
@@ -45,13 +46,20 @@ class StatisticalBackend:
 
     def __init__(self, rng: np.random.Generator, *, p_accept: float = 0.55,
                  medusa_p: float = 0.48, mean_draft: float = 3.0,
-                 max_draft: int = 8, pd_hit: float = 0.55):
+                 max_draft: int = 8, pd_hit: float = 0.55,
+                 wire_penalty: float = 0.0):
         self.rng = rng
         self.p_accept = p_accept
         self.medusa_p = medusa_p
         self.mean_draft = mean_draft
         self.max_draft = max_draft
         self.pd_hit = pd_hit
+        # lossy wire codecs perturb the verification logits: a calibrated
+        # multiplicative hit on every accept draw (repro.wire.codec docs)
+        self.wire_penalty = wire_penalty
+
+    def set_wire_codec(self, codec) -> None:
+        self.wire_penalty = codec.accept_penalty
 
     def first_token(self, req: Request) -> int:
         return 1000
@@ -64,8 +72,9 @@ class StatisticalBackend:
         return [1000 + i for i in range(k)]
 
     def verify(self, req: Request, draft: List[int]) -> Tuple[int, int]:
+        p = self.p_accept * (1.0 - self.wire_penalty)
         n = 0
-        while n < len(draft) and self.rng.random() < self.p_accept:
+        while n < len(draft) and self.rng.random() < p:
             n += 1
         return n, 2000
 
@@ -73,8 +82,9 @@ class StatisticalBackend:
         return 8                                    # tree size (paper: 8)
 
     def medusa_verify(self, req: Request) -> Tuple[int, int]:
+        p = self.medusa_p * (1.0 - self.wire_penalty)
         n = 0
-        while n < 4 and self.rng.random() < self.medusa_p:
+        while n < 4 and self.rng.random() < p:
             n += 1
         return n, 2000
 
@@ -108,13 +118,29 @@ class SimConfig:
     eta: float = 0.6                   # draft threshold (Eq. 5)
     max_draft: int = 8
     topk: int = 4
-    hidden_bytes_per_token: float = 4096 * 2   # A (vicuna-7b fp16)
+    # --- wire transport -----------------------------------------------------
+    # A = bytes/token on the wire is codec-derived: hidden_bytes_per_token
+    # left at None resolves to get_codec(wire_codec).bytes_per_token(d_model)
+    # (fp16 × 4096 = the paper's 8 KiB anchor); setting it explicitly
+    # overrides the codec accounting (legacy knob).
+    wire_codec: str = "fp16"
+    d_model: int = 4096                # vicuna-7b
+    hidden_bytes_per_token: Optional[float] = None
     token_bytes: float = 4.0
+    # fixed link rates (bytes/s) for controlled codec × bandwidth sweeps
+    uplink_bps: Optional[float] = None
+    downlink_bps: Optional[float] = None
     # Cloud admission: Sarathi/HAT cap batched tokens; the naive baselines
     # (U-shape, U-Medusa) batch every pending job -> long prompts interfere
     # with decode (Fig. 1(c)); None = no budget.
     max_batch_tokens: Optional[int] = 512
     max_sim_s: float = 3600.0
+
+    def __post_init__(self):
+        if self.hidden_bytes_per_token is None:
+            self.hidden_bytes_per_token = get_codec(
+                self.wire_codec
+            ).bytes_per_token(self.d_model)
 
 
 class Simulator:
@@ -131,7 +157,8 @@ class Simulator:
         self.backend = backend
         self.rng = rng
         self.fleet = {d.dev_id: d for d in make_fleet(rng, n_devices)}
-        self.net = NetworkModel(rng)
+        self.net = NetworkModel(rng, up_fixed=sim_cfg.uplink_bps,
+                                down_fixed=sim_cfg.downlink_bps)
         self.monitor = StateMonitor(alpha=0.8)
         self.metrics = FleetMetrics()
 
@@ -455,20 +482,33 @@ def run_fleet(
     *,
     rng: Optional[np.random.Generator] = None,
     pipeline_len: int = 4,
-    hidden_bytes: float = 4096 * 2,
+    hidden_bytes: Optional[float] = 4096 * 2,
     backend=None,
     n_devices: int = 30,
     overrides: Optional[dict] = None,
+    wire_codec: Optional[str] = None,
 ) -> FleetMetrics:
     rng = rng or np.random.default_rng(0)
     kw = dict(FRAMEWORKS[framework])
     if framework == "u-sarathi":
         kw["dynamic_chunks"] = False
+    if wire_codec is not None:
+        kw["wire_codec"] = wire_codec
     if overrides:
         kw.update(overrides)
-    sim_cfg = SimConfig(hidden_bytes_per_token=hidden_bytes, **kw)
+    if "hidden_bytes_per_token" not in kw:
+        # a codec request (param or override) switches A to codec-derived
+        # accounting; otherwise the legacy explicit byte count applies
+        kw["hidden_bytes_per_token"] = None if "wire_codec" in kw else hidden_bytes
+    sim_cfg = SimConfig(**kw)
     cloud = CloudDelayModel(pipeline_len=pipeline_len)
     backend = backend or StatisticalBackend(rng)
+    # the fleet codec governs the backend's wire behaviour, but only when a
+    # codec was actually requested here — a backend configured directly by
+    # the caller (RealBackend(wire_codec=...), StatisticalBackend(wire_penalty=...))
+    # must not be clobbered by the fp16 default
+    if "wire_codec" in kw and hasattr(backend, "set_wire_codec"):
+        backend.set_wire_codec(get_codec(sim_cfg.wire_codec))
     sim = Simulator(sim_cfg, cloud, backend, rng, n_devices=n_devices)
     for r in requests:
         sim.submit(

@@ -1,0 +1,32 @@
+from .codec import (
+    CODECS,
+    Bf16TruncCodec,
+    Fp16Codec,
+    IntCodec,
+    WireCodec,
+    codec_by_id,
+    get_codec,
+    register_codec,
+)
+from .framing import (
+    FLAG_WANT_DEEP,
+    FRAME_VERSION,
+    HEADER_BYTES,
+    KIND_DEEP,
+    KIND_IDS,
+    KIND_NAMES,
+    KIND_PREFILL,
+    KIND_VERIFY,
+    Frame,
+    decode_hidden,
+    encode_hidden,
+    iter_frames,
+)
+
+__all__ = [
+    "CODECS", "Bf16TruncCodec", "Fp16Codec", "IntCodec", "WireCodec",
+    "codec_by_id", "get_codec", "register_codec",
+    "FLAG_WANT_DEEP", "FRAME_VERSION", "HEADER_BYTES", "KIND_DEEP",
+    "KIND_IDS", "KIND_NAMES", "KIND_PREFILL", "KIND_VERIFY", "Frame",
+    "decode_hidden", "encode_hidden", "iter_frames",
+]

@@ -1,0 +1,205 @@
+"""Wire codecs for device-cloud hidden-state transport (HAT §2.3).
+
+HAT ships hidden states — not tokens — across the device-cloud link, so the
+wire constant ``A = bytes per token`` is the single largest term in both
+TTFT (chunk uploads) and TBT (draft uploads + deep-state downloads): the
+paper's anchor is 8 KiB/token on Vicuna-7B (d_model=4096, fp16), i.e. 3.2 s
+of transfer for a 2k prompt at 5 MB/s.  A lossy codec shrinks A and lets
+Eq. 3 pick larger chunks on the same link.
+
+Every codec quantizes **per token** (one scale per hidden-state row): the
+row is the unit that crosses the wire, rows of one chunk can be encoded /
+decoded independently, and absmax-per-row keeps the dequantization error
+proportional to that token's own magnitude.
+
+Codecs are numpy-level (the transport runs on the host side of the NIC);
+the accelerator hot path is the Pallas quantize/pack kernels in
+``repro.kernels.wire_quant`` — ``tests/test_wire.py`` pins byte-level
+parity between the two.
+
+Registry::
+
+    fp16        2·d B/tok   lossless wire (status quo, codec id 0)
+    bf16-trunc  2·d B/tok   fp32 truncated to bf16 (id 1)
+    int8        d+4 B/tok   per-token absmax, 255 levels (id 2)
+    int4        d/2+4 B/tok per-token absmax, 15 levels, nibble-packed (id 3)
+
+``accept_penalty`` is the calibrated multiplicative hit on the speculative
+accept probability used by the ``StatisticalBackend``: quantization noise on
+the uploaded draft hidden states perturbs the cloud's verification logits,
+flipping a fraction of near-tie greedy decisions.  Per-token absmax int8
+keeps ~34 dB SNR on the hidden rows (measured on the reduced models in
+``tests/test_wire.py``), which flips ≈3% of accepts; int4 at ~14 dB flips
+≈12%; bf16 truncation (8-bit mantissa) is nearly free at ≈1%.  The
+``RealBackend`` does not use the penalty — it round-trips actual hidden
+states through the codec, so the measured accept lengths already carry the
+true quantization error.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def _absmax_quantize(x: np.ndarray, qmax: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric absmax quantization.  x: [T, D] f32.
+
+    Matches ``repro.kernels.ref.quantize_ref`` bit-for-bit: f32 scale,
+    round-half-to-even, clip to ±qmax."""
+    absmax = np.max(np.abs(x), axis=-1, keepdims=True)
+    scale = np.where(absmax == 0.0, np.float32(1.0), absmax / np.float32(qmax))
+    scale = scale.astype(np.float32)
+    q = np.clip(np.round(x / scale), -qmax, qmax).astype(np.int32)
+    return q, scale
+
+
+def _pack_nibbles(q: np.ndarray) -> np.ndarray:
+    """Half-split nibble packing: packed[:, j] = (q[:, D/2+j] << 4) | (q[:, j] & 0xF).
+
+    Splitting at D/2 (rather than interleaving adjacent pairs) keeps the
+    pack a pure lane-slice on TPU — see kernels/wire_quant.py."""
+    h = q.shape[-1] // 2
+    return ((q[..., h:] << 4) | (q[..., :h] & 0xF)).astype(np.int8)
+
+
+def _unpack_nibbles(p: np.ndarray) -> np.ndarray:
+    p = p.astype(np.int32)
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = p >> 4
+    return np.concatenate([lo, hi], axis=-1)
+
+
+@dataclass(frozen=True)
+class WireCodec:
+    """Base codec: per-token encode/decode with exact byte accounting."""
+
+    name: str
+    codec_id: int
+    lossy: bool
+    accept_penalty: float
+
+    def bytes_per_token(self, d_model: int) -> float:
+        raise NotImplementedError
+
+    def encode(self, hidden: np.ndarray) -> bytes:
+        """[T, D] float -> wire payload."""
+        raise NotImplementedError
+
+    def decode(self, payload: bytes, n_tokens: int, d_model: int) -> np.ndarray:
+        """wire payload -> [T, D] f32."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ helpers
+    def roundtrip(self, hidden: np.ndarray) -> np.ndarray:
+        """encode∘decode on any [..., D] array (simulates one wire crossing)."""
+        x = np.asarray(hidden, np.float32)
+        flat = x.reshape(-1, x.shape[-1])
+        out = self.decode(self.encode(flat), flat.shape[0], flat.shape[1])
+        return out.reshape(x.shape)
+
+
+@dataclass(frozen=True)
+class Fp16Codec(WireCodec):
+    """The paper's wire: raw fp16 rows, A = 2·d_model (8 KiB/tok on Vicuna).
+
+    Marked lossless: the physical testbed already computes/ships fp16, so
+    this codec is the identity wire the fp16 baselines are calibrated to."""
+
+    def bytes_per_token(self, d_model: int) -> float:
+        return 2.0 * d_model
+
+    def encode(self, hidden: np.ndarray) -> bytes:
+        return np.asarray(hidden, np.float32).astype("<f2").tobytes()
+
+    def decode(self, payload: bytes, n_tokens: int, d_model: int) -> np.ndarray:
+        x = np.frombuffer(payload, dtype="<f2", count=n_tokens * d_model)
+        return x.reshape(n_tokens, d_model).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class Bf16TruncCodec(WireCodec):
+    """fp32 with the low 16 mantissa bits dropped (truncate-to-bf16)."""
+
+    def bytes_per_token(self, d_model: int) -> float:
+        return 2.0 * d_model
+
+    def encode(self, hidden: np.ndarray) -> bytes:
+        u = np.asarray(hidden, np.float32).view(np.uint32) >> 16
+        return u.astype("<u2").tobytes()
+
+    def decode(self, payload: bytes, n_tokens: int, d_model: int) -> np.ndarray:
+        u = np.frombuffer(payload, dtype="<u2", count=n_tokens * d_model)
+        x = (u.astype(np.uint32) << 16).view(np.float32)
+        return x.reshape(n_tokens, d_model).copy()
+
+
+@dataclass(frozen=True)
+class IntCodec(WireCodec):
+    """Per-token absmax integer codec; payload = f32 scales ++ packed rows.
+
+    int8: A = d + 4;  int4 (nibble-packed pairs): A = d/2 + 4."""
+
+    bits: int = 8
+
+    @property
+    def qmax(self) -> float:
+        return 127.0 if self.bits == 8 else 7.0
+
+    def bytes_per_token(self, d_model: int) -> float:
+        vals = d_model if self.bits == 8 else d_model / 2.0
+        return vals + 4.0                      # + one f32 scale per token
+
+    def encode(self, hidden: np.ndarray) -> bytes:
+        x = np.asarray(hidden, np.float32)
+        if self.bits == 4 and x.shape[-1] % 2:
+            raise ValueError("int4 codec requires an even d_model")
+        q, scale = _absmax_quantize(x, self.qmax)
+        packed = _pack_nibbles(q) if self.bits == 4 else q.astype(np.int8)
+        return scale.astype("<f4").tobytes() + packed.tobytes()
+
+    def decode(self, payload: bytes, n_tokens: int, d_model: int) -> np.ndarray:
+        scale = np.frombuffer(payload, dtype="<f4", count=n_tokens)
+        vals = d_model if self.bits == 8 else d_model // 2
+        packed = np.frombuffer(
+            payload, dtype=np.int8, count=n_tokens * vals, offset=4 * n_tokens
+        ).reshape(n_tokens, vals)
+        q = _unpack_nibbles(packed) if self.bits == 4 else packed.astype(np.int32)
+        return q.astype(np.float32) * scale[:, None]
+
+
+CODECS: Dict[str, WireCodec] = {}
+_BY_ID: Dict[int, WireCodec] = {}
+
+
+def register_codec(codec: WireCodec) -> WireCodec:
+    if codec.name in CODECS:
+        raise ValueError(f"duplicate codec name {codec.name!r}")
+    if codec.codec_id in _BY_ID:
+        raise ValueError(f"duplicate codec id {codec.codec_id}")
+    CODECS[codec.name] = codec
+    _BY_ID[codec.codec_id] = codec
+    return codec
+
+
+register_codec(Fp16Codec("fp16", 0, lossy=False, accept_penalty=0.0))
+register_codec(Bf16TruncCodec("bf16-trunc", 1, lossy=True, accept_penalty=0.01))
+register_codec(IntCodec("int8", 2, lossy=True, accept_penalty=0.03, bits=8))
+register_codec(IntCodec("int4", 3, lossy=True, accept_penalty=0.12, bits=4))
+
+
+def get_codec(name: str) -> WireCodec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown wire codec {name!r}; registered: {sorted(CODECS)}"
+        ) from None
+
+
+def codec_by_id(codec_id: int) -> WireCodec:
+    try:
+        return _BY_ID[codec_id]
+    except KeyError:
+        raise KeyError(f"unknown wire codec id {codec_id}") from None

@@ -1,0 +1,148 @@
+"""Chunk frames: the serialized messages that cross the device-cloud wire.
+
+The engine and the serve example exchange real byte strings instead of bare
+arrays: a frame carries enough routing metadata (request, cache offset,
+job kind, codec) for the receiver to decode the payload and place it at the
+right KV position without side-channel state.
+
+Layout (little-endian, 20-byte header)::
+
+    magic    2s   b"HW"
+    version  B    FRAME_VERSION
+    codec_id B    repro.wire.codec registry id
+    kind     B    0 prefill | 1 verify | 2 deep (cloud -> device)
+    flags    B    bit 0: want_deep (device asks for deep states back)
+    req_id   I
+    offset   I    cache position of payload row 0
+    n_tokens H
+    length   I    payload byte length
+    payload  length bytes (codec-encoded [n_tokens, d_model] rows)
+
+Frames are self-delimiting, so a TCP-style byte stream of concatenated
+frames is parsed with ``iter_frames``.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from .codec import WireCodec, codec_by_id
+
+MAGIC = b"HW"
+FRAME_VERSION = 1
+
+KIND_PREFILL = 0
+KIND_VERIFY = 1
+KIND_DEEP = 2
+KIND_NAMES = {KIND_PREFILL: "prefill", KIND_VERIFY: "verify", KIND_DEEP: "deep"}
+KIND_IDS = {v: k for k, v in KIND_NAMES.items()}
+
+FLAG_WANT_DEEP = 1
+
+_HEADER = struct.Struct("<2sBBBBIIHI")
+HEADER_BYTES = _HEADER.size
+
+
+@dataclass(frozen=True)
+class Frame:
+    req_id: int
+    offset: int
+    kind: int                  # KIND_PREFILL | KIND_VERIFY | KIND_DEEP
+    codec_id: int
+    n_tokens: int
+    payload: bytes
+    flags: int = 0
+
+    @property
+    def want_deep(self) -> bool:
+        return bool(self.flags & FLAG_WANT_DEEP)
+
+    @property
+    def kind_name(self) -> str:
+        return KIND_NAMES[self.kind]
+
+    @property
+    def codec(self) -> WireCodec:
+        return codec_by_id(self.codec_id)
+
+    def to_bytes(self) -> bytes:
+        return _HEADER.pack(
+            MAGIC, FRAME_VERSION, self.codec_id, self.kind, self.flags,
+            self.req_id, self.offset, self.n_tokens, len(self.payload),
+        ) + self.payload
+
+    def nbytes(self) -> int:
+        return HEADER_BYTES + len(self.payload)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Frame":
+        frame, consumed = cls.parse(data)
+        if consumed != len(data):
+            raise ValueError(
+                f"trailing bytes after frame ({len(data) - consumed}); "
+                "use iter_frames for concatenated streams"
+            )
+        return frame
+
+    @classmethod
+    def parse(cls, data: bytes, pos: int = 0) -> tuple["Frame", int]:
+        """Parse one frame at ``data[pos:]`` -> (frame, end position)."""
+        if len(data) - pos < HEADER_BYTES:
+            raise ValueError("truncated frame header")
+        magic, ver, codec_id, kind, flags, req_id, offset, n_tok, plen = (
+            _HEADER.unpack_from(data, pos)
+        )
+        if magic != MAGIC:
+            raise ValueError(f"bad frame magic {magic!r}")
+        if ver != FRAME_VERSION:
+            raise ValueError(f"unsupported frame version {ver}")
+        if kind not in KIND_NAMES:
+            raise ValueError(f"unknown frame kind {kind}")
+        end = pos + HEADER_BYTES + plen
+        if len(data) < end:
+            raise ValueError("truncated frame payload")
+        return cls(req_id, offset, kind, codec_id, n_tok,
+                   bytes(data[pos + HEADER_BYTES:end]), flags), end
+
+
+def iter_frames(stream: bytes) -> Iterator[Frame]:
+    """Yield every frame in a concatenated byte stream (linear scan: only
+    each frame's own payload is copied out)."""
+    pos = 0
+    while pos < len(stream):
+        frame, pos = Frame.parse(stream, pos)
+        yield frame
+
+
+def encode_hidden(
+    codec: WireCodec,
+    hidden: np.ndarray,          # [T, D]
+    *,
+    req_id: int,
+    offset: int,
+    kind: str,
+    want_deep: bool = True,
+) -> bytes:
+    """Encode one chunk of hidden states as a wire frame."""
+    hidden = np.asarray(hidden, np.float32)
+    flags = FLAG_WANT_DEEP if want_deep else 0
+    return Frame(
+        req_id=req_id, offset=offset, kind=KIND_IDS[kind],
+        codec_id=codec.codec_id, n_tokens=hidden.shape[0],
+        payload=codec.encode(hidden), flags=flags,
+    ).to_bytes()
+
+
+def decode_hidden(frame: Frame, d_model: int) -> np.ndarray:
+    """Decode a frame's payload back to [n_tokens, d_model] f32 rows."""
+    expected = int(frame.n_tokens * frame.codec.bytes_per_token(d_model))
+    if len(frame.payload) != expected:
+        raise ValueError(
+            f"frame payload is {len(frame.payload)} B but {frame.codec.name} "
+            f"x {frame.n_tokens} tokens at d_model={d_model} needs {expected} B "
+            "(sender/receiver d_model mismatch?)"
+        )
+    return frame.codec.decode(frame.payload, frame.n_tokens, d_model)
