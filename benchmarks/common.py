@@ -22,6 +22,8 @@ def n_requests(default_quick: int, default_full: int) -> int:
 def fleet_run(framework: str, spec, *, rate: float, n: int, seed: int = 1,
               pipeline_len: int = 4, hidden_bytes: float = 4096 * 2,
               backend=None, overrides=None):
+    """Workload sampling + the legacy run_fleet wrapper (which owns the
+    codec-vs-hidden_bytes precedence via ServeConfig)."""
     from repro.data import sample_workload
     from repro.serving import run_fleet
 

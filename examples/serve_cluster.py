@@ -3,11 +3,13 @@
 
     PYTHONPATH=src python examples/serve_cluster.py                 # statistical fleet
     PYTHONPATH=src python examples/serve_cluster.py --real          # real JAX models
-    PYTHONPATH=src python examples/serve_cluster.py --engine        # batched cloud engine demo
+    PYTHONPATH=src python examples/serve_cluster.py --engine        # session API demo
 
 The default mode runs the paper's §4.2 experiment shape: Poisson arrivals
 over 30 heterogeneous Jetson-class devices, SpecBench-like prompt lengths,
 continuous batching in the cloud; prints the Fig. 6/8-style comparison.
+``--engine`` demonstrates the session API: DeviceClient sessions streaming
+tokens through a CloudServer over wire frames — no hand-rolled framing.
 """
 import argparse
 import json
@@ -17,13 +19,12 @@ import numpy as np
 
 def fleet_comparison(args):
     from repro.data import SPECBENCH, sample_workload
-    from repro.serving import run_fleet
+    from repro.serving import ServeConfig, SimulatorRuntime
 
     rng = np.random.default_rng(0)
     reqs = sample_workload(SPECBENCH, rng, n_requests=args.requests,
                            rate_per_s=args.rate, with_tokens=args.real)
 
-    backend = None
     d_model = 4096
     if args.real:
         import jax
@@ -54,8 +55,6 @@ def fleet_comparison(args):
         d_model = cfg.d_model
 
         def make_backend(fw):
-            from repro.serving import RealBackend
-
             return RealBackend(
                 split,
                 adapter_params=adapter if fw == "hat" else None,
@@ -74,67 +73,55 @@ def fleet_comparison(args):
     print(f"{'framework':12s} {'TTFT(ms)':>10s} {'TBT(ms)':>9s} "
           f"{'accept':>7s} {'cloud(ms)':>12s}")
     for fw in ("u-shape", "u-sarathi", "u-medusa", "hat"):
-        m = run_fleet(fw, reqs, rng=np.random.default_rng(9),
-                      pipeline_len=args.pipeline_len,
-                      wire_codec=args.wire_codec,
-                      overrides={"d_model": d_model},
-                      backend=make_backend(fw))
-        s = m.summary()
+        config = ServeConfig.from_framework(
+            fw, wire_codec=args.wire_codec, d_model=d_model,
+            pipeline_len=args.pipeline_len,
+        )
+        runtime = SimulatorRuntime(config, backend=make_backend(fw),
+                                   rng=np.random.default_rng(9))
+        s = runtime.serve(reqs).summary()
         print(f"{fw:12s} {s['ttft_mean_ms']:10.1f} {s['tbt_mean_ms']:9.1f} "
               f"{s['accept_length']:7.2f} "
-              f"{s.get('cloud_delay_mean_ms', 0):6.1f}±{s.get('cloud_delay_std_ms', 0):.1f}")
+              f"{s['cloud_delay_mean_ms']:6.1f}±{s['cloud_delay_std_ms']:.1f}")
 
 
 def engine_demo(args):
-    """The real batched cloud engine: several requests chunk-prefill and
-    decode concurrently through slot-batched middle-model steps.  All
-    hidden states cross as serialized wire frames (repro.wire), encoded
-    with ``--wire-codec`` on the uplink and the downlink."""
+    """The session API, end to end: DeviceClient sessions stream tokens
+    through a CloudServer (slot-batched CloudEngine) — chunked prefill,
+    per-round verification, every hidden-state hop a ``--wire-codec``
+    frame.  No hand-rolled frame encoding anywhere: the client owns it."""
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_config
     from repro.core import split_model
-    from repro.serving import CloudEngine
-    from repro.wire import Frame, decode_hidden, encode_hidden, get_codec
+    from repro.models import Model
+    from repro.serving import CloudServer, DeviceClient, LoopbackTransport
+    from repro.wire import get_codec
 
     cfg = get_config(args.arch).reduced()
-    from repro.models import Model
-
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     split = split_model(cfg, params)
-    eng = CloudEngine(split, n_slots=4, max_len=128, max_batch_tokens=48,
-                      wire_codec=args.wire_codec)
+
+    server = CloudServer(split, n_slots=4, max_len=128, max_batch_tokens=48,
+                         wire_codec=args.wire_codec)
+    transport = LoopbackTransport(server)
+    client = DeviceClient(split, transport, wire_codec=args.wire_codec,
+                          max_len=128, fixed_chunk=16)
     codec = get_codec(args.wire_codec)
     rng = np.random.default_rng(0)
 
-    print(f"admitting 3 requests, chunked prefill via {codec.name} wire frames")
-    deeps = {}
+    print(f"3 DeviceClient sessions, chunked prefill via {codec.name} frames")
     for rid, plen in [(0, 40), (1, 25), (2, 33)]:
-        assert eng.add_request(rid, plen + 32)
-        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, plen))[None]
-        sh, _, _ = split.input_model.apply(split.input_params, toks, return_hidden=True)
-        sh = np.asarray(sh[0], np.float32)
-        for off in range(0, plen, 16):
-            eng.submit_frame(encode_hidden(
-                codec, sh[off:off + 16], req_id=rid, offset=off, kind="prefill",
-                want_deep=off + 16 >= plen,     # only the last chunk feeds the head
-            ))
-    for r in eng.drain():
-        if r.deep is None:
-            continue
-        down = eng.encode_result(r)                     # deep frame, cloud->device
-        frame = Frame.from_bytes(down)
-        deeps[r.req_id] = decode_hidden(frame, cfg.d_model)
+        prompt = rng.integers(3, cfg.vocab_size, size=plen).astype(np.int32)
+        toks = list(client.generate(prompt, max_new_tokens=4, req_id=rid))
+        print(f"  req {rid}: prompt {plen} tokens -> generated {toks}")
+    eng = server.engine
     print(f"engine ran {eng.steps} batched steps; "
           f"batched tokens per step: {eng.batched_token_history}")
     print(f"wire: {eng.wire_bytes_in} B up, {eng.wire_bytes_out} B down "
           f"({codec.bytes_per_token(cfg.d_model):.0f} B/token payload; "
           f"fp16 would be {2 * cfg.d_model} B/token)")
-    for rid, d in sorted(deeps.items()):
-        logits = split.head_logits(jnp.asarray(d[None]))
-        print(f"  req {rid}: first token {int(logits[0, -1].argmax())}")
 
 
 def main():

@@ -7,7 +7,7 @@ from .adapter import (
     init_adapter,
     init_adapter_cache,
 )
-from .chunking import chunk_offsets, chunk_prompt, optimal_chunk_size
+from .chunking import chunk_offsets, chunk_prompt, optimal_chunk_size, plan_chunks
 from .distill import distill_loss, make_distill_step, smooth_l1
 from .monitor import DelayPredictor, DeviceState, Ewma, StateMonitor
 from .parallel_draft import (
@@ -28,7 +28,8 @@ from .split import SplitModels, derive_configs, split_model, stack_layers, unsta
 __all__ = [
     "DraftModel", "adapter_forward", "adapter_param_count", "init_adapter",
     "init_adapter_cache", "chunk_offsets", "chunk_prompt",
-    "optimal_chunk_size", "distill_loss", "make_distill_step", "smooth_l1",
+    "optimal_chunk_size", "plan_chunks", "distill_loss", "make_distill_step",
+    "smooth_l1",
     "DelayPredictor", "DeviceState", "Ewma", "StateMonitor",
     "CandidateDrafts", "parallel_draft_steps", "predraft_candidates",
     "DraftResult", "accept_greedy_rows", "draft_until_threshold",

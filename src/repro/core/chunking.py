@@ -65,6 +65,42 @@ def optimal_chunk_size(
     return max(align, (x // align) * align)
 
 
+def plan_chunks(
+    prompt_len: int,
+    *,
+    pc: "str | None",                  # None | "device" | "server"
+    dynamic_chunks: bool = True,
+    fixed_chunk: int = 128,
+    hidden_bytes_per_token: float = 0.0,
+    beta_up: float = 7.5e6,
+    g: "Callable[[float], float] | None" = None,
+    mu: float = 64.0,
+    pipeline_len: int = 1,
+) -> List[int]:
+    """Framework-aware chunk plan for one prompt (shared by the simulator
+    and the session-API DeviceClient so both speak the same Eq. 3).
+
+    * ``pc="device"`` + ``dynamic_chunks``: HAT — solve Eq. (3) with the
+      monitored link/workload state (falls back to ``fixed_chunk`` before
+      any workload observations exist, i.e. ``g`` is None or cold).
+    * ``pc="device"`` or ``pc="server"`` without dynamics: Sarathi-style
+      fixed chunks.
+    * ``pc=None``: one bulk chunk (plain U-shape).
+    """
+    if pc is None:
+        return [prompt_len]
+    if pc == "device" and dynamic_chunks and g is not None:
+        x = optimal_chunk_size(
+            prompt_len=prompt_len,
+            hidden_bytes_per_token=hidden_bytes_per_token,
+            beta_up=beta_up, g=g, mu=mu, pipeline_len=pipeline_len,
+            cold_start_chunk=fixed_chunk,
+        )
+    else:
+        x = fixed_chunk
+    return chunk_prompt(prompt_len, x)
+
+
 def chunk_prompt(prompt_len: int, chunk_size: int) -> List[int]:
     """Split ``prompt_len`` into chunk lengths (last chunk may be short)."""
     assert prompt_len > 0 and chunk_size > 0

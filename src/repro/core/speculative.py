@@ -124,7 +124,8 @@ def accept_greedy_rows(
 # SSM / hybrid rollback
 # ---------------------------------------------------------------------------
 
-_SSM_KEYS = ("m2", "ml", "sl")
+SSM_STATE_KEYS = ("m2", "ml", "sl")
+_SSM_KEYS = SSM_STATE_KEYS
 
 
 def snapshot_states(cache) -> Dict:

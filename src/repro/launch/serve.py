@@ -4,9 +4,11 @@
   PYTHONPATH=src python -m repro.launch.serve --framework u-shape --workload cnn_dm
 
 Runs the 30-device fleet simulator (all algorithmic components real; delay
-models calibrated to the paper's testbed — DESIGN.md §3).  ``--real`` swaps
-the statistical backend for actual JAX models (reduced config): slower but
-every token is really drafted/verified.
+models calibrated to the paper's testbed — DESIGN.md §3) through the typed
+session configuration (``ServeConfig`` + ``SimulatorRuntime``).  ``--real``
+swaps the statistical backend for actual JAX models (reduced config):
+slower but every token is really drafted/verified through DeviceClient /
+CloudServer sessions.
 """
 from __future__ import annotations
 
@@ -29,14 +31,17 @@ def main() -> None:
                     help="real JAX models (reduced config) instead of the "
                          "statistical backend")
     ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--wire-codec", default=None,
+                    help="hidden-state transport codec (default: fp16 byte "
+                         "accounting, backend codec untouched)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from ..data import CNN_DM, SPECBENCH, sample_workload
-    from ..serving import run_fleet
+    from ..serving import ServeConfig, SimulatorRuntime
 
     spec = SPECBENCH if args.workload == "specbench" else CNN_DM
-    hidden = (4096 if args.workload == "specbench" else 5120) * 2
+    d_model = 4096 if args.workload == "specbench" else 5120
     rng = np.random.default_rng(args.seed)
 
     backend = None
@@ -55,19 +60,24 @@ def main() -> None:
         adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
         medusa, _ = init_medusa(cfg, jax.random.PRNGKey(8))
         backend = RealBackend(split, adapter_params=adapter,
-                              medusa_params=medusa, max_len=512)
-        hidden = cfg.d_model * 2
+                              medusa_params=medusa, max_len=512,
+                              wire_codec=args.wire_codec)
+        d_model = cfg.d_model
 
+    config = ServeConfig.from_framework(
+        args.framework,
+        wire_codec=args.wire_codec,
+        d_model=d_model,
+        pipeline_len=args.pipeline_len,
+        n_devices=args.devices,
+    )
     reqs = sample_workload(
         spec, rng, n_requests=args.requests, rate_per_s=args.rate,
         n_devices=args.devices, with_tokens=args.real,
     )
-    metrics = run_fleet(
-        args.framework, reqs, rng=np.random.default_rng(args.seed + 1),
-        pipeline_len=args.pipeline_len, hidden_bytes=hidden,
-        backend=backend, n_devices=args.devices,
-    )
-    print(json.dumps(metrics.summary(), indent=1))
+    runtime = SimulatorRuntime(config, backend=backend,
+                               rng=np.random.default_rng(args.seed + 1))
+    print(json.dumps(runtime.serve(reqs).summary(), indent=1))
 
 
 if __name__ == "__main__":

@@ -1,15 +1,31 @@
+from .api import (
+    CloudServer,
+    DelayModelTransport,
+    DeviceClient,
+    EngineRuntime,
+    LoopbackTransport,
+    Runtime,
+    ServeConfig,
+    SimulatorRuntime,
+    Transport,
+    run_fleet,
+)
 from .backends import RealBackend
 from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
-from .engine import CloudEngine, EngineJob, EngineResult
+from .engine import CloudEngine, EngineJob, EngineOverflowError, EngineResult
 from .kv_manager import KVBudget, SlotKVManager
 from .medusa import init_medusa, medusa_logits, medusa_loss, medusa_param_count
 from .request import FleetMetrics, Phase, Request
-from .simulator import FRAMEWORKS, SimConfig, Simulator, StatisticalBackend, run_fleet
+from .simulator import FRAMEWORKS, SimConfig, Simulator, StatisticalBackend
 
 __all__ = [
+    "CloudServer", "DelayModelTransport", "DeviceClient", "EngineRuntime",
+    "LoopbackTransport", "Runtime", "ServeConfig", "SimulatorRuntime",
+    "Transport", "run_fleet",
     "RealBackend", "CloudDelayModel", "DeviceProfile", "NetworkModel",
-    "make_fleet", "CloudEngine", "EngineJob", "EngineResult", "KVBudget",
-    "SlotKVManager", "init_medusa", "medusa_logits", "medusa_loss",
-    "medusa_param_count", "FleetMetrics", "Phase", "Request",
-    "FRAMEWORKS", "SimConfig", "Simulator", "StatisticalBackend", "run_fleet",
+    "make_fleet", "CloudEngine", "EngineJob", "EngineOverflowError",
+    "EngineResult", "KVBudget", "SlotKVManager", "init_medusa",
+    "medusa_logits", "medusa_loss", "medusa_param_count", "FleetMetrics",
+    "Phase", "Request", "FRAMEWORKS", "SimConfig", "Simulator",
+    "StatisticalBackend",
 ]

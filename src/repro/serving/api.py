@@ -1,0 +1,1008 @@
+"""Unified session API: DeviceClient / CloudServer / Transport.
+
+HAT's core claim is a *protocol* — devices and cloud exchanging codec-framed
+hidden states with chunked-prefill overlap — and this module is its single
+front door, replacing the three ad-hoc serving paths (``run_fleet`` kwargs
+soup, raw ``CloudEngine.submit``/``step`` with caller-side chunking, and
+``RealBackend``'s inline re-implementation of the U path):
+
+    DeviceClient ──frames──▶ Transport ──frames──▶ CloudServer ─▶ CloudEngine
+        │  input submodel + Λ + head                  │  middle submodel,
+        │  Eq. 3 chunked prefill,                     │  slot-batched steps,
+        │  Eq. 5 threshold drafting,                  │  KV admission,
+        │  greedy acceptance                          │  downlink encoding
+        ◀──────────── deep-state frames ──────────────┘
+
+* :class:`DeviceClient` owns the device-resident pieces (input submodel,
+  adapter Λ, output head) and drives the whole decode loop as a
+  **token-streaming generator**: ``client.generate(prompt)`` yields tokens.
+  Every hidden-state hop is a serialized ``repro.wire`` frame — there is no
+  bare-array side channel.
+* :class:`CloudServer` wraps :class:`~repro.serving.engine.CloudEngine`
+  behind frame ingress/egress plus a per-request downlink outbox, and
+  exposes the SSM rollback control channel (slot snapshot/restore).
+* :class:`Transport` is the small protocol between them.
+  :class:`LoopbackTransport` is the in-process wire;
+  :class:`DelayModelTransport` reuses ``delay_models.py`` so real-tensor
+  runs get simulated wall-clock (link transfer times, cloud batch delays,
+  device compute ticks).
+* :class:`ServeConfig` is the typed run description with framework
+  constructors (``ServeConfig.hat()``, ``.u_shape()``, ``.u_sarathi()``,
+  ``.u_medusa()``) replacing the ``FRAMEWORKS`` dict + ``overrides`` kwargs.
+  It resolves the wire codec vs. ``hidden_bytes_per_token`` precedence
+  exactly once.
+* :class:`Runtime` unifies the two execution engines behind
+  ``serve(requests) -> FleetMetrics``: :class:`SimulatorRuntime` runs the
+  discrete-event fleet simulator, :class:`EngineRuntime` runs real tensors
+  through DeviceClient/CloudServer sessions.
+
+``run_fleet`` remains as a thin deprecated wrapper over
+``ServeConfig.from_framework`` + :class:`SimulatorRuntime`.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.adapter import DraftModel
+from ..core.chunking import plan_chunks
+from ..core.monitor import StateMonitor
+from ..core.speculative import (
+    accept_greedy_rows,
+    draft_until_threshold,
+    has_ssm_state,
+    restore_states,
+    snapshot_states,
+)
+from ..core.split import SplitModels
+from ..wire import Frame, decode_hidden, encode_hidden, get_codec
+from . import medusa as medusa_mod
+from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
+from .engine import CloudEngine, EngineOverflowError
+from .request import FleetMetrics, Phase, Request
+from .simulator import FRAMEWORKS, SimConfig, Simulator, StatisticalBackend
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig: the typed run description
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServeConfig:
+    """One serving run, fully described.
+
+    Use the framework constructors — ``ServeConfig.hat()``,
+    ``.u_shape()``, ``.u_sarathi()``, ``.u_medusa()`` — rather than spelling
+    the flag combination by hand.  ``wire_codec=None`` means "nobody asked
+    for a codec": byte accounting falls back to ``hidden_bytes_per_token``
+    (or the fp16 default) and a backend's own codec configuration is left
+    alone; a named codec switches accounting to codec-derived bytes and
+    (re)configures the backend.
+    """
+
+    framework: str = "hat"
+    # --- algorithm flags (simulator semantics) -----------------------------
+    sd: Optional[str] = "draft"        # None | "draft" | "medusa"
+    pc: Optional[str] = "device"       # None | "device" (HAT) | "server" (Sarathi)
+    pd: bool = True
+    fixed_chunk: int = 128
+    dynamic_chunks: bool = True
+    eta: float = 0.6
+    max_draft: int = 8
+    topk: int = 4
+    # --- wire --------------------------------------------------------------
+    wire_codec: Optional[str] = None   # None = legacy byte accounting
+    d_model: int = 4096
+    hidden_bytes_per_token: Optional[float] = None
+    token_bytes: float = 4.0
+    uplink_bps: Optional[float] = None
+    downlink_bps: Optional[float] = None
+    # --- cloud -------------------------------------------------------------
+    max_batch_tokens: Optional[int] = 512
+    pipeline_len: int = 4
+    # --- fleet -------------------------------------------------------------
+    n_devices: int = 30
+    max_sim_s: float = 3600.0
+
+    def __post_init__(self):
+        if self.hidden_bytes_per_token is None:
+            self.hidden_bytes_per_token = self.codec.bytes_per_token(self.d_model)
+
+    # --------------------------------------------------------- codec facts
+    @property
+    def codec_name(self) -> str:
+        return self.wire_codec or "fp16"
+
+    @property
+    def codec(self):
+        return get_codec(self.codec_name)
+
+    def configure_backend(self, backend) -> None:
+        """Apply the run's wire codec to a backend — but only when a codec
+        was actually requested.  A backend configured directly by its caller
+        (``RealBackend(wire_codec=...)``, ``StatisticalBackend(
+        wire_penalty=...)``) is never clobbered by the fp16 default."""
+        if self.wire_codec is not None and hasattr(backend, "set_wire_codec"):
+            backend.set_wire_codec(self.codec)
+
+    def to_sim_config(self) -> SimConfig:
+        return SimConfig(
+            sd=self.sd, pc=self.pc, pd=self.pd,
+            fixed_chunk=self.fixed_chunk, dynamic_chunks=self.dynamic_chunks,
+            eta=self.eta, max_draft=self.max_draft, topk=self.topk,
+            wire_codec=self.codec_name, d_model=self.d_model,
+            hidden_bytes_per_token=self.hidden_bytes_per_token,
+            token_bytes=self.token_bytes,
+            uplink_bps=self.uplink_bps, downlink_bps=self.downlink_bps,
+            max_batch_tokens=self.max_batch_tokens, max_sim_s=self.max_sim_s,
+        )
+
+    # --------------------------------------------- framework constructors
+    @classmethod
+    def _make(cls, name: str, defaults: dict, kw: dict) -> "ServeConfig":
+        base = dict(defaults)
+        base.update(kw)                    # explicit kwargs win (ablations)
+        return cls(framework=name, **base)
+
+    @classmethod
+    def hat(cls, **kw) -> "ServeConfig":
+        """HAT: threshold drafting + device-side dynamic chunking + parallel
+        drafting + budgeted cloud batching."""
+        return cls._make("hat", dict(sd="draft", pc="device", pd=True), kw)
+
+    @classmethod
+    def u_shape(cls, **kw) -> "ServeConfig":
+        """Plain U-shaped inference: bulk upload, per-token decoding, naive
+        (unbudgeted) cloud batching."""
+        return cls._make(
+            "u-shape", dict(sd=None, pc=None, pd=False, max_batch_tokens=None), kw
+        )
+
+    @classmethod
+    def u_sarathi(cls, **kw) -> "ServeConfig":
+        """U-shape + Sarathi-style server-side fixed chunks (no overlap)."""
+        return cls._make(
+            "u-sarathi",
+            dict(sd=None, pc="server", pd=False, dynamic_chunks=False), kw,
+        )
+
+    @classmethod
+    def u_medusa(cls, **kw) -> "ServeConfig":
+        """U-shape + Medusa heads with tree verification."""
+        return cls._make(
+            "u-medusa",
+            dict(sd="medusa", pc=None, pd=False, max_batch_tokens=None), kw,
+        )
+
+    @classmethod
+    def from_framework(cls, name: str, **kw) -> "ServeConfig":
+        ctor = {
+            "hat": cls.hat, "u-shape": cls.u_shape,
+            "u-sarathi": cls.u_sarathi, "u-medusa": cls.u_medusa,
+        }.get(name)
+        if ctor is None:
+            raise KeyError(f"unknown framework {name!r}; known: {sorted(FRAMEWORKS)}")
+        return ctor(**kw)
+
+
+# ---------------------------------------------------------------------------
+# CloudServer: the cloud side of the session protocol
+# ---------------------------------------------------------------------------
+
+
+class CloudServer:
+    """Frame-speaking facade over :class:`CloudEngine`.
+
+    Uplink frames enter through :meth:`handle_frame`; each :meth:`pump` runs
+    one slot-batched engine step and routes the resulting deep-state frames
+    into per-request outboxes for the transport to deliver.  The server also
+    exposes the session lifecycle (open/close) and the SSM rollback control
+    channel (:meth:`snapshot_session` / :meth:`restore_session`)."""
+
+    def __init__(
+        self,
+        split: SplitModels,
+        *,
+        n_slots: int = 8,
+        max_len: int = 512,
+        max_batch_tokens: int = 256,
+        wire_codec: str = "fp16",
+        kv_budget=None,
+        memory: Optional[jax.Array] = None,
+        auto_grow: bool = False,
+    ):
+        self.engine = CloudEngine(
+            split, n_slots=n_slots, max_len=max_len,
+            max_batch_tokens=max_batch_tokens, kv_budget=kv_budget,
+            memory=memory, wire_codec=wire_codec, auto_grow=auto_grow,
+        )
+        self._outbox: Dict[int, deque] = {}
+
+    @property
+    def d_model(self) -> int:
+        return self.engine.d_model
+
+    # ------------------------------------------------------------ sessions
+    def open_session(self, req_id: int, expected_tokens: int) -> bool:
+        return self.engine.add_request(req_id, expected_tokens)
+
+    def close_session(self, req_id: int) -> None:
+        self._outbox.pop(req_id, None)
+        self.engine.queue = [j for j in self.engine.queue if j.req_id != req_id]
+        if req_id in self.engine.kv.slot_of:
+            self.engine.finish_request(req_id)
+
+    # -------------------------------------------------------------- frames
+    def handle_frame(self, data: bytes) -> None:
+        """Uplink ingress: decode + enqueue one chunk frame."""
+        try:
+            self.engine.submit_frame(data)
+        except EngineOverflowError as e:
+            self._outbox.pop(e.req_id, None)
+            raise
+
+    def pump(self) -> int:
+        """One engine step; returns the batched token count (0 = idle).
+
+        Deep-state results are encoded with the engine's downlink codec and
+        parked in the owning request's outbox."""
+        results = self.engine.step()
+        if not results:
+            return 0
+        for r in results:
+            if r.deep is not None:
+                self._outbox.setdefault(r.req_id, deque()).append(
+                    self.engine.encode_result(r)
+                )
+        return self.engine.batched_token_history[-1]
+
+    def poll(self, req_id: int) -> Optional[bytes]:
+        """Pop the next downlink frame for ``req_id`` (None = none pending)."""
+        q = self._outbox.get(req_id)
+        return q.popleft() if q else None
+
+    # ----------------------------------------------------- control channel
+    def snapshot_session(self, req_id: int):
+        return self.engine.snapshot_slot(req_id)
+
+    def restore_session(self, req_id: int, snap) -> None:
+        self.engine.restore_slot(req_id, snap)
+
+
+# ---------------------------------------------------------------------------
+# Transport: the small device<->cloud protocol
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """The device's handle on the cloud.
+
+    Data plane: ``send`` pushes an uplink chunk frame; ``recv`` blocks until
+    the next downlink (deep-state) frame for the request is available.
+    Session plane: ``open`` / ``close``.  Control plane: ``snapshot`` /
+    ``restore`` implement speculative rollback of cloud-resident recurrent
+    state (SSM middles; attention middles roll back positionally and never
+    call these).  ``tick`` lets the device report local compute time to
+    transports that keep a clock."""
+
+    def open(self, req_id: int, expected_tokens: int) -> None:
+        raise NotImplementedError
+
+    def close(self, req_id: int) -> None:
+        raise NotImplementedError
+
+    def send(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, req_id: int) -> bytes:
+        raise NotImplementedError
+
+    def snapshot(self, req_id: int):
+        raise NotImplementedError
+
+    def restore(self, req_id: int, snap) -> None:
+        raise NotImplementedError
+
+    def tick(self, seconds: float) -> None:
+        pass
+
+
+class LoopbackTransport(Transport):
+    """In-process wire: frames go straight into the server, ``recv`` pumps
+    the engine until the request's downlink frame materializes.  Zero
+    latency — the timing-free transport for parity tests and the rebuilt
+    ``RealBackend`` (the simulator owns the clock there)."""
+
+    def __init__(self, server: CloudServer):
+        self.server = server
+        self.bytes_up = 0
+        self.bytes_down = 0
+
+    def open(self, req_id: int, expected_tokens: int) -> None:
+        if not self.server.open_session(req_id, expected_tokens):
+            raise RuntimeError(
+                f"cloud rejected session {req_id}: no free slot / KV budget"
+            )
+
+    def close(self, req_id: int) -> None:
+        self.server.close_session(req_id)
+
+    def send(self, data: bytes) -> None:
+        self.bytes_up += len(data)
+        self.server.handle_frame(data)
+
+    def recv(self, req_id: int) -> bytes:
+        while True:
+            data = self.server.poll(req_id)
+            if data is not None:
+                self.bytes_down += len(data)
+                self._on_downlink(data)
+                return data
+            if self._pump() == 0:
+                raise RuntimeError(
+                    f"downlink starved: no frame in flight for request {req_id}"
+                )
+
+    def snapshot(self, req_id: int):
+        return self.server.snapshot_session(req_id)
+
+    def restore(self, req_id: int, snap) -> None:
+        self.server.restore_session(req_id, snap)
+
+    # ------------------------------------------------- subclass timing hooks
+    def _pump(self) -> int:
+        return self.server.pump()
+
+    def _on_downlink(self, data: bytes) -> None:
+        pass
+
+
+class DelayModelTransport(LoopbackTransport):
+    """Loopback semantics + simulated wall-clock from ``delay_models.py``.
+
+    Real tensors flow exactly as over :class:`LoopbackTransport`, but the
+    transport keeps a clock: uplink/downlink transfers advance it by the
+    :class:`NetworkModel` transfer time for the frame's byte size, each
+    engine pump advances it by the :class:`CloudDelayModel` delay for the
+    batched token count, and the device reports its local compute through
+    :meth:`tick`.  A shared :class:`StateMonitor` (when given) sees the same
+    observations the paper's cloud would — which is what warms up the Eq. 3
+    chunk solver on real runs."""
+
+    def __init__(
+        self,
+        server: CloudServer,
+        *,
+        device: DeviceProfile,
+        net: Optional[NetworkModel] = None,
+        cloud: Optional[CloudDelayModel] = None,
+        monitor: Optional[StateMonitor] = None,
+        start_s: float = 0.0,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        super().__init__(server)
+        self.device = device
+        self.net = net or NetworkModel(rng or np.random.default_rng(0))
+        self.cloud = cloud or CloudDelayModel()
+        self.monitor = monitor
+        self.clock_s = float(start_s)
+        self.cloud_step_delays_s: List[float] = []
+
+    def tick(self, seconds: float) -> None:
+        self.clock_s += seconds
+
+    def send(self, data: bytes) -> None:
+        dur = self.net.up_time(self.device, len(data))
+        self.clock_s += dur
+        if self.monitor is not None and dur > 0:
+            self.monitor.record_device(
+                self.device.dev_id, beta_up=len(data) / dur
+            )
+        super().send(data)
+
+    def _pump(self) -> int:
+        tokens = super()._pump()
+        if tokens > 0:
+            delay = self.cloud.delay(tokens)
+            self.clock_s += delay
+            self.cloud_step_delays_s.append(self.cloud.stage_time(tokens))
+            if self.monitor is not None:
+                self.monitor.record_batch(tokens, delay)
+        return tokens
+
+    def _on_downlink(self, data: bytes) -> None:
+        dur = self.net.down_time(self.device, len(data))
+        self.clock_s += dur
+        if self.monitor is not None and dur > 0:
+            self.monitor.record_device(
+                self.device.dev_id, beta_down=len(data) / dur
+            )
+
+
+# ---------------------------------------------------------------------------
+# DeviceClient: the device side of the session protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Session:
+    req_id: int
+    in_cache: Dict
+    offset: int = 0
+    draft_cache: Optional[Dict] = None
+    draft_offset: int = 0
+    last_token: int = -1
+    last_bonus: int = -1
+    topk_last: Optional[np.ndarray] = None
+    deep_last: Optional[np.ndarray] = None
+    draft_snap: Optional[Dict] = None
+    paths: Optional[List[List[int]]] = None
+    last_commit: List[int] = field(default_factory=list)
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+
+
+class DeviceClient:
+    """The device half of HAT: input submodel + adapter Λ + output head.
+
+    Drives Eq. 3 chunked prefill, Eq. 5 threshold drafting and greedy
+    acceptance as a token-streaming generator; every hidden-state hop is a
+    serialized ``repro.wire`` frame pushed through the :class:`Transport`.
+
+    ``sd`` picks the decode algorithm: ``"draft"`` (threshold speculative
+    decoding — needs ``adapter_params``), ``"medusa"`` (tree verification —
+    needs ``medusa_params``), or ``None`` (one verified token per round).
+    The default ``"auto"`` infers it from which parameters are present.
+    """
+
+    def __init__(
+        self,
+        split: SplitModels,
+        transport: Transport,
+        *,
+        adapter_params: Optional[Params] = None,
+        medusa_params: Optional[Params] = None,
+        sd: Optional[str] = "auto",
+        pc: Optional[str] = "device",
+        pd: bool = True,
+        eta: float = 0.6,
+        max_draft: int = 8,
+        topk: int = 4,
+        max_len: int = 512,
+        wire_codec: str = "fp16",
+        fixed_chunk: int = 128,
+        dynamic_chunks: bool = True,
+        pipeline_len: int = 1,
+        monitor: Optional[StateMonitor] = None,
+        profile: Optional[DeviceProfile] = None,
+        memory: Optional[jax.Array] = None,
+    ):
+        self.split = split
+        self.cfg = split.cfg
+        self.transport = transport
+        self.codec = get_codec(wire_codec)           # uplink codec
+        self.draft_model = (
+            DraftModel(split, adapter_params) if adapter_params is not None else None
+        )
+        self.medusa_params = medusa_params
+        if sd == "auto":
+            sd = ("draft" if adapter_params is not None
+                  else "medusa" if medusa_params is not None else None)
+        if sd == "draft" and self.draft_model is None:
+            raise ValueError("sd='draft' needs adapter_params")
+        if sd == "medusa" and medusa_params is None:
+            raise ValueError("sd='medusa' needs medusa_params")
+        self.sd = sd
+        self.pc = pc
+        self.pd = pd
+        self.eta = eta
+        self.max_draft = max_draft
+        self.topk = topk
+        self.max_len = max_len
+        self.fixed_chunk = fixed_chunk
+        self.dynamic_chunks = dynamic_chunks
+        self.pipeline_len = pipeline_len
+        self.monitor = monitor
+        self.profile = profile
+        self.memory = memory
+        self.ssm = has_ssm_state(self.cfg)
+        self.sessions: Dict[int, _Session] = {}
+        self.finished_stats: Dict[int, Dict[str, float]] = {}
+        self._auto_id = itertools.count()
+
+    # --------------------------------------------------------- device clock
+    def _tick(self, seconds: float) -> None:
+        if self.profile is not None:
+            self.transport.tick(seconds)
+
+    # ------------------------------------------------------------- U round
+    def _u_round(self, sess: _Session, tokens: np.ndarray, kind: str):
+        """One wire round trip at ``sess.offset``: shallow-forward the
+        tokens locally, frame + send the shallow states, receive the deep
+        frame, run the head.  Returns (logits [T, V], deep [T, D])."""
+        toks = jnp.asarray(tokens, jnp.int32)[None]
+        shallow, sess.in_cache, _ = self.split.input_model.apply(
+            self.split.input_params, toks, cache=sess.in_cache,
+            offset=sess.offset, memory=self.memory, return_hidden=True,
+        )
+        if self.profile is not None:
+            self._tick(self.profile.shallow_delay(len(tokens)))
+        self.transport.send(encode_hidden(
+            self.codec, np.asarray(shallow[0], np.float32),
+            req_id=sess.req_id, offset=sess.offset, kind=kind, want_deep=True,
+        ))
+        deep = self._recv_deep(sess.req_id)
+        logits = self.split.head_logits(jnp.asarray(deep)[None])
+        if self.profile is not None:
+            self._tick(self.profile.head_delay())
+        return np.asarray(logits[0], np.float32), deep
+
+    def _recv_deep(self, req_id: int) -> np.ndarray:
+        frame = Frame.from_bytes(self.transport.recv(req_id))
+        return decode_hidden(frame, self.cfg.d_model)
+
+    # -------------------------------------------------------------- prefill
+    def prefill(
+        self,
+        req_id: int,
+        prompt: np.ndarray,
+        *,
+        expected_new_tokens: int = 128,
+    ) -> int:
+        """Chunked prefill (Eq. 3) for one session; returns the first token.
+
+        Each chunk's shallow states cross as their own ``prefill`` frame —
+        earlier chunks ask for no deep states back, the last one does and
+        its deep frame feeds the on-device head."""
+        if req_id in self.sessions:
+            raise ValueError(f"session {req_id} already open")
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) + 1 > self.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot fit max_len={self.max_len}"
+            )
+        self.transport.open(
+            req_id, min(len(prompt) + expected_new_tokens, self.max_len)
+        )
+        sess = _Session(
+            req_id=req_id,
+            in_cache=self.split.input_model.init_cache(
+                self.split.input_params, 1, self.max_len, memory=self.memory
+            ),
+        )
+        self.sessions[req_id] = sess
+
+        dev_id = self.profile.dev_id if self.profile is not None else 0
+        mon = self.monitor
+        chunks = plan_chunks(
+            len(prompt),
+            pc=self.pc, dynamic_chunks=self.dynamic_chunks,
+            fixed_chunk=self.fixed_chunk,
+            hidden_bytes_per_token=self.codec.bytes_per_token(self.cfg.d_model),
+            beta_up=mon.device(dev_id).beta_up.get(7.5e6) if mon else 7.5e6,
+            g=mon.g.predict if mon else None,
+            mu=mon.mu.get(64.0) if mon else 64.0,
+            pipeline_len=self.pipeline_len,
+        )
+        off = 0
+        for i, size in enumerate(chunks):
+            toks = jnp.asarray(prompt[off:off + size], jnp.int32)[None]
+            shallow, sess.in_cache, _ = self.split.input_model.apply(
+                self.split.input_params, toks, cache=sess.in_cache,
+                offset=off, memory=self.memory, return_hidden=True,
+            )
+            if self.profile is not None:
+                self._tick(self.profile.shallow_delay(size))
+            self.transport.send(encode_hidden(
+                self.codec, np.asarray(shallow[0], np.float32),
+                req_id=req_id, offset=off, kind="prefill",
+                want_deep=(i == len(chunks) - 1),
+            ))
+            off += size
+        deep = self._recv_deep(req_id)              # last chunk's deep states
+        logits = self.split.head_logits(jnp.asarray(deep)[None])
+        if self.profile is not None:
+            self._tick(self.profile.head_delay())
+        sess.offset = len(prompt)
+        sess.deep_last = deep[-1]
+        tok = int(np.asarray(logits[0], np.float32)[-1].argmax())
+        sess.last_token = tok
+
+        if self.draft_model is not None:
+            sess.draft_cache = self.draft_model.init_cache(
+                1, self.max_len, memory=self.memory
+            )
+            _, sess.draft_cache, _ = self.draft_model.forward(
+                jnp.asarray(prompt, jnp.int32)[None], cache=sess.draft_cache,
+                offset=0, memory=self.memory,
+            )
+            sess.draft_offset = len(prompt)
+        return tok
+
+    # ------------------------------------------------------------- drafting
+    def draft(self, req_id: int, max_draft: Optional[int] = None,
+              *, charge_time: bool = True) -> List[int]:
+        """Eq. 5 threshold drafting with the on-device draft model w_S."""
+        sess = self.sessions[req_id]
+        if self.draft_model is None:
+            return []
+        sess.draft_snap = (
+            snapshot_states(sess.draft_cache["input"]) if self.ssm else None
+        )
+        # the verify strip is [last_token, *draft]: never draft past the
+        # slot's remaining KV capacity
+        room = max(self.max_len - sess.offset - 1, 0)
+        budget = min(
+            self.max_draft if max_draft is None else max_draft,
+            self.max_draft, room,
+        )
+        if budget <= 0:
+            return []
+        res, sess.draft_cache, sess.draft_offset = draft_until_threshold(
+            self.draft_model, sess.draft_cache,
+            jnp.asarray([[sess.last_token]], jnp.int32),
+            sess.draft_offset, eta=self.eta,
+            max_draft=budget, topk=self.topk, memory=self.memory,
+        )
+        sess.topk_last = res.topk_last
+        if self.profile is not None and charge_time:
+            self._tick(self.profile.draft_delay(res.steps))
+        return res.tokens.tolist()
+
+    def parallel_draft_hit(self, req_id: int) -> bool:
+        """Eq. 6: was the bonus token among the last draft step's top-k
+        (i.e. the next round's draft was already computable in parallel)?"""
+        sess = self.sessions.get(req_id)
+        if sess is None or sess.topk_last is None:
+            return False
+        return int(sess.last_bonus) in set(np.asarray(sess.topk_last).tolist())
+
+    # ---------------------------------------------------------- verification
+    def verify(self, req_id: int, draft: List[int]) -> Tuple[int, int]:
+        """U-shaped verification of ``draft``; returns (n_accepted, bonus).
+
+        Attention caches roll back positionally (the next round's frames
+        overwrite the rejected rows, device- and cloud-side alike).  SSM
+        caches carry state: the device snapshots its local input cache and
+        asks the cloud — over the transport's control channel — to snapshot
+        the slot, then both restore + re-advance the accepted prefix."""
+        sess = self.sessions[req_id]
+        toks = np.asarray([sess.last_token] + list(draft), np.int32)
+        in_snap = snapshot_states(sess.in_cache) if self.ssm else None
+        cloud_snap = self.transport.snapshot(req_id) if self.ssm else None
+        logits, deep = self._u_round(sess, toks, "verify")
+        if draft:
+            n, bonus = accept_greedy_rows(np.asarray(draft), logits)
+        else:
+            n, bonus = 0, int(logits[-1].argmax())
+        accepted = 1 + n                     # last_token + accepted drafts
+        if self.ssm and n < len(draft):
+            sess.in_cache = restore_states(sess.in_cache, in_snap)
+            self.transport.restore(req_id, cloud_snap)
+            _, deep = self._u_round(sess, toks[:accepted], "verify")
+        sess.offset += accepted
+        sess.deep_last = deep[accepted - 1]
+        if self.draft_model is not None:
+            if self.ssm and sess.draft_snap is not None:
+                sess.draft_cache["input"] = restore_states(
+                    sess.draft_cache["input"], sess.draft_snap
+                )
+            _, sess.draft_cache, _ = self.draft_model.forward(
+                jnp.asarray(toks[:accepted], jnp.int32)[None],
+                cache=sess.draft_cache, offset=sess.offset - accepted,
+                memory=self.memory,
+            )
+            sess.draft_offset = sess.offset
+        sess.last_bonus = bonus
+        sess.last_token = bonus
+        sess.rounds += 1
+        sess.drafted += len(draft)
+        sess.accepted += accepted          # accepted drafts + the bonus token
+        sess.last_commit = [*list(draft)[:n], bonus]
+        return n, bonus
+
+    # --------------------------------------------------------------- medusa
+    def medusa_tree(self, req_id: int) -> int:
+        sess = self.sessions[req_id]
+        sess.paths = medusa_mod.build_tree_paths(
+            self.medusa_params, jnp.asarray(sess.deep_last), tree_size=8
+        )
+        return 8                       # tree size charged to the wire/cloud
+
+    def medusa_verify(self, req_id: int) -> Tuple[int, int]:
+        sess = self.sessions[req_id]
+        paths = sess.paths or [[0]]
+        in_snap = snapshot_states(sess.in_cache) if self.ssm else None
+        cloud_snap = self.transport.snapshot(req_id) if self.ssm else None
+        greedy_rows = []
+        for path in paths:
+            toks = np.asarray([sess.last_token] + list(path), np.int32)
+            if self.ssm:
+                sess.in_cache = restore_states(sess.in_cache, in_snap)
+                self.transport.restore(req_id, cloud_snap)
+            logits, _ = self._u_round(sess, toks, "verify")
+            greedy_rows.append(logits.argmax(-1))
+            # positional rollback: the next path overwrites the same offsets
+        best_pi, n, bonus = medusa_mod.accept_best_path(paths, greedy_rows)
+        commit = np.asarray(
+            [sess.last_token] + list(paths[best_pi][:n]), np.int32
+        )
+        if self.ssm:
+            sess.in_cache = restore_states(sess.in_cache, in_snap)
+            self.transport.restore(req_id, cloud_snap)
+        _, deep = self._u_round(sess, commit, "verify")
+        sess.offset += len(commit)
+        sess.deep_last = deep[-1]
+        sess.rounds += 1
+        sess.drafted += 4
+        sess.accepted += n + 1
+        sess.last_commit = [*list(paths[best_pi][:n]), bonus]
+        sess.last_token = bonus
+        return n, bonus
+
+    # ------------------------------------------------------------ lifecycle
+    def step_decode(self, req_id: int) -> List[int]:
+        """One decode round under the configured algorithm; returns the
+        emitted tokens (accepted drafts + bonus — always ≥ 1)."""
+        if self.sd == "medusa":
+            tree = self.medusa_tree(req_id)
+            if self.profile is not None:
+                self._tick(self.profile.head_delay() * 4)
+            self.medusa_verify(req_id)
+            return list(self.sessions[req_id].last_commit)
+        if self.sd == "draft":
+            sess = self.sessions[req_id]
+            pd_hit = (
+                self.pd and sess.rounds > 0 and self.parallel_draft_hit(req_id)
+            )
+            d = self.draft(req_id, charge_time=not pd_hit)
+            n, bonus = self.verify(req_id, d)
+            return list(self.sessions[req_id].last_commit)
+        self.verify(req_id, [])
+        return list(self.sessions[req_id].last_commit)
+
+    def finish(self, req_id: int) -> None:
+        """Close the session and release its cloud slot."""
+        sess = self.sessions.pop(req_id, None)
+        if sess is None:
+            return
+        self.finished_stats[req_id] = {
+            "rounds": sess.rounds, "drafted": sess.drafted,
+            "accepted": sess.accepted,
+        }
+        self.transport.close(req_id)
+
+    def generate(
+        self,
+        prompt: np.ndarray,
+        *,
+        max_new_tokens: int = 128,
+        req_id: Optional[int] = None,
+    ) -> Iterator[int]:
+        """The session API entry point: stream generated tokens.
+
+        Opens a session, runs chunked prefill, then decode rounds until
+        ``max_new_tokens`` tokens have been emitted — or the slot's KV
+        capacity (``max_len``) is reached, which ends the stream early
+        rather than overflowing the cache.  The session closes on
+        exhaustion *and* on early generator close."""
+        rid = next(self._auto_id) if req_id is None else req_id
+        # a decode round needs cache rows for its verify strip: 1 for the
+        # bonus-token round (draft capacity-caps itself), 1 + tree depth
+        # for a medusa path commit
+        need = 1 + medusa_mod.N_HEADS if self.sd == "medusa" else 1
+        try:
+            yield self.prefill(rid, prompt, expected_new_tokens=max_new_tokens)
+            emitted = 1
+            while emitted < max_new_tokens:
+                if self.max_len - self.sessions[rid].offset < need:
+                    break                      # KV capacity exhausted
+                for tok in self.step_decode(rid):
+                    yield tok
+                    emitted += 1
+                    if emitted >= max_new_tokens:
+                        break
+        finally:
+            self.finish(rid)
+
+
+# ---------------------------------------------------------------------------
+# Runtime: one serve() surface over both execution engines
+# ---------------------------------------------------------------------------
+
+
+class Runtime(Protocol):
+    """Anything that can serve a workload and report fleet metrics."""
+
+    def serve(self, requests) -> FleetMetrics: ...
+
+
+class SimulatorRuntime:
+    """Discrete-event fleet runtime (statistical or real-model backend).
+
+    All algorithmic components are the real repro.core implementations;
+    wall-clock comes from the calibrated delay models.  This is the tool
+    for fleet-scale contention studies (Figs. 6–12)."""
+
+    def __init__(
+        self,
+        config: ServeConfig,
+        *,
+        backend=None,
+        rng: Optional[np.random.Generator] = None,
+        cloud: Optional[CloudDelayModel] = None,
+    ):
+        self.config = config
+        self.rng = rng or np.random.default_rng(0)
+        self.backend = backend or StatisticalBackend(self.rng)
+        config.configure_backend(self.backend)
+        self.cloud = cloud or CloudDelayModel(pipeline_len=config.pipeline_len)
+        self.simulator = Simulator(
+            config.to_sim_config(), self.cloud, self.backend, self.rng,
+            n_devices=config.n_devices,
+        )
+
+    def serve(self, requests) -> FleetMetrics:
+        for r in requests:
+            self.simulator.submit(Request(
+                req_id=r.req_id, device_id=r.device_id, arrival_s=r.arrival_s,
+                prompt_len=r.prompt_len, max_new_tokens=r.max_new_tokens,
+                prompt=getattr(r, "prompt", None),
+            ))
+        return self.simulator.run()
+
+
+class EngineRuntime:
+    """Real-tensor runtime: DeviceClient/CloudServer sessions over a
+    :class:`DelayModelTransport`.
+
+    Every token is really computed — shallow states on the device, codec
+    frames on the wire, slot-batched middle steps in the engine — while the
+    delay models supply simulated wall-clock.  Sessions run sequentially
+    (each on its own clock starting at its arrival time), so cross-request
+    queueing contention and the upload/compute overlap of chunked prefill
+    are *not* modeled here; use :class:`SimulatorRuntime` for those.  A
+    shared :class:`StateMonitor` accumulates across requests,
+    so later prefills get warmed-up Eq. 3 chunk sizes."""
+
+    def __init__(
+        self,
+        config: ServeConfig,
+        split: SplitModels,
+        *,
+        adapter_params: Optional[Params] = None,
+        medusa_params: Optional[Params] = None,
+        rng: Optional[np.random.Generator] = None,
+        n_slots: int = 8,
+        max_len: int = 512,
+        memory: Optional[jax.Array] = None,
+    ):
+        if config.sd == "draft" and adapter_params is None:
+            raise ValueError(
+                f"ServeConfig {config.framework!r} uses sd='draft': "
+                "EngineRuntime needs adapter_params"
+            )
+        if config.sd == "medusa" and medusa_params is None:
+            raise ValueError(
+                f"ServeConfig {config.framework!r} uses sd='medusa': "
+                "EngineRuntime needs medusa_params"
+            )
+        self.config = config
+        self.split = split
+        self.adapter_params = adapter_params
+        self.medusa_params = medusa_params
+        self.rng = rng or np.random.default_rng(0)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.memory = memory
+        self.monitor = StateMonitor(alpha=0.8)
+        self.server = CloudServer(
+            split, n_slots=n_slots, max_len=max_len,
+            max_batch_tokens=config.max_batch_tokens or 256,
+            wire_codec=config.codec_name, memory=memory,
+        )
+
+    def serve(self, requests) -> FleetMetrics:
+        cfg = self.config
+        metrics = FleetMetrics()
+        fleet = make_fleet(self.rng, cfg.n_devices)
+        net = NetworkModel(
+            self.rng, up_fixed=cfg.uplink_bps, down_fixed=cfg.downlink_bps
+        )
+        cloud = CloudDelayModel(pipeline_len=cfg.pipeline_len)
+        sd = cfg.sd
+        for spec in requests:
+            dev = fleet[spec.device_id % len(fleet)]
+            dev.maybe_rotate_mode()
+            transport = DelayModelTransport(
+                self.server, device=dev, net=net, cloud=cloud,
+                monitor=self.monitor, start_s=spec.arrival_s,
+            )
+            client = DeviceClient(
+                self.split, transport,
+                adapter_params=self.adapter_params if sd == "draft" else None,
+                medusa_params=self.medusa_params if sd == "medusa" else None,
+                sd=sd, pc=cfg.pc, pd=cfg.pd, eta=cfg.eta,
+                max_draft=cfg.max_draft,
+                topk=cfg.topk, max_len=self.max_len,
+                wire_codec=cfg.codec_name, fixed_chunk=cfg.fixed_chunk,
+                dynamic_chunks=cfg.dynamic_chunks,
+                pipeline_len=cfg.pipeline_len, monitor=self.monitor,
+                profile=dev, memory=self.memory,
+            )
+            prompt = spec.prompt
+            if prompt is None:
+                prompt = self.rng.integers(
+                    3, self.split.cfg.vocab_size, size=spec.prompt_len
+                ).astype(np.int32)
+            prompt = np.asarray(prompt, np.int32)[: self.max_len // 2]
+            req = Request(
+                req_id=spec.req_id, device_id=dev.dev_id,
+                arrival_s=spec.arrival_s, prompt_len=len(prompt),
+                max_new_tokens=spec.max_new_tokens, prompt=prompt,
+            )
+            req.phase = Phase.DECODE
+            for tok in client.generate(
+                prompt, max_new_tokens=spec.max_new_tokens, req_id=spec.req_id
+            ):
+                req.emit_tokens([tok], transport.clock_s)
+            stats = client.finished_stats.get(spec.req_id, {})
+            req.rounds = int(stats.get("rounds", 0))
+            req.drafted = int(stats.get("drafted", 0))
+            req.accepted = int(stats.get("accepted", 0))
+            req.phase = Phase.DONE
+            req.done_s = transport.clock_s
+            metrics.cloud_step_delays_s.extend(transport.cloud_step_delays_s)
+            metrics.add(req)
+        return metrics
+
+
+# ---------------------------------------------------------------------------
+# legacy wrapper
+# ---------------------------------------------------------------------------
+
+
+def run_fleet(
+    framework: str,
+    requests,
+    *,
+    rng: Optional[np.random.Generator] = None,
+    pipeline_len: int = 4,
+    hidden_bytes: Optional[float] = 4096 * 2,
+    backend=None,
+    n_devices: int = 30,
+    overrides: Optional[dict] = None,
+    wire_codec: Optional[str] = None,
+) -> FleetMetrics:
+    """Deprecated: thin back-compat wrapper over
+    ``ServeConfig.from_framework(...)`` + :class:`SimulatorRuntime`.
+
+    New code should build a :class:`ServeConfig` (``ServeConfig.hat()`` and
+    friends) and call ``SimulatorRuntime(config, backend=...).serve(reqs)``.
+    Codec-vs-``hidden_bytes`` precedence is resolved once by ServeConfig: a
+    requested codec switches byte accounting to codec-derived values and
+    configures the backend; otherwise the explicit ``hidden_bytes`` applies
+    and a backend-supplied codec is left untouched."""
+    kw = dict(overrides or {})
+    if wire_codec is not None:
+        kw.setdefault("wire_codec", wire_codec)
+    if (
+        "hidden_bytes_per_token" not in kw
+        and "wire_codec" not in kw
+        and hidden_bytes is not None
+    ):
+        kw["hidden_bytes_per_token"] = hidden_bytes
+    config = ServeConfig.from_framework(
+        framework, pipeline_len=pipeline_len, n_devices=n_devices, **kw
+    )
+    return SimulatorRuntime(config, backend=backend, rng=rng).serve(requests)

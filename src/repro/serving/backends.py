@@ -1,58 +1,39 @@
 """Real-model backend for the device-cloud simulator.
 
 Where ``StatisticalBackend`` samples outcomes, ``RealBackend`` runs actual
-JAX models: the device's draft model (shallow layers + distilled Λ + head),
-the cloud's middle submodel, and (for U-Medusa) real Medusa heads with tree
-verification.  The simulator still owns all wall-clock accounting — this
-backend answers *what tokens happen*, which is where accept lengths
-(Table 4) and ablation effects (Table 5) come from.
+JAX models.  It is a thin adaptor between the simulator's backend interface
+(the simulator owns all wall-clock accounting; the backend answers *what
+tokens happen*) and the session API: every request is a
+:class:`~repro.serving.api.DeviceClient` session speaking serialized
+``repro.wire`` frames over a :class:`~repro.serving.api.LoopbackTransport`
+into a :class:`~repro.serving.api.CloudServer` — so measured accept lengths
+(Table 4/5) exercise the same frames, codecs, slot-batched engine steps and
+KV admission as production serving, not a private re-implementation of the
+U path.
 
-SSM/hybrid archs roll back recurrent state by snapshot + re-advance over the
-accepted prefix (core/speculative.py, DESIGN.md §4).
+With a lossy ``wire_codec`` the hidden states genuinely cross the codec at
+both wire hops (shallow uplink, deep downlink), so measured accept lengths
+carry the true quantization error rather than a calibrated penalty.  With
+``wire_codec=None`` the wire is the bit-exact ``fp32`` codec: speculative
+output equals the teacher's greedy output token for token.
 
-With a lossy ``wire_codec`` the backend round-trips the actual hidden
-states through the codec at both wire crossings — shallow states before the
-middle submodel (uplink) and deep states before the output head (downlink)
-— so measured accept lengths carry the true quantization error rather than
-a calibrated penalty.
+SSM/hybrid archs roll recurrent state back through the transport's control
+channel (engine slot snapshot/restore) plus the device-local snapshot —
+see ``core/speculative.py`` and DESIGN.md §4.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core.adapter import DraftModel
-from ..core.speculative import (
-    draft_until_threshold,
-    accept_greedy_rows,
-    has_ssm_state,
-    restore_states,
-    snapshot_states,
-)
 from ..core.split import SplitModels
-from ..wire import get_codec
-from . import medusa as medusa_mod
+from .api import CloudServer, DeviceClient, LoopbackTransport
+from .kv_manager import KVBudget
 from .request import Request
 
 Params = Dict
-
-
-@dataclass
-class _ReqState:
-    in_cache: Dict
-    mid_cache: Dict
-    offset: int                      # U-path cache position (verified tokens)
-    draft_cache: Optional[Dict]
-    draft_offset: int
-    last_token: int = -1
-    topk_last: Optional[np.ndarray] = None
-    last_bonus: int = -1
-    deep_last: Optional[np.ndarray] = None
-    prompt: Optional[np.ndarray] = None
 
 
 class RealBackend:
@@ -69,54 +50,44 @@ class RealBackend:
         rng: Optional[np.random.Generator] = None,
         memory: Optional[jax.Array] = None,
         wire_codec: Optional[str] = None,
+        n_slots: int = 8,
+        max_batch_tokens: int = 256,
     ):
         self.split = split
-        self.codec = get_codec(wire_codec) if wire_codec is not None else None
         self.cfg = split.cfg
-        self.draft_model = (
-            DraftModel(split, adapter_params) if adapter_params is not None else None
-        )
-        self.medusa_params = medusa_params
-        self.eta = eta
-        self.max_draft = max_draft
-        self.topk = topk
         self.max_len = max_len
         self.rng = rng or np.random.default_rng(0)
-        self.memory = memory
-        self.ssm = has_ssm_state(self.cfg)
-        self.states: Dict[int, _ReqState] = {}
+        # None = "no codec requested": the exact fp32 wire (identity on f32)
+        codec_name = wire_codec if wire_codec is not None else "fp32"
+        # the simulator drives concurrency from outside (a slot is held from
+        # first_token until completion), so the engine pool auto-grows and
+        # the block budget is effectively unbounded — matching the old
+        # per-request-dict backend, which never capped concurrency
+        self.server = CloudServer(
+            split, n_slots=n_slots, max_len=max_len,
+            max_batch_tokens=max_batch_tokens, wire_codec=codec_name,
+            memory=memory, auto_grow=True,
+            kv_budget=KVBudget(block_tokens=128, total_blocks=1 << 30),
+        )
+        self.transport = LoopbackTransport(self.server)
+        self.client = DeviceClient(
+            split, self.transport,
+            adapter_params=adapter_params, medusa_params=medusa_params,
+            sd="auto", eta=eta, max_draft=max_draft, topk=topk,
+            max_len=max_len, wire_codec=codec_name, memory=memory,
+        )
 
     # ------------------------------------------------------------ plumbing
+    @property
+    def codec(self):
+        return self.client.codec
+
     def set_wire_codec(self, codec) -> None:
-        """run_fleet hook: the fleet's wire codec governs the run."""
-        self.codec = codec
-
-    def _wire(self, hidden: jax.Array) -> jax.Array:
-        """One wire crossing: encode/decode through the transport codec."""
-        if self.codec is None or not self.codec.lossy:
-            return hidden
-        return jnp.asarray(self.codec.roundtrip(np.asarray(hidden, np.float32)))
-
-    def _u_forward(self, st: _ReqState, tokens: np.ndarray):
-        """Run [1, T] tokens through the U path at st.offset; returns
-        (logits [T, V], deep [T, D]) and updates both caches.
-
-        The two ``_wire`` calls are the device->cloud and cloud->device
-        hops: the middle submodel only ever sees codec-round-tripped
-        shallow states, the head only codec-round-tripped deep states."""
-        toks = jnp.asarray(tokens, jnp.int32)[None]
-        shallow, st.in_cache, _ = self.split.input_model.apply(
-            self.split.input_params, toks, cache=st.in_cache,
-            offset=st.offset, memory=self.memory, return_hidden=True,
-        )
-        deep, st.mid_cache, _ = self.split.middle_model.apply(
-            self.split.middle_params, None, inputs_embeds=self._wire(shallow),
-            cache=st.mid_cache, offset=st.offset, memory=self.memory,
-            return_hidden=True,
-        )
-        deep = self._wire(deep)
-        logits = self.split.head_logits(deep)
-        return np.asarray(logits[0], np.float32), np.asarray(deep[0], np.float32)
+        """Fleet hook (``ServeConfig.configure_backend``): the run's wire
+        codec governs both hops — the client's uplink and the engine's
+        downlink encoding."""
+        self.client.codec = codec
+        self.server.engine.codec = codec
 
     def _prompt(self, req: Request) -> np.ndarray:
         if req.prompt is not None:
@@ -128,122 +99,26 @@ class RealBackend:
     # ----------------------------------------------------------- interface
     def first_token(self, req: Request) -> int:
         prompt = self._prompt(req)[: self.max_len // 2]
-        st = _ReqState(
-            in_cache=self.split.input_model.init_cache(
-                self.split.input_params, 1, self.max_len, memory=self.memory
-            ),
-            mid_cache=self.split.middle_model.init_cache(
-                self.split.middle_params, 1, self.max_len, memory=self.memory
-            ),
-            offset=0,
-            draft_cache=None,
-            draft_offset=0,
-            prompt=prompt,
+        return self.client.prefill(
+            req.req_id, prompt, expected_new_tokens=req.max_new_tokens
         )
-        logits, deep = self._u_forward(st, prompt)
-        st.offset = len(prompt)
-        st.deep_last = deep[-1]
-        tok = int(logits[-1].argmax())
-        st.last_token = tok
-        if self.draft_model is not None:
-            st.draft_cache = self.draft_model.init_cache(
-                1, self.max_len, memory=self.memory
-            )
-            _, st.draft_cache, _ = self.draft_model.forward(
-                jnp.asarray(prompt, jnp.int32)[None], cache=st.draft_cache,
-                offset=0, memory=self.memory,
-            )
-            st.draft_offset = len(prompt)
-        self.states[req.req_id] = st
-        return tok
 
     def draft(self, req: Request, max_draft: int) -> List[int]:
-        st = self.states[req.req_id]
-        snap = snapshot_states(st.draft_cache["input"]) if self.ssm else None
-        res, st.draft_cache, st.draft_offset = draft_until_threshold(
-            self.draft_model, st.draft_cache,
-            jnp.asarray([[st.last_token]], jnp.int32),
-            st.draft_offset, eta=self.eta,
-            max_draft=min(max_draft, self.max_draft), topk=self.topk,
-            memory=self.memory,
-        )
-        st.topk_last = res.topk_last
-        st._draft_snap = snap
-        return res.tokens.tolist()
+        return self.client.draft(req.req_id, max_draft)
 
     def verify(self, req: Request, draft: List[int]) -> Tuple[int, int]:
-        st = self.states[req.req_id]
-        toks = np.asarray([st.last_token] + list(draft), np.int32)
-        mid_snap = snapshot_states(st.mid_cache) if self.ssm else None
-        in_snap = snapshot_states(st.in_cache) if self.ssm else None
-        logits, deep = self._u_forward(st, toks)
-        if draft:
-            n, bonus = accept_greedy_rows(np.asarray(draft), logits)
-        else:
-            n, bonus = 0, int(logits[-1].argmax())
-        accepted = 1 + n                 # last_token + accepted drafts
-        if self.ssm and n < len(draft):
-            # roll back recurrent state and re-advance the accepted prefix
-            st.mid_cache = restore_states(st.mid_cache, mid_snap)
-            st.in_cache = restore_states(st.in_cache, in_snap)
-            logits2, deep2 = self._u_forward(st, toks[:accepted])
-            deep = deep2
-        st.offset += accepted
-        st.deep_last = deep[accepted - 1]
-        # device-side draft cache: positional rollback for attention; state
-        # rollback + re-advance for SSM draft layers
-        if self.draft_model is not None:
-            if self.ssm and getattr(st, "_draft_snap", None) is not None:
-                st.draft_cache["input"] = restore_states(
-                    st.draft_cache["input"], st._draft_snap
-                )
-            _, st.draft_cache, _ = self.draft_model.forward(
-                jnp.asarray(toks[:accepted], jnp.int32)[None],
-                cache=st.draft_cache, offset=st.offset - accepted,
-                memory=self.memory,
-            )
-            st.draft_offset = st.offset
-        st.last_bonus = bonus
-        st.last_token = bonus
-        return n, bonus
+        return self.client.verify(req.req_id, draft)
 
     def parallel_draft_hit(self, req: Request) -> bool:
-        st = self.states.get(req.req_id)
-        if st is None or st.topk_last is None:
-            return False
-        return int(st.last_bonus) in set(np.asarray(st.topk_last).tolist())
+        return self.client.parallel_draft_hit(req.req_id)
 
-    # ------------------------------------------------------------- medusa
     def medusa_tree(self, req: Request) -> int:
-        st = self.states[req.req_id]
-        paths = medusa_mod.build_tree_paths(
-            self.medusa_params, jnp.asarray(st.deep_last), tree_size=8
-        )
-        st._paths = paths
-        return 8                          # tree size charged to the wire/cloud
+        return self.client.medusa_tree(req.req_id)
 
     def medusa_verify(self, req: Request) -> Tuple[int, int]:
-        st = self.states[req.req_id]
-        paths = getattr(st, "_paths", None) or [[0]]
-        mid_snap = snapshot_states(st.mid_cache) if self.ssm else None
-        in_snap = snapshot_states(st.in_cache) if self.ssm else None
-        greedy_rows = []
-        for path in paths:
-            toks = np.asarray([st.last_token] + list(path), np.int32)
-            if self.ssm:
-                st.mid_cache = restore_states(st.mid_cache, mid_snap)
-                st.in_cache = restore_states(st.in_cache, in_snap)
-            logits, _ = self._u_forward(st, toks)
-            greedy_rows.append(logits.argmax(-1))
-            # positional rollback: next path overwrites the same offsets
-        best_pi, n, bonus = medusa_mod.accept_best_path(paths, greedy_rows)
-        # commit the winning path's prefix
-        commit = np.asarray([st.last_token] + list(paths[best_pi][:n]), np.int32)
-        if self.ssm:
-            st.mid_cache = restore_states(st.mid_cache, mid_snap)
-            st.in_cache = restore_states(st.in_cache, in_snap)
-        logits, deep = self._u_forward(st, commit)
-        st.offset += len(commit)
-        st.deep_last = deep[-1]
-        st.last_token = bonus
-        return n, bonus
+        return self.client.medusa_verify(req.req_id)
+
+    def finish_request(self, req_id: int) -> None:
+        """Simulator completion hook: release the device session and its
+        cloud engine slot."""
+        self.client.finish(req_id)

@@ -26,11 +26,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.speculative import SSM_STATE_KEYS
 from ..core.split import SplitModels
 from ..wire import KIND_DEEP, Frame, decode_hidden, encode_hidden, get_codec
 from .kv_manager import KVBudget, SlotKVManager
 
 F32 = jnp.float32
+
+
+class EngineOverflowError(RuntimeError):
+    """A job would write past its slot's KV cache (offset + T > max_len).
+
+    Raised per request at submit time; the offending request's slot is
+    released so the rest of the batch keeps serving."""
+
+    def __init__(self, req_id: int, offset: int, n_tokens: int, max_len: int):
+        self.req_id = req_id
+        super().__init__(
+            f"request {req_id}: job spans cache positions "
+            f"[{offset}, {offset + n_tokens}) but the slot holds max_len="
+            f"{max_len}; slot released"
+        )
 
 
 @dataclass
@@ -61,6 +77,7 @@ class CloudEngine:
         kv_budget: Optional[KVBudget] = None,
         memory: Optional[jax.Array] = None,
         wire_codec: str = "fp16",
+        auto_grow: bool = False,
     ):
         self.split = split
         self.codec = get_codec(wire_codec)       # downlink (deep-state) codec
@@ -69,7 +86,12 @@ class CloudEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.max_batch_tokens = max_batch_tokens
+        # auto_grow: double the slot pool instead of rejecting admission when
+        # every slot is occupied (session-adaptor use, where concurrency is
+        # driven from outside); explicit-capacity callers keep the hard cap
+        self.auto_grow = auto_grow
         self.kv = SlotKVManager(n_slots, max_len, kv_budget)
+        self._memory = memory
         mem = None
         if memory is not None:
             mem = jnp.broadcast_to(memory, (n_slots,) + memory.shape[-2:])
@@ -84,16 +106,50 @@ class CloudEngine:
 
     # --------------------------------------------------------------- admit
     def add_request(self, req_id: int, expected_tokens: int) -> bool:
+        if self.auto_grow and not self.kv.free_slots:
+            self._grow_slots(self.n_slots + 1)
         if not self.kv.can_admit(expected_tokens):
             return False
         self.kv.admit(req_id, expected_tokens)
         return True
+
+    def _grow_slots(self, min_slots: int) -> None:
+        """Double the slot pool, carrying every live slot's cache rows over.
+
+        The slot batch axis of every cache leaf is axis 1 (after the
+        scan-repetition axis), so the old cache copies into the head of a
+        freshly initialized larger one.  Each new batch width recompiles
+        the jitted step once; doubling keeps that logarithmic."""
+        new_n = max(self.n_slots * 2, min_slots)
+        mem = None
+        if self._memory is not None:
+            mem = jnp.broadcast_to(
+                self._memory, (new_n,) + self._memory.shape[-2:]
+            )
+        new_cache = self.split.middle_model.init_cache(
+            self.split.middle_params, new_n, self.max_len, memory=mem
+        )
+        self.cache = jax.tree.map(
+            lambda new, old: new.at[:, : old.shape[1]].set(old),
+            new_cache, self.cache,
+        )
+        self.n_slots = new_n
+        self.kv.grow(new_n)
 
     def finish_request(self, req_id: int) -> None:
         self.kv.release(req_id)
 
     def submit(self, job: EngineJob) -> None:
         assert job.req_id in self.kv.slot_of, "request not admitted"
+        if job.offset < 0 or job.offset + len(job.hidden) > self.max_len:
+            # previously this scribbled past the slot cache silently (XLA
+            # clamps dynamic-update-slice indices): fail loudly instead and
+            # free the capacity the broken request held
+            self.queue = [j for j in self.queue if j.req_id != job.req_id]
+            self.kv.release(job.req_id)
+            raise EngineOverflowError(
+                job.req_id, job.offset, len(job.hidden), self.max_len
+            )
         self.queue.append(job)
 
     # ---------------------------------------------------------------- wire
@@ -119,11 +175,20 @@ class CloudEngine:
         return data
 
     # ---------------------------------------------------------------- step
-    def _raw_step(self, params, cache, hidden, offsets, t_step: int):
+    def _raw_step(self, params, cache, hidden, offsets, mask, t_step: int):
         deep, new_cache, _ = self.split.middle_model.apply(
             params, None, inputs_embeds=hidden, cache=cache, offset=offsets,
         )
-        return deep, new_cache
+        # the model writes cache rows for EVERY batch slot — including idle
+        # ones, whose zero-input activations would scribble over other
+        # sessions' KV entries (and advance their recurrent state) at the
+        # leftover offset.  Keep the old cache for slots without a job in
+        # this batch.  [reps, n_slots, ...] leaves: mask broadcasts on axis 1.
+        def keep_active(new, old):
+            m = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+
+        return deep, jax.tree.map(keep_active, new_cache, cache)
 
     def step(self) -> List[EngineResult]:
         """One engine iteration: admit jobs under the token budget, run the
@@ -151,15 +216,18 @@ class CloudEngine:
         B = self.n_slots
         hidden = np.zeros((B, t_step, self.d_model), np.float32)
         offsets = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
         for j in chosen:
             slot = self.kv.slot_of[j.req_id]
             hidden[slot, : len(j.hidden)] = j.hidden
             offsets[slot] = j.offset
+            mask[slot] = True
             self.kv.extend(j.req_id, j.offset + len(j.hidden))
 
         deep, self.cache = self._step_fn(
             self.split.middle_params, self.cache,
-            jnp.asarray(hidden), jnp.asarray(offsets), t_step=t_step,
+            jnp.asarray(hidden), jnp.asarray(offsets), jnp.asarray(mask),
+            t_step=t_step,
         )
         deep = np.asarray(deep)
         self.steps += 1
@@ -177,3 +245,43 @@ class CloudEngine:
         while self.queue:
             res.extend(self.step())
         return res
+
+    # ---------------------------------------------------- SSM slot rollback
+    # Attention slots roll back *positionally* (the next job overwrites the
+    # rejected cache rows), but recurrent layers (mamba2/mlstm/slstm) carry
+    # state, not positions: speculative rollback needs the pre-verification
+    # state back.  These two methods give the cloud side of the session
+    # protocol a per-slot snapshot/restore, mirroring
+    # core.speculative.{snapshot,restore}_states at batch granularity.
+
+    def snapshot_slot(self, req_id: int):
+        """Copy the recurrent-state pieces of one request's slot.
+
+        State subtrees live under keys ``m2``/``ml``/``sl`` of each layer's
+        cache piece, with shape [reps, n_slots, ...] — the slot's batch row
+        sits on axis 1, after the scan-repetition axis."""
+        slot = self.kv.slot_of[req_id]
+        snap = []
+        for g in self.cache["groups"]:
+            snap.append({
+                lk: {k: jax.tree.map(lambda a: a[:, slot], piece[k])
+                     for k in SSM_STATE_KEYS if k in piece}
+                for lk, piece in g.items()
+            })
+        return snap
+
+    def restore_slot(self, req_id: int, snap) -> None:
+        """Overwrite one slot's recurrent-state pieces from a snapshot."""
+        slot = self.kv.slot_of[req_id]
+        new_groups = []
+        for g, sg in zip(self.cache["groups"], snap):
+            ng = {}
+            for lk, piece in g.items():
+                np_ = dict(piece)
+                for k, v in sg.get(lk, {}).items():
+                    np_[k] = jax.tree.map(
+                        lambda a, s: a.at[:, slot].set(s), np_[k], v
+                    )
+                ng[lk] = np_
+            new_groups.append(ng)
+        self.cache = {"groups": new_groups}

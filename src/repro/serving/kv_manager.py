@@ -68,6 +68,12 @@ class SlotKVManager:
         self.len_of[req_id] = new_len
         return True
 
+    def grow(self, new_n_slots: int) -> None:
+        """Enlarge the slot pool (engine auto-grow); block budget unchanged."""
+        assert new_n_slots >= self.n_slots
+        self.free_slots.extend(range(self.n_slots, new_n_slots))
+        self.n_slots = new_n_slots
+
     def release(self, req_id: int) -> None:
         slot = self.slot_of.pop(req_id)
         self.budget.used_blocks -= self.blocks_of.pop(req_id)

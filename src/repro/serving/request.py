@@ -126,8 +126,13 @@ class FleetMetrics:
             "tbt_p90_ms": float(np.percentile(tbt, 90) * 1e3) if len(tbt) else None,
             "accept_length": self.accept_length(),
         }
+        # always present (0.0 when no cloud steps ran) so callers never need
+        # defensive .get() fallbacks
         if self.cloud_step_delays_s:
             d = np.asarray(self.cloud_step_delays_s)
             out["cloud_delay_mean_ms"] = float(d.mean() * 1e3)
             out["cloud_delay_std_ms"] = float(d.std() * 1e3)
+        else:
+            out["cloud_delay_mean_ms"] = 0.0
+            out["cloud_delay_std_ms"] = 0.0
         return out

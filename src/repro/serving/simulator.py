@@ -25,7 +25,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.chunking import chunk_prompt, optimal_chunk_size
+from ..core.chunking import chunk_prompt, plan_chunks
 from ..core.monitor import StateMonitor
 from ..core.parallel_draft import parallel_draft_steps
 from ..wire import get_codec
@@ -201,38 +201,27 @@ class Simulator:
         req.phase = Phase.PREFILL
         A = self.cfg.hidden_bytes_per_token
 
+        req.chunk_sizes = plan_chunks(
+            req.prompt_len,
+            pc=self.cfg.pc,
+            dynamic_chunks=self.cfg.dynamic_chunks,
+            fixed_chunk=self.cfg.fixed_chunk,
+            hidden_bytes_per_token=A,
+            beta_up=self.monitor.device(dev.dev_id).beta_up.get(7.5e6),
+            g=self.monitor.g.predict,
+            mu=self.monitor.mu.get(64.0),
+            pipeline_len=self.cloud.pipeline_len,
+        )
+        self._chunks_done[req.req_id] = 0
         if self.cfg.pc == "device":
-            if self.cfg.dynamic_chunks:
-                x = optimal_chunk_size(
-                    prompt_len=req.prompt_len,
-                    hidden_bytes_per_token=A,
-                    beta_up=self.monitor.device(dev.dev_id).beta_up.get(7.5e6),
-                    g=self.monitor.g.predict,
-                    mu=self.monitor.mu.get(64.0),
-                    pipeline_len=self.cloud.pipeline_len,
-                )
-            else:
-                x = self.cfg.fixed_chunk
-            req.chunk_sizes = chunk_prompt(req.prompt_len, x)
             self._chunks_ready[req.req_id] = 0
-            self._chunks_done[req.req_id] = 0
             self._device_compute_chunk(req, dev, 0)
-        elif self.cfg.pc == "server":
-            # Sarathi: whole prompt's hidden states uploaded once; the CLOUD
-            # chunks them across inference steps (no transmission overlap).
-            req.chunk_sizes = chunk_prompt(req.prompt_len, self.cfg.fixed_chunk)
-            self._chunks_ready[req.req_id] = len(req.chunk_sizes)
-            self._chunks_done[req.req_id] = 0
-            comp = dev.shallow_delay(req.prompt_len)
-            t0 = max(self.now, self.dev_free[dev.dev_id]) + comp
-            self.dev_free[dev.dev_id] = t0
-            self._upload(req, dev, req.prompt_len * A, t0,
-                         lambda ft: self._enqueue_next_chunk(req, dev))
         else:
-            # plain U-shape: one bulk upload, one bulk prefill job
-            req.chunk_sizes = [req.prompt_len]
-            self._chunks_ready[req.req_id] = 1
-            self._chunks_done[req.req_id] = 0
+            # pc="server" (Sarathi): whole prompt's hidden states uploaded
+            # once, the CLOUD chunks them across inference steps (no
+            # transmission overlap).  pc=None (plain U-shape): one bulk
+            # upload, one bulk prefill job.
+            self._chunks_ready[req.req_id] = len(req.chunk_sizes)
             comp = dev.shallow_delay(req.prompt_len)
             t0 = max(self.now, self.dev_free[dev.dev_id]) + comp
             self.dev_free[dev.dev_id] = t0
@@ -390,6 +379,11 @@ class Simulator:
         req.phase = Phase.DONE
         req.done_s = self.now
         self.metrics.add(req)
+        # session-aware backends (the rebuilt RealBackend) hold per-request
+        # device caches and a cloud engine slot — let them release both
+        fin = getattr(self.backend, "finish_request", None)
+        if fin is not None:
+            fin(req.req_id)
 
     # ------------------------------------------------------------- transport
     def _upload(self, req, dev, nbytes, ready_t, cb) -> None:
@@ -465,57 +459,17 @@ class Simulator:
 
 
 # ---------------------------------------------------------------------------
-# convenience drivers
+# framework flag table (legacy)
 # ---------------------------------------------------------------------------
+#
+# Kept as the canonical name list; the flag combinations themselves are now
+# expressed by the typed ``ServeConfig`` constructors in ``serving.api``
+# (``ServeConfig.hat()`` etc.), and ``run_fleet`` lives there as a thin
+# deprecated wrapper.
 
 FRAMEWORKS = {
     "u-shape": dict(sd=None, pc=None, pd=False, max_batch_tokens=None),
-    "u-sarathi": dict(sd=None, pc="server", pd=False),
+    "u-sarathi": dict(sd=None, pc="server", pd=False, dynamic_chunks=False),
     "u-medusa": dict(sd="medusa", pc=None, pd=False, max_batch_tokens=None),
     "hat": dict(sd="draft", pc="device", pd=True),
 }
-
-
-def run_fleet(
-    framework: str,
-    requests,
-    *,
-    rng: Optional[np.random.Generator] = None,
-    pipeline_len: int = 4,
-    hidden_bytes: Optional[float] = 4096 * 2,
-    backend=None,
-    n_devices: int = 30,
-    overrides: Optional[dict] = None,
-    wire_codec: Optional[str] = None,
-) -> FleetMetrics:
-    rng = rng or np.random.default_rng(0)
-    kw = dict(FRAMEWORKS[framework])
-    if framework == "u-sarathi":
-        kw["dynamic_chunks"] = False
-    if wire_codec is not None:
-        kw["wire_codec"] = wire_codec
-    if overrides:
-        kw.update(overrides)
-    if "hidden_bytes_per_token" not in kw:
-        # a codec request (param or override) switches A to codec-derived
-        # accounting; otherwise the legacy explicit byte count applies
-        kw["hidden_bytes_per_token"] = None if "wire_codec" in kw else hidden_bytes
-    sim_cfg = SimConfig(**kw)
-    cloud = CloudDelayModel(pipeline_len=pipeline_len)
-    backend = backend or StatisticalBackend(rng)
-    # the fleet codec governs the backend's wire behaviour, but only when a
-    # codec was actually requested here — a backend configured directly by
-    # the caller (RealBackend(wire_codec=...), StatisticalBackend(wire_penalty=...))
-    # must not be clobbered by the fp16 default
-    if "wire_codec" in kw and hasattr(backend, "set_wire_codec"):
-        backend.set_wire_codec(get_codec(sim_cfg.wire_codec))
-    sim = Simulator(sim_cfg, cloud, backend, rng, n_devices=n_devices)
-    for r in requests:
-        sim.submit(
-            Request(
-                req_id=r.req_id, device_id=r.device_id, arrival_s=r.arrival_s,
-                prompt_len=r.prompt_len, max_new_tokens=r.max_new_tokens,
-                prompt=r.prompt,
-            )
-        )
-    return sim.run()

@@ -2,6 +2,7 @@ from .codec import (
     CODECS,
     Bf16TruncCodec,
     Fp16Codec,
+    Fp32Codec,
     IntCodec,
     WireCodec,
     codec_by_id,
@@ -24,7 +25,7 @@ from .framing import (
 )
 
 __all__ = [
-    "CODECS", "Bf16TruncCodec", "Fp16Codec", "IntCodec", "WireCodec",
+    "CODECS", "Bf16TruncCodec", "Fp16Codec", "Fp32Codec", "IntCodec", "WireCodec",
     "codec_by_id", "get_codec", "register_codec",
     "FLAG_WANT_DEEP", "FRAME_VERSION", "HEADER_BYTES", "KIND_DEEP",
     "KIND_IDS", "KIND_NAMES", "KIND_PREFILL", "KIND_VERIFY", "Frame",

@@ -119,6 +119,27 @@ class Fp16Codec(WireCodec):
 
 
 @dataclass(frozen=True)
+class Fp32Codec(WireCodec):
+    """Raw little-endian f32 rows: the bit-exact wire (A = 4·d_model).
+
+    Twice the fp16 payload — never the right choice for a real link, but
+    the only codec whose encode∘decode is the identity on f32 inputs.  The
+    session API uses it when a caller asks for an *exact* wire (e.g. the
+    losslessness tests pin speculative output == teacher greedy output,
+    which only holds if the wire adds zero noise)."""
+
+    def bytes_per_token(self, d_model: int) -> float:
+        return 4.0 * d_model
+
+    def encode(self, hidden: np.ndarray) -> bytes:
+        return np.asarray(hidden, np.float32).astype("<f4").tobytes()
+
+    def decode(self, payload: bytes, n_tokens: int, d_model: int) -> np.ndarray:
+        x = np.frombuffer(payload, dtype="<f4", count=n_tokens * d_model)
+        return x.reshape(n_tokens, d_model).astype(np.float32)
+
+
+@dataclass(frozen=True)
 class Bf16TruncCodec(WireCodec):
     """fp32 with the low 16 mantissa bits dropped (truncate-to-bf16)."""
 
@@ -187,6 +208,7 @@ register_codec(Fp16Codec("fp16", 0, lossy=False, accept_penalty=0.0))
 register_codec(Bf16TruncCodec("bf16-trunc", 1, lossy=True, accept_penalty=0.01))
 register_codec(IntCodec("int8", 2, lossy=True, accept_penalty=0.03, bits=8))
 register_codec(IntCodec("int4", 3, lossy=True, accept_penalty=0.12, bits=4))
+register_codec(Fp32Codec("fp32", 4, lossy=False, accept_penalty=0.0))
 
 
 def get_codec(name: str) -> WireCodec:

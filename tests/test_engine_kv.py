@@ -71,6 +71,38 @@ def test_engine_batches_multiple_slots(setup):
         assert err < 1e-3
 
 
+def test_engine_steps_do_not_corrupt_idle_slots(setup):
+    """A step must only write the cache rows of slots with a job in the
+    batch: interleaved requests keep exact KV state (regression — idle
+    slots used to be overwritten at offset 0 with zero-input garbage)."""
+    cfg, model, params, sp = setup
+    eng = CloudEngine(sp, n_slots=4, max_len=64, max_batch_tokens=64)
+    rng = np.random.default_rng(3)
+    toks = {rid: jnp.asarray(rng.integers(0, cfg.vocab_size, 12))[None]
+            for rid in (0, 1)}
+    sh = {}
+    for rid in (0, 1):
+        eng.add_request(rid, 24)
+        s, _, _ = sp.input_model.apply(sp.input_params, toks[rid],
+                                       return_hidden=True)
+        sh[rid] = np.asarray(s[0], np.float32)
+    # interleave: prefill halves of each request in alternating steps
+    for rid, lo, hi in [(0, 0, 6), (1, 0, 6), (0, 6, 12), (1, 6, 12)]:
+        eng.submit(EngineJob(rid, sh[rid][lo:hi], lo, "prefill"))
+        eng.drain()                                  # one-slot batches
+    # a second pass at the same offsets (positional overwrite) must see the
+    # identical cache prefix a single-request engine would
+    for rid in (0, 1):
+        ref, _, _ = sp.middle_model.apply(
+            sp.middle_params, None,
+            inputs_embeds=jnp.asarray(sh[rid])[None], return_hidden=True
+        )
+        eng.submit(EngineJob(rid, sh[rid][6:12], 6, "verify"))
+        (res,) = eng.drain()
+        err = float(np.abs(res.deep - np.asarray(ref[0][6:12])).max())
+        assert err < 1e-3, rid
+
+
 def test_engine_budget_splits_batches(setup):
     cfg, model, params, sp = setup
     eng = CloudEngine(sp, n_slots=4, max_len=64, max_batch_tokens=8)

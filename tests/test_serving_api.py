@@ -1,0 +1,348 @@
+"""Session API: DeviceClient / CloudServer / Transport / ServeConfig.
+
+The load-bearing guarantees:
+  * engine<->backend parity — DeviceClient+CloudServer over loopback emit
+    token-for-token identical output to a monolithic Model forward, and
+    identical accept lengths to the RealBackend-driven fleet at int8;
+  * ServeConfig resolves the codec-vs-hidden_bytes precedence once, and the
+    legacy ``run_fleet`` wrapper never clobbers a backend-supplied codec;
+  * CloudEngine bounds-checks slot writes instead of scribbling silently.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.core import init_adapter, split_model
+from repro.serving import (
+    CloudEngine,
+    CloudServer,
+    DelayModelTransport,
+    DeviceClient,
+    EngineJob,
+    EngineOverflowError,
+    EngineRuntime,
+    FleetMetrics,
+    LoopbackTransport,
+    RealBackend,
+    Request,
+    ServeConfig,
+    SimulatorRuntime,
+    StatisticalBackend,
+    run_fleet,
+)
+from repro.serving.delay_models import make_fleet
+from repro.wire import get_codec
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg, model, params = reduced_model("internlm2-1.8b")
+    return cfg, model, params, split_model(cfg, params)
+
+
+def _greedy(model, params, prompt, n_new, max_len=256):
+    cache = model.init_cache(params, 1, max_len)
+    lg, cache, _ = model.apply(params, jnp.asarray(prompt)[None], cache=cache, offset=0)
+    out = [int(lg[0, -1].argmax())]
+    off = len(prompt)
+    while len(out) < n_new:
+        lg, cache, _ = model.apply(params, jnp.asarray([[out[-1]]], jnp.int32),
+                                   cache=cache, offset=off)
+        off += 1
+        out.append(int(lg[0, -1].argmax()))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig
+# ---------------------------------------------------------------------------
+
+
+def test_serve_config_framework_constructors():
+    hat = ServeConfig.hat()
+    assert (hat.sd, hat.pc, hat.pd) == ("draft", "device", True)
+    ush = ServeConfig.u_shape()
+    assert (ush.sd, ush.pc, ush.pd, ush.max_batch_tokens) == (None, None, False, None)
+    sar = ServeConfig.u_sarathi()
+    assert (sar.pc, sar.dynamic_chunks) == ("server", False)
+    med = ServeConfig.u_medusa()
+    assert (med.sd, med.max_batch_tokens) == ("medusa", None)
+    # ablation overrides win over the framework defaults
+    abl = ServeConfig.from_framework("hat", sd=None, pd=False)
+    assert (abl.sd, abl.pc, abl.pd) == (None, "device", False)
+    with pytest.raises(KeyError):
+        ServeConfig.from_framework("nope")
+
+
+def test_serve_config_codec_resolution():
+    # no codec requested: fp16 byte accounting by default
+    c = ServeConfig.hat(d_model=4096)
+    assert c.wire_codec is None and c.hidden_bytes_per_token == 2 * 4096
+    # requested codec drives the byte accounting
+    c = ServeConfig.hat(wire_codec="int8", d_model=4096)
+    assert c.hidden_bytes_per_token == 4096 + 4
+    # explicit bytes beat the codec-derived value
+    c = ServeConfig.hat(wire_codec="int8", hidden_bytes_per_token=999.0)
+    assert c.hidden_bytes_per_token == 999.0
+
+
+def test_serve_config_backend_codec_not_clobbered():
+    """A backend configured by its caller keeps its codec unless the run
+    explicitly requests one (the old run_fleet clobbered it via the fp16
+    default)."""
+    rng = np.random.default_rng(0)
+    be = StatisticalBackend(rng, wire_penalty=0.07)
+    ServeConfig.hat().configure_backend(be)            # no codec requested
+    assert be.wire_penalty == 0.07
+    ServeConfig.hat(wire_codec="int8").configure_backend(be)
+    assert be.wire_penalty == get_codec("int8").accept_penalty
+
+
+def test_run_fleet_wrapper_codec_regression():
+    """Legacy-wrapper regression (the satellite fix): backend-supplied
+    codecs survive run_fleet unless a codec is requested."""
+    from repro.data import SPECBENCH, sample_workload
+
+    rng = np.random.default_rng(0)
+    reqs = sample_workload(SPECBENCH, rng, n_requests=10, rate_per_s=8)
+    be = StatisticalBackend(np.random.default_rng(1), wire_penalty=0.07)
+    run_fleet("hat", reqs, rng=np.random.default_rng(2), backend=be)
+    assert be.wire_penalty == 0.07                     # untouched
+    run_fleet("hat", reqs, rng=np.random.default_rng(2), backend=be,
+              wire_codec="int4")
+    assert be.wire_penalty == get_codec("int4").accept_penalty
+    # overrides-dict route requests a codec too
+    be2 = StatisticalBackend(np.random.default_rng(1))
+    run_fleet("hat", reqs, rng=np.random.default_rng(2), backend=be2,
+              overrides={"wire_codec": "int8"})
+    assert be2.wire_penalty == get_codec("int8").accept_penalty
+
+
+# ---------------------------------------------------------------------------
+# loopback parity: session API == monolithic model
+# ---------------------------------------------------------------------------
+
+
+def test_loopback_parity_u_shape(setup):
+    """DeviceClient+CloudServer (no drafting) over the loopback transport
+    emit token-for-token the monolithic model's greedy continuation, at
+    both the exact fp32 wire and the production fp16 wire."""
+    cfg, model, params, sp = setup
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(3, cfg.vocab_size, size=24).astype(np.int32)
+    ref = _greedy(model, params, prompt, 8)
+    for codec in ("fp32", "fp16"):
+        server = CloudServer(sp, n_slots=2, max_len=128, max_batch_tokens=64,
+                             wire_codec=codec)
+        client = DeviceClient(sp, LoopbackTransport(server), wire_codec=codec,
+                              max_len=128, fixed_chunk=16)
+        toks = list(client.generate(prompt, max_new_tokens=8))
+        assert toks == ref, codec
+
+
+def test_loopback_parity_hat_drafting(setup):
+    """Speculative decoding through the session API is lossless: with an
+    (untrained) adapter drafting, the emitted stream still equals greedy."""
+    cfg, model, params, sp = setup
+    adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(3, cfg.vocab_size, size=20).astype(np.int32)
+    server = CloudServer(sp, n_slots=2, max_len=128, wire_codec="fp32")
+    client = DeviceClient(sp, LoopbackTransport(server),
+                          adapter_params=adapter, wire_codec="fp32",
+                          max_len=128, fixed_chunk=16)
+    toks = list(client.generate(prompt, max_new_tokens=10))
+    assert toks == _greedy(model, params, prompt, 10)
+    stats = client.finished_stats[0]
+    assert stats["rounds"] >= 1 and stats["accepted"] >= stats["rounds"]
+
+
+def test_loopback_parity_ssm_arch():
+    """SSM middles roll back through the transport's control channel
+    (engine slot snapshot/restore) — losslessness must still hold."""
+    cfg, model, params = reduced_model("xlstm-350m")
+    sp = split_model(cfg, params)
+    adapter, _ = init_adapter(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(3, cfg.vocab_size, size=16).astype(np.int32)
+    server = CloudServer(sp, n_slots=2, max_len=128, wire_codec="fp32")
+    client = DeviceClient(sp, LoopbackTransport(server),
+                          adapter_params=adapter, wire_codec="fp32",
+                          max_len=128, fixed_chunk=16)
+    toks = list(client.generate(prompt, max_new_tokens=8))
+    assert toks == _greedy(model, params, prompt, 8, max_len=128)
+
+
+def test_sessions_interleave_and_release(setup):
+    """Multiple concurrent sessions batch through one server; closing a
+    session frees its slot for the next request."""
+    cfg, model, params, sp = setup
+    server = CloudServer(sp, n_slots=2, max_len=64, max_batch_tokens=64)
+    client = DeviceClient(sp, LoopbackTransport(server), max_len=64,
+                          fixed_chunk=16)
+    rng = np.random.default_rng(3)
+    prompts = {rid: rng.integers(3, cfg.vocab_size, size=12).astype(np.int32)
+               for rid in range(4)}                       # 4 sessions, 2 slots
+    for rid, prompt in prompts.items():
+        toks = list(client.generate(prompt, max_new_tokens=4, req_id=rid))
+        assert toks == _greedy(model, params, prompt, 4, max_len=64)
+    assert server.engine.kv.active == 0                   # all released
+
+
+def test_slot_auto_grow_preserves_live_sessions(setup):
+    """The engine doubles its slot pool under concurrent session pressure
+    (the RealBackend configuration), carrying live KV state across the
+    growth — interleaved decodes stay lossless."""
+    cfg, model, params, sp = setup
+    server = CloudServer(sp, n_slots=2, max_len=64, max_batch_tokens=64,
+                         auto_grow=True)
+    client = DeviceClient(sp, LoopbackTransport(server), max_len=64,
+                          fixed_chunk=16)
+    rng = np.random.default_rng(7)
+    prompts = {rid: rng.integers(3, cfg.vocab_size, size=12).astype(np.int32)
+               for rid in range(4)}                     # 4 live, 2 slots
+    outs = {rid: [client.prefill(rid, p)] for rid, p in prompts.items()}
+    assert server.engine.n_slots >= 4                   # pool grew
+    for _ in range(3):                                  # interleaved decode
+        for rid in prompts:
+            outs[rid].extend(client.step_decode(rid))
+    for rid, p in prompts.items():
+        ref = _greedy(model, params, p, len(outs[rid]), max_len=64)
+        assert outs[rid] == ref, rid
+        client.finish(rid)
+
+
+def test_generate_ends_stream_at_kv_capacity(setup):
+    """A session whose prompt + generation would outgrow the slot stops
+    streaming at capacity instead of overflowing the cache (with drafting
+    capacity-capped near the boundary)."""
+    cfg, model, params, sp = setup
+    adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(3, cfg.vocab_size, size=28).astype(np.int32)
+    for ad in (None, adapter):                     # u-shape and hat modes
+        server = CloudServer(sp, n_slots=2, max_len=32)
+        client = DeviceClient(sp, LoopbackTransport(server), max_len=32,
+                              adapter_params=ad, fixed_chunk=16)
+        toks = list(client.generate(prompt, max_new_tokens=10))
+        assert 1 <= len(toks) <= 32 - 28 + 1       # capped by capacity
+        assert toks == _greedy(model, params, prompt, len(toks), max_len=32)
+
+
+def test_engine_runtime_rejects_missing_params(setup):
+    cfg, model, params, sp = setup
+    with pytest.raises(ValueError, match="adapter_params"):
+        EngineRuntime(ServeConfig.hat(), sp)
+    with pytest.raises(ValueError, match="medusa_params"):
+        EngineRuntime(ServeConfig.u_medusa(), sp)
+
+
+def test_accept_parity_realbackend_int8(setup):
+    """Engine<->backend parity at int8: the RealBackend-driven fleet and a
+    bare DeviceClient session measure identical tokens and accept lengths —
+    they ARE the same path, and this pins it."""
+    cfg, model, params, sp = setup
+    adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(3, cfg.vocab_size, size=24).astype(np.int32)
+
+    from repro.data import RequestSpec
+    reqs = [RequestSpec(req_id=0, device_id=0, arrival_s=0.0, prompt_len=24,
+                        max_new_tokens=12, prompt=prompt)]
+    be = RealBackend(sp, adapter_params=adapter, max_len=256, wire_codec="int8")
+    m = run_fleet("hat", reqs, rng=np.random.default_rng(5), n_devices=1,
+                  wire_codec="int8", overrides={"d_model": cfg.d_model},
+                  backend=be)
+    (r,) = m.requests
+
+    server = CloudServer(sp, n_slots=2, max_len=256, wire_codec="int8")
+    client = DeviceClient(sp, LoopbackTransport(server),
+                          adapter_params=adapter, wire_codec="int8",
+                          max_len=256)
+    toks = list(client.generate(prompt, max_new_tokens=12))
+    stats = client.finished_stats[0]
+    assert toks == r.generated
+    assert stats["rounds"] == r.rounds
+    assert stats["accepted"] / stats["rounds"] == pytest.approx(r.accept_length)
+
+
+# ---------------------------------------------------------------------------
+# engine bounds check
+# ---------------------------------------------------------------------------
+
+
+def test_engine_overflow_raises_and_releases(setup):
+    cfg, model, params, sp = setup
+    eng = CloudEngine(sp, n_slots=2, max_len=32, max_batch_tokens=64)
+    assert eng.add_request(0, 32)
+    sh = np.zeros((16, cfg.d_model), np.float32)
+    eng.submit(EngineJob(0, sh, 0, "prefill"))            # [0, 16) fits
+    with pytest.raises(EngineOverflowError):
+        eng.submit(EngineJob(0, sh, 24, "prefill"))       # [24, 40) overflows
+    assert 0 not in eng.kv.slot_of                        # slot released
+    assert eng.queue == []                                # queued jobs dropped
+    assert eng.add_request(1, 32)                         # capacity reusable
+
+
+# ---------------------------------------------------------------------------
+# runtimes + transports + metrics
+# ---------------------------------------------------------------------------
+
+
+def test_delay_model_transport_keeps_clock(setup):
+    cfg, model, params, sp = setup
+    dev = make_fleet(np.random.default_rng(0), 1)[0]
+    server = CloudServer(sp, n_slots=2, max_len=64)
+    t = DelayModelTransport(server, device=dev, start_s=1.5,
+                            rng=np.random.default_rng(1))
+    client = DeviceClient(sp, t, max_len=64, fixed_chunk=16, profile=dev)
+    prompt = np.arange(3, 15, dtype=np.int32)
+    toks = list(client.generate(prompt, max_new_tokens=3))
+    assert len(toks) == 3
+    assert t.clock_s > 1.5                                # time actually passed
+    assert len(t.cloud_step_delays_s) >= 1
+    assert t.bytes_up > 0 and t.bytes_down > 0
+
+
+def test_engine_runtime_serves_fleet_metrics(setup):
+    cfg, model, params, sp = setup
+    from repro.data import RequestSpec
+
+    rng = np.random.default_rng(5)
+    reqs = [
+        RequestSpec(req_id=i, device_id=i, arrival_s=0.5 * i, prompt_len=16,
+                    max_new_tokens=4,
+                    prompt=rng.integers(3, cfg.vocab_size, 16).astype(np.int32))
+        for i in range(2)
+    ]
+    config = ServeConfig.u_shape(n_devices=2, wire_codec="fp16")
+    m = EngineRuntime(config, sp, rng=np.random.default_rng(6),
+                      n_slots=2, max_len=64).serve(reqs)
+    s = m.summary()
+    assert s["n"] == 2
+    assert s["ttft_mean_ms"] > 0 and s["tbt_mean_ms"] > 0
+    assert s["cloud_delay_mean_ms"] > 0
+    for r in m.requests:
+        assert len(r.generated) == 4
+        assert r.generated == _greedy(model, params, r.prompt, 4, max_len=64)
+
+
+def test_simulator_runtime_matches_run_fleet():
+    """The Runtime surface and the legacy wrapper are the same engine."""
+    from repro.data import SPECBENCH, sample_workload
+
+    rng = np.random.default_rng(0)
+    reqs = sample_workload(SPECBENCH, rng, n_requests=30, rate_per_s=8)
+    a = run_fleet("hat", reqs, rng=np.random.default_rng(1)).summary()
+    b = SimulatorRuntime(ServeConfig.hat(), rng=np.random.default_rng(1)) \
+        .serve(reqs).summary()
+    assert a == b
+
+
+def test_summary_always_has_cloud_delay_keys():
+    m = FleetMetrics()
+    s = m.summary()
+    assert s["cloud_delay_mean_ms"] == 0.0
+    assert s["cloud_delay_std_ms"] == 0.0
