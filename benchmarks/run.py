@@ -24,6 +24,7 @@ MODULES = [
     ("table5", "bench_table5_ablation"),
     ("fig1112", "bench_fig1112_pipeline"),
     ("wire", "bench_wire"),
+    ("engine", "bench_engine"),
     ("kernels", "bench_kernels"),
     ("roofline", "bench_roofline"),
 ]

@@ -1,10 +1,18 @@
-from .ops import attention_op, backend_kind, dequantize_op, quantize_op
+from .ops import (
+    VERIFY_MAX_T,
+    attention_impl_for,
+    attention_op,
+    backend_kind,
+    dequantize_op,
+    quantize_op,
+)
 from .prefill_attention import prefill_attention
 from .ref import attention_ref, dequantize_ref, mlstm_chunkwise_ref, quantize_ref
 from .verify_attention import verify_attention
 from .wire_quant import dequantize_unpack, quantize_pack
 
 __all__ = [
+    "VERIFY_MAX_T", "attention_impl_for",
     "attention_op", "backend_kind", "dequantize_op", "quantize_op",
     "prefill_attention", "attention_ref", "dequantize_ref",
     "mlstm_chunkwise_ref", "quantize_ref", "verify_attention",

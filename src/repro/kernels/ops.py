@@ -17,11 +17,25 @@ from .ref import attention_ref, dequantize_ref, quantize_ref
 from .verify_attention import verify_attention
 from .wire_quant import dequantize_unpack, quantize_pack
 
-VERIFY_MAX_T = 32     # below this query length, the decode-shaped kernel wins
+# Below this query length the decode-shaped kernel wins: a verify strip's
+# arithmetic intensity (~2·T flops/byte) is memory-bound, so the kernel that
+# pins the whole query block in VMEM and streams KV in large tiles beats the
+# MXU-tiled prefill kernel.  32 is where the [bq, bkv] prefill tiling stops
+# paying for itself (one 8-sublane-padded query tile).  HAT verify strips
+# (draft ≤ 8 ⇒ T ≤ 9) and medusa path commits are always below it.
+VERIFY_MAX_T = 32
 
 
 def backend_kind() -> str:
     return jax.default_backend()
+
+
+def attention_impl_for(t: int, causal: bool = True) -> str:
+    """Which Pallas kernel ``attention_op`` routes a T-row query block to:
+    ``"verify"`` (decode-shaped, KV-streaming) for short causal strips,
+    ``"prefill"`` (MXU-tiled) otherwise.  Exposed so dispatch is testable
+    without monkeypatching the kernels."""
+    return "verify" if causal and t <= VERIFY_MAX_T else "prefill"
 
 
 def attention_op(
@@ -38,8 +52,7 @@ def attention_op(
             window=window, causal=causal,
         )
     interpret = impl == "interpret" or backend_kind() != "tpu"
-    T = q.shape[1]
-    if causal and T <= VERIFY_MAX_T:
+    if attention_impl_for(q.shape[1], causal) == "verify":
         return verify_attention(
             q, k, v, offset, valid_len, window=window, interpret=interpret
         )

@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --framework hat --rate 6 --requests 200
   PYTHONPATH=src python -m repro.launch.serve --framework u-shape --workload cnn_dm
+  PYTHONPATH=src python -m repro.launch.serve --runtime engine --requests 8
 
 Runs the 30-device fleet simulator (all algorithmic components real; delay
 models calibrated to the paper's testbed — DESIGN.md §3) through the typed
@@ -9,6 +10,13 @@ session configuration (``ServeConfig`` + ``SimulatorRuntime``).  ``--real``
 swaps the statistical backend for actual JAX models (reduced config):
 slower but every token is really drafted/verified through DeviceClient /
 CloudServer sessions.
+
+``--runtime engine`` serves through the real-tensor :class:`EngineRuntime`
+instead: every session is a DeviceClient coroutine scheduled against the
+shared virtual clock, and the cloud batches prefill chunks + verify strips
+*across* sessions in slot-batched middle-submodel steps (continuous
+batching).  ``--sequential-engine`` keeps the legacy one-session-at-a-time
+parity mode.
 """
 from __future__ import annotations
 
@@ -30,6 +38,17 @@ def main() -> None:
     ap.add_argument("--real", action="store_true",
                     help="real JAX models (reduced config) instead of the "
                          "statistical backend")
+    ap.add_argument("--runtime", default="sim", choices=["sim", "engine"],
+                    help="sim: discrete-event fleet simulator; engine: "
+                         "real-tensor EngineRuntime (DeviceClient sessions "
+                         "through the slot-batched CloudEngine)")
+    ap.add_argument("--sequential-engine", action="store_true",
+                    help="with --runtime engine: disable the concurrent "
+                         "scheduler (legacy one-session-at-a-time mode)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="engine slot pool (concurrent sessions in flight)")
+    ap.add_argument("--max-len", type=int, default=512,
+                    help="engine slot capacity (tokens per session)")
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--wire-codec", default=None,
                     help="hidden-state transport codec (default: fp16 byte "
@@ -38,14 +57,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from ..data import CNN_DM, SPECBENCH, sample_workload
-    from ..serving import ServeConfig, SimulatorRuntime
+    from ..serving import EngineRuntime, ServeConfig, SimulatorRuntime
 
     spec = SPECBENCH if args.workload == "specbench" else CNN_DM
     d_model = 4096 if args.workload == "specbench" else 5120
     rng = np.random.default_rng(args.seed)
 
     backend = None
-    if args.real:
+    split = adapter = medusa = None
+    if args.real or args.runtime == "engine":
         import jax
 
         from ..configs import get_config
@@ -59,9 +79,10 @@ def main() -> None:
         split = split_model(cfg, params)
         adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
         medusa, _ = init_medusa(cfg, jax.random.PRNGKey(8))
-        backend = RealBackend(split, adapter_params=adapter,
-                              medusa_params=medusa, max_len=512,
-                              wire_codec=args.wire_codec)
+        if args.runtime == "sim":
+            backend = RealBackend(split, adapter_params=adapter,
+                                  medusa_params=medusa, max_len=512,
+                                  wire_codec=args.wire_codec)
         d_model = cfg.d_model
 
     config = ServeConfig.from_framework(
@@ -73,10 +94,21 @@ def main() -> None:
     )
     reqs = sample_workload(
         spec, rng, n_requests=args.requests, rate_per_s=args.rate,
-        n_devices=args.devices, with_tokens=args.real,
+        n_devices=args.devices,
+        with_tokens=args.real or args.runtime == "engine",
     )
-    runtime = SimulatorRuntime(config, backend=backend,
-                               rng=np.random.default_rng(args.seed + 1))
+    if args.runtime == "engine":
+        runtime = EngineRuntime(
+            config, split,
+            adapter_params=adapter if config.sd == "draft" else None,
+            medusa_params=medusa if config.sd == "medusa" else None,
+            rng=np.random.default_rng(args.seed + 1),
+            n_slots=args.slots, max_len=args.max_len,
+            concurrent=not args.sequential_engine,
+        )
+    else:
+        runtime = SimulatorRuntime(config, backend=backend,
+                                   rng=np.random.default_rng(args.seed + 1))
     print(json.dumps(runtime.serve(reqs).summary(), indent=1))
 
 

@@ -120,13 +120,21 @@ def _init_layer(cfg: ModelConfig, ld: LayerDef, key, dtype):
 class _Ctx:
     """Per-apply context threaded through layers."""
 
-    __slots__ = ("offset", "memory", "shared", "training")
+    __slots__ = ("offset", "memory", "shared", "training", "lengths")
 
-    def __init__(self, offset, memory, shared, training):
+    def __init__(self, offset, memory, shared, training, lengths=None):
         self.offset = offset          # scalar int32: absolute pos of chunk[0]
         self.memory = memory          # [B, M, D] frontend/encoder memory
         self.shared = shared          # zamba2 shared-attn params (or None)
         self.training = training
+        self.lengths = lengths        # [B] valid rows per batch slot (or None)
+
+    def valid_rows(self, T: int):
+        """[B, T] bool mask of real (non-padded) rows, or None."""
+        if self.lengths is None:
+            return None
+        t = jnp.arange(T, dtype=jnp.int32)[None, :]
+        return t < self.lengths[:, None]
 
 
 def _attn_block(
@@ -164,12 +172,16 @@ def _attn_block(
                 "per-slot offsets with ring-buffer windows: the batched "
                 "engine targets full-cache layers (DESIGN.md)"
             )
-        # per-slot offsets: scatter each row's chunk at its own position
+        # per-slot offsets: scatter each row's chunk at its own position.
+        # mode="drop" (not clip): a batched step right-pads slots to a
+        # common width, so a slot near capacity can carry pad rows whose
+        # positions fall past S-1 — clamping would scatter their garbage
+        # onto the slot's REAL last row (nondeterministically, via
+        # duplicate indices); dropping discards them entirely
         S = cache["k"].shape[2]
         b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
-        t_idx = jnp.clip(pos, 0, S - 1)                        # [B, T]
-        nk = cache["k"].at[b_idx, :, t_idx, :].set(k)          # adv-idx -> [B,T,nkv,hd]
-        nv = cache["v"].at[b_idx, :, t_idx, :].set(v)
+        nk = cache["k"].at[b_idx, :, pos, :].set(k, mode="drop")  # -> [B,T,nkv,hd]
+        nv = cache["v"].at[b_idx, :, pos, :].set(v, mode="drop")
         k_pos = jnp.arange(S, dtype=jnp.int32)
         out = attend(
             q, nk, nv, q_pos=pos, k_pos=k_pos, window=window, causal=causal,
@@ -283,15 +295,15 @@ def _apply_layer(cfg: ModelConfig, ld: LayerDef, p: Params, x, cpiece, ctx: _Ctx
         x = mlp_apply(p["mlp"], x, cfg)
     elif ld.kind == "mamba2":
         st = cp.get("m2") or ssm.mamba2_init_state(cfg, x.shape[0], x.dtype)
-        x, st = ssm.mamba2_apply(p["m2"], x, st, cfg)
+        x, st = ssm.mamba2_apply(p["m2"], x, st, cfg, valid=ctx.valid_rows(x.shape[1]))
         nc["m2"] = st
     elif ld.kind == "mlstm":
         st = cp.get("ml") or ssm.mlstm_init_state(cfg, x.shape[0], x.dtype)
-        x, st = ssm.mlstm_apply(p["mlstm"], x, st, cfg)
+        x, st = ssm.mlstm_apply(p["mlstm"], x, st, cfg, valid=ctx.valid_rows(x.shape[1]))
         nc["ml"] = st
     elif ld.kind == "slstm":
         st = cp.get("sl") or ssm.slstm_init_state(cfg, x.shape[0], x.dtype)
-        x, st = ssm.slstm_apply(p["slstm"], x, st, cfg)
+        x, st = ssm.slstm_apply(p["slstm"], x, st, cfg, valid=ctx.valid_rows(x.shape[1]))
         nc["sl"] = st
 
     if ld.shared_attn:
@@ -472,6 +484,7 @@ class Model:
         layer_range: Optional[Tuple[int, int]] = None,
         inputs_embeds: Optional[jax.Array] = None,
         return_hidden: bool = False,
+        lengths: Optional[jax.Array] = None,
     ):
         """Unified forward.
 
@@ -482,6 +495,11 @@ class Model:
                        HAT U-shaped split (device: [0, m) + head; cloud:
                        [m, n)).  Embedding applies iff lo == 0; final norm +
                        head apply iff hi == n_layers and return_hidden=False.
+        lengths     -> [B] count of *real* rows per batch slot when the
+                       chunk is right-padded to a common width (batched
+                       engine steps).  Attention is padding-safe by
+                       causality; recurrent layers use this to hold their
+                       state exactly still on padded rows.
         Returns (out, new_cache, aux); new_cache is None when cache is None.
         """
         cfg = self.cfg
@@ -500,7 +518,8 @@ class Model:
             x = x * math.sqrt(cfg.d_model)
         x = constrain(x, "act_btd")
 
-        ctx = _Ctx(offset, memory, params.get("shared_attn"), cache is None)
+        ctx = _Ctx(offset, memory, params.get("shared_attn"), cache is None,
+                   None if lengths is None else jnp.asarray(lengths, jnp.int32))
         aux_total = jnp.zeros((), F32)
         new_cache_groups = [] if cache is not None else None
 

@@ -8,6 +8,15 @@ entry point serves training (zero state, T = seq_len), chunked prefill, and
 speculative verification (T = draft length).  HAT's rejection rollback for
 SSM archs snapshots the state before verification (see core/speculative.py).
 
+Every ``*_apply`` accepts an optional per-row ``valid`` mask ([B, T] bool):
+rows marked invalid update the recurrent state as exact identities (decay 1,
+input 0 — the same trick the chunkwise forms use for their own tail
+padding), so a batched engine step may right-pad slots to a common width
+without perturbing their state.  This is what lets the cloud engine batch
+prefill chunks and verify strips of different lengths across requests in
+one step (continuous batching) while staying bit-identical to the unpadded
+computation.  ``valid=None`` is the untouched fast path.
+
 Time recursion uses ``lax.scan`` over T in the paper-faithful baseline;
 the EXACT chunkwise-parallel reformulations at the bottom of this module
 (enabled with REPRO_SSM_CHUNK, oracle in kernels/ref.py) cut the recurrent
@@ -75,7 +84,7 @@ def mamba2_init_state(cfg: ModelConfig, batch: int, dtype):
     }
 
 
-def mamba2_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
+def mamba2_apply(p: Params, x: jax.Array, state, cfg: ModelConfig, valid=None):
     B, T, d = x.shape
     s = cfg.ssm_state
     d_in, nh, conv_ch = _m2_dims(cfg)
@@ -90,13 +99,25 @@ def mamba2_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
     wc = cfg.ssm_conv
     conv = sum(ext[:, i : i + T, :] * p["conv_w"][i] for i in range(wc))
     xBC = jax.nn.silu(conv + p["conv_b"])
-    new_conv = ext[:, T:, :].astype(state["conv"].dtype)
+    if valid is None:
+        new_conv = ext[:, T:, :].astype(state["conv"].dtype)
+    else:
+        # carried conv tail = the last wc-1 rows *ending at each slot's own
+        # valid length*, not at the padded chunk end
+        lens = valid.astype(jnp.int32).sum(axis=1)             # [B]
+        idx = lens[:, None] + jnp.arange(wc - 1, dtype=jnp.int32)[None]
+        new_conv = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
+        new_conv = new_conv.astype(state["conv"].dtype)
 
     x_in, Bm, Cm = jnp.split(xBC, [d_in, d_in + s], axis=-1)
     xh = x_in.reshape(B, T, nh, hd).astype(F32)
     dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])       # [B,T,nh]
     dA = jnp.exp(-jnp.exp(p["A_log"]) * dt)                    # [B,T,nh]
     dBx = (dt * 1.0)[..., None] * xh                           # [B,T,nh,hd]
+    if valid is not None:
+        # identity state update on padded rows: decay 1, zero input
+        dA = jnp.where(valid[:, :, None], dA, 1.0)
+        dBx = jnp.where(valid[:, :, None, None], dBx, 0.0)
     Bm, Cm = Bm.astype(F32), Cm.astype(F32)
 
     chunk = _ssm_chunk()
@@ -169,7 +190,7 @@ def mlstm_init_state(cfg: ModelConfig, batch: int, dtype):
     }
 
 
-def mlstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
+def mlstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig, valid=None):
     B, T, d = x.shape
     d_in, nh, hd = _mlstm_dims(cfg)
 
@@ -181,6 +202,11 @@ def mlstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
     v = (x_in @ p["wv"]).reshape(B, T, nh, hd).astype(F32)
     ig = (x_in @ p["w_i"]).astype(F32) + p["b_i"]              # [B,T,nh]
     fg = (x_in @ p["w_f"]).astype(F32) + p["b_f"]
+    if valid is not None:
+        # padded rows must not touch (C, n, m): input gate -inf, forget
+        # gate -> sigmoid 1 — the chunkwise form's own padding convention
+        ig = jnp.where(valid[:, :, None], ig, -jnp.inf)
+        fg = jnp.where(valid[:, :, None], fg, 1e9)
 
     chunk = _ssm_chunk()
     if chunk > 0 and T > 1:
@@ -250,7 +276,7 @@ def slstm_init_state(cfg: ModelConfig, batch: int, dtype):
     }
 
 
-def slstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
+def slstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig, valid=None):
     B, T, d = x.shape
     nh = cfg.n_heads
     hd = d // nh
@@ -260,25 +286,46 @@ def slstm_apply(p: Params, x: jax.Array, state, cfg: ModelConfig):
 
     r = p["r_izfo"].astype(F32)
 
-    def step(carry, pre_t):
-        c, n, h, m = carry
+    def gates(pre_t, h, m):
         hh = h.reshape(B, nh, hd)
         rec = jnp.einsum("gnij,bnj->bgni", r, hh).reshape(B, 4 * d)
-        g = pre_t + rec
-        gi, gz, gf, go = jnp.split(g, 4, axis=-1)
+        gi, gz, gf, go = jnp.split(pre_t + rec, 4, axis=-1)
         log_f = -jax.nn.softplus(-gf)
         m_new = jnp.maximum(log_f + m, gi)
         i_p = jnp.exp(gi - m_new)
         f_p = jnp.exp(log_f + m - m_new)
+        return gz, go, m_new, i_p, f_p
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        gz, go, m_new, i_p, f_p = gates(pre_t, h, m)
         c = f_p * c + i_p * jnp.tanh(gz)
         n = f_p * n + i_p
         h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
         return (c, n, h, m_new), h
 
+    def step_masked(carry, inp):
+        pre_t, v = inp                                         # v: [B, 1] bool
+        c, n, h, m = carry
+        gz, go, m_new, i_p, f_p = gates(pre_t, h, m)
+        c_u = f_p * c + i_p * jnp.tanh(gz)
+        n_u = f_p * n + i_p
+        h_u = jax.nn.sigmoid(go) * c_u / jnp.maximum(n_u, 1e-6)
+        # h carries state (unlike attention outputs), so padded rows must
+        # hold every carry component — including h — exactly still
+        c = jnp.where(v, c_u, c)
+        n = jnp.where(v, n_u, n)
+        h = jnp.where(v, h_u, h)
+        m = jnp.where(v, m_new, m)
+        return (c, n, h, m), h
+
     xs = jnp.moveaxis(pre, 1, 0)
-    (c, n, h, m), ys = jax.lax.scan(
-        step, (state["c"], state["n"], state["h"], state["m"]), xs
-    )
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    if valid is None:
+        (c, n, h, m), ys = jax.lax.scan(step, carry0, xs)
+    else:
+        vs = jnp.moveaxis(valid, 1, 0)[:, :, None]
+        (c, n, h, m), ys = jax.lax.scan(step_masked, carry0, (xs, vs))
     y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                 # [B,T,d]
     y = rms_norm(y, p["gnorm"], cfg.rmsnorm_eps)
     return x + y, {"c": c, "n": n, "h": h, "m": m}

@@ -19,6 +19,7 @@ engine's downlink codec for the device-bound hop.  The bare-array
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -30,8 +31,18 @@ from ..core.speculative import SSM_STATE_KEYS
 from ..core.split import SplitModels
 from ..wire import KIND_DEEP, Frame, decode_hidden, encode_hidden, get_codec
 from .kv_manager import KVBudget, SlotKVManager
+from .scheduling import budgeted_admission
 
 F32 = jnp.float32
+
+
+def bucket_t_step(t: int, max_len: int) -> int:
+    """Round a step width up to the next power of two (clamped to the slot
+    capacity).  The jitted step is compiled per distinct ``t_step``, so
+    bucketing bounds the compile count at O(log max_len) instead of one
+    variant per distinct chunk/strip width the fleet ever produces."""
+    assert 1 <= t <= max_len, (t, max_len)
+    return min(1 << (t - 1).bit_length(), max_len)
 
 
 class EngineOverflowError(RuntimeError):
@@ -56,6 +67,7 @@ class EngineJob:
     offset: int                 # cache position of hidden[0]
     kind: str                   # "prefill" | "verify"
     want_deep: bool = True      # return deep hidden states (last chunk/verify)
+    ready_s: float = 0.0        # frame event timestamp (sender clock)
 
 
 @dataclass
@@ -73,7 +85,7 @@ class CloudEngine:
         *,
         n_slots: int = 8,
         max_len: int = 512,
-        max_batch_tokens: int = 256,
+        max_batch_tokens: Optional[int] = 256,   # None = unbudgeted (naive)
         kv_budget: Optional[KVBudget] = None,
         memory: Optional[jax.Array] = None,
         wire_codec: str = "fp16",
@@ -100,9 +112,23 @@ class CloudEngine:
         )
         self.queue: List[EngineJob] = []
         self.d_model = split.cfg.d_model
-        self._step_fn = jax.jit(self._raw_step, static_argnames=("t_step",))
+        # the cache is donated into the jitted step: the middle submodel's
+        # KV/state tree is by far the engine's largest buffer, and without
+        # donation XLA copies it wholesale every step (launch/steps.py
+        # donates the same way for the lowered serving steps)
+        self._step_fn = jax.jit(
+            self._raw_step, static_argnames=("t_step",), donate_argnums=(1,)
+        )
         self.steps = 0
         self.batched_token_history: List[int] = []
+        self._compiled: set = set()          # (n_slots, t_step) variants
+        self.last_step_info: List[Dict] = []  # per-job metadata of last step
+        self.step_wall_s = 0.0               # host wall time inside step()
+
+    @property
+    def jit_compiles(self) -> int:
+        """Distinct (n_slots, t_step) step variants compiled so far."""
+        return len(self._compiled)
 
     # --------------------------------------------------------------- admit
     def add_request(self, req_id: int, expected_tokens: int) -> bool:
@@ -164,7 +190,8 @@ class CloudEngine:
         self.wire_bytes_in += frame.nbytes()
         hidden = decode_hidden(frame, self.d_model)
         self.submit(EngineJob(frame.req_id, hidden, frame.offset,
-                              frame.kind_name, want_deep=frame.want_deep))
+                              frame.kind_name, want_deep=frame.want_deep,
+                              ready_s=frame.t_send))
 
     def encode_result(self, res: EngineResult) -> bytes:
         """Serialize a step result's deep hidden states for the downlink."""
@@ -175,15 +202,20 @@ class CloudEngine:
         return data
 
     # ---------------------------------------------------------------- step
-    def _raw_step(self, params, cache, hidden, offsets, mask, t_step: int):
+    def _raw_step(self, params, cache, hidden, offsets, lengths, t_step: int):
+        mask = lengths > 0
         deep, new_cache, _ = self.split.middle_model.apply(
             params, None, inputs_embeds=hidden, cache=cache, offset=offsets,
+            lengths=lengths,
         )
         # the model writes cache rows for EVERY batch slot — including idle
         # ones, whose zero-input activations would scribble over other
         # sessions' KV entries (and advance their recurrent state) at the
         # leftover offset.  Keep the old cache for slots without a job in
-        # this batch.  [reps, n_slots, ...] leaves: mask broadcasts on axis 1.
+        # this batch; padded *rows* of active slots are handled inside the
+        # model (causality for attention, ``lengths`` identity updates for
+        # recurrent state).  [reps, n_slots, ...] leaves: mask broadcasts
+        # on axis 1.
         def keep_active(new, old):
             m = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
             return jnp.where(m, new, old)
@@ -192,52 +224,73 @@ class CloudEngine:
 
     def step(self) -> List[EngineResult]:
         """One engine iteration: admit jobs under the token budget, run the
-        middle submodel once, return deep hidden states per job."""
+        middle submodel once, return deep hidden states per job.
+
+        Admission is the shared Sarathi-style policy (scheduling.py): with a
+        multi-request queue, one step carries prefill chunks and verify
+        strips of *different* sessions — the batch is right-padded to a
+        power-of-two ``t_step``, padding/scatter stays on device, and only
+        the rows of slots that asked for deep states come back to the host.
+        """
         if not self.queue:
             return []
-        # --- budgeted admission: verifies first, then prefill chunks -------
-        budget = self.max_batch_tokens
-        chosen: List[EngineJob] = []
-        busy_slots = set()
-        for job in sorted(self.queue, key=lambda j: 0 if j.kind == "verify" else 1):
-            t = len(job.hidden)
-            slot = self.kv.slot_of[job.req_id]
-            if slot in busy_slots or (chosen and t > budget):
-                continue
-            chosen.append(job)
-            busy_slots.add(slot)
-            budget -= t
-            if budget <= 0:
-                break
-        chosen_ids = {id(j) for j in chosen}
-        self.queue = [j for j in self.queue if id(j) not in chosen_ids]
+        t_start = time.perf_counter()
+        chosen, self.queue = budgeted_admission(
+            self.queue, self.max_batch_tokens,
+            tokens_of=lambda j: len(j.hidden),
+            slot_of=lambda j: self.kv.slot_of[j.req_id],
+        )
 
-        t_step = max(len(j.hidden) for j in chosen)
+        t_step = bucket_t_step(
+            max(len(j.hidden) for j in chosen), self.max_len
+        )
         B = self.n_slots
-        hidden = np.zeros((B, t_step, self.d_model), np.float32)
+        # device-side batch assembly in ONE scatter: the host transfers
+        # exactly the jobs' own rows (the wire payload, concatenated) plus
+        # a flat index vector; zero-padding to [B, t_step, D] happens on
+        # device, with no full-batch host round trip and no per-job
+        # dispatch chain re-materializing the padded buffer
         offsets = np.zeros((B,), np.int32)
-        mask = np.zeros((B,), bool)
+        lengths = np.zeros((B,), np.int32)
+        flat_idx: List[np.ndarray] = []
         for j in chosen:
             slot = self.kv.slot_of[j.req_id]
-            hidden[slot, : len(j.hidden)] = j.hidden
             offsets[slot] = j.offset
-            mask[slot] = True
+            lengths[slot] = len(j.hidden)
+            flat_idx.append(slot * t_step + np.arange(len(j.hidden)))
             self.kv.extend(j.req_id, j.offset + len(j.hidden))
-
-        deep, self.cache = self._step_fn(
-            self.split.middle_params, self.cache,
-            jnp.asarray(hidden), jnp.asarray(offsets), jnp.asarray(mask),
-            t_step=t_step,
+        rows = np.concatenate(
+            [np.asarray(j.hidden, np.float32) for j in chosen], axis=0
         )
-        deep = np.asarray(deep)
+        hidden = (
+            jnp.zeros((B * t_step, self.d_model), F32)
+            .at[jnp.asarray(np.concatenate(flat_idx), np.int32)]
+            .set(jnp.asarray(rows))
+            .reshape(B, t_step, self.d_model)
+        )
+
+        self._compiled.add((B, t_step))
+        deep, self.cache = self._step_fn(
+            self.split.middle_params, self.cache, hidden,
+            jnp.asarray(offsets), jnp.asarray(lengths), t_step=t_step,
+        )
         self.steps += 1
         self.batched_token_history.append(sum(len(j.hidden) for j in chosen))
+        self.last_step_info = [
+            {"req_id": j.req_id, "kind": j.kind, "tokens": len(j.hidden),
+             "ready_s": j.ready_s, "want_deep": j.want_deep}
+            for j in chosen
+        ]
 
         out = []
         for j in chosen:
             slot = self.kv.slot_of[j.req_id]
-            d = deep[slot, : len(j.hidden)] if j.want_deep else None
+            # only want_deep rows cross back to the host (the downlink);
+            # other slots' deep states never leave the device
+            d = np.asarray(deep[slot, : len(j.hidden)]) if j.want_deep else None
             out.append(EngineResult(j.req_id, d, j.kind, offset=j.offset))
+        jax.block_until_ready(deep)    # charge the step its own compute
+        self.step_wall_s += time.perf_counter() - t_start
         return out
 
     def drain(self) -> List[EngineResult]:

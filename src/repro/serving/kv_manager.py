@@ -32,6 +32,7 @@ class SlotKVManager:
         self.slot_of: Dict[int, int] = {}          # req_id -> slot
         self.blocks_of: Dict[int, int] = {}        # req_id -> charged blocks
         self.len_of: Dict[int, int] = {}           # req_id -> current length
+        self.peak_active: int = 0                  # max concurrent sessions seen
 
     # ----------------------------------------------------------- admission
     def _blocks_for(self, tokens: int) -> int:
@@ -52,6 +53,7 @@ class SlotKVManager:
         self.blocks_of[req_id] = need
         self.budget.used_blocks += need
         self.len_of[req_id] = 0
+        self.peak_active = max(self.peak_active, self.active)
         return slot
 
     # ------------------------------------------------------------- growth

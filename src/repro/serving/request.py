@@ -78,6 +78,11 @@ class FleetMetrics:
 
     requests: List[Request] = field(default_factory=list)
     cloud_step_delays_s: List[float] = field(default_factory=list)
+    # engine/cloud utilization: batched tokens of every cloud step (filled
+    # by the simulator's batch loop and by EngineRuntime from the engine's
+    # step history) + the engine's jit compile count (0 for the simulator)
+    cloud_batch_tokens: List[int] = field(default_factory=list)
+    engine_jit_compiles: int = 0
 
     def add(self, r: Request) -> None:
         self.requests.append(r)
@@ -135,4 +140,13 @@ class FleetMetrics:
         else:
             out["cloud_delay_mean_ms"] = 0.0
             out["cloud_delay_std_ms"] = 0.0
+        # batching efficiency, observable from every runtime: how many
+        # tokens each cloud step actually carried, how many steps ran, and
+        # how many step variants the engine had to compile (0 = simulator)
+        bt = self.cloud_batch_tokens
+        out["cloud_steps"] = len(bt)
+        out["batch_tokens_per_step_mean"] = (
+            float(np.mean(bt)) if bt else 0.0
+        )
+        out["engine_jit_compiles"] = int(self.engine_jit_compiles)
         return out

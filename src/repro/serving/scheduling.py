@@ -1,0 +1,66 @@
+"""Shared cloud-scheduler semantics: Sarathi-style budgeted admission.
+
+One policy, two executors.  The discrete-event :class:`~.simulator.Simulator`
+and the real-tensor :class:`~.engine.CloudEngine` must admit work into a
+batch the same way, or the simulator's contention numbers stop predicting
+the engine's — this module is the single implementation both call.
+
+The policy (paper §3.3 / Sarathi-Serve):
+
+* decode work (``verify`` strips) is admitted before prefill chunks —
+  decode latency is the SLA-bound quantity;
+* a token budget caps the batch (``max_batch_tokens``); an oversized job is
+  admitted *alone* rather than starved;
+* ``max_batch_tokens=None`` is the naive baseline: batch everything
+  (U-shape / U-Medusa — long prompts interfere with decode, Fig. 1(c));
+* at most one job per engine slot (``slot_of``): two jobs of one request
+  are sequentially dependent through its KV cache rows.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple, TypeVar
+
+J = TypeVar("J")
+
+
+def budgeted_admission(
+    jobs: Sequence[J],
+    max_batch_tokens: Optional[int],
+    *,
+    tokens_of: Callable[[J], int],
+    kind_of: Callable[[J], str] = lambda j: j.kind,
+    slot_of: Optional[Callable[[J], int]] = None,
+) -> Tuple[List[J], List[J]]:
+    """Pick one batch from ``jobs`` -> (chosen, remaining).
+
+    ``remaining`` preserves the original queue order of the jobs that were
+    not admitted (continuous batching: they stay queued for the next step).
+    """
+    if not jobs:
+        return [], []
+    if max_batch_tokens is None:
+        # naive batching admits everything anyway: keep queue order so the
+        # baselines' event ordering (and RNG draws) match the historical
+        # unbudgeted path exactly
+        order = list(jobs)
+    else:
+        order = sorted(jobs, key=lambda j: 0 if kind_of(j) == "verify" else 1)
+    budget = float("inf") if max_batch_tokens is None else max_batch_tokens
+    chosen: List[J] = []
+    busy: set = set()
+    for j in order:
+        if budget <= 0:
+            break
+        slot = slot_of(j) if slot_of is not None else None
+        if slot is not None and slot in busy:
+            continue
+        t = tokens_of(j)
+        if chosen and t > budget:
+            continue                      # oversized mid-batch: wait its turn
+        chosen.append(j)
+        if slot is not None:
+            busy.add(slot)
+        budget -= t
+    chosen_ids = {id(j) for j in chosen}
+    rest = [j for j in jobs if id(j) not in chosen_ids]
+    return chosen, rest

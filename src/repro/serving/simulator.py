@@ -31,6 +31,7 @@ from ..core.parallel_draft import parallel_draft_steps
 from ..wire import get_codec
 from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
 from .request import FleetMetrics, Phase, Request
+from .scheduling import budgeted_admission
 
 
 # ---------------------------------------------------------------------------
@@ -416,32 +417,23 @@ class Simulator:
         self.cloud_scheduled = False
         if not self.jobs:
             return
-        if self.cfg.max_batch_tokens is None:
-            # naive continuous batching (vLLM-style, prefill-prioritized,
-            # no token budget): long prompts join decode batches and inflate
-            # every round in them (Fig. 1(c) interference)
-            batch = list(self.jobs)
-            self.jobs = []
-        else:
-            # continuous batching with a token budget: verifies (decode)
-            # first, then prefill chunks fill the remainder (Sarathi-style
-            # admission); an oversized job is admitted alone, not starved.
-            budget = self.cfg.max_batch_tokens
-            batch = []
-            for j in sorted(self.jobs, key=lambda j: 0 if j.kind == "verify" else 1):
-                if budget <= 0:
-                    break
-                if j.tokens <= budget or not batch:
-                    batch.append(j)
-                    budget -= j.tokens
-            in_batch = set(id(j) for j in batch)
-            self.jobs = [j for j in self.jobs if id(j) not in in_batch]
+        # Shared scheduler semantics (scheduling.py): with a token budget,
+        # verifies (decode) first then prefill chunks fill the remainder
+        # (Sarathi-style); an oversized job is admitted alone, not starved.
+        # Without a budget, naive continuous batching (vLLM-style): long
+        # prompts join decode batches and inflate every round in them
+        # (Fig. 1(c) interference).  The real-tensor CloudEngine admits
+        # through the same function.
+        batch, self.jobs = budgeted_admission(
+            self.jobs, self.cfg.max_batch_tokens, tokens_of=lambda j: j.tokens
+        )
 
         tokens = sum(j.tokens for j in batch)
         full = self.cloud.delay(tokens)
         stage = self.cloud.stage_time(tokens)
         self.monitor.record_batch(tokens, full)
         self.metrics.cloud_step_delays_s.append(stage)
+        self.metrics.cloud_batch_tokens.append(tokens)
 
         done_t = self.now + full
         stage_t = self.now + stage

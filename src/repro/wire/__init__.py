@@ -22,6 +22,7 @@ from .framing import (
     decode_hidden,
     encode_hidden,
     iter_frames,
+    stamp_t_send,
 )
 
 __all__ = [
@@ -29,5 +30,5 @@ __all__ = [
     "codec_by_id", "get_codec", "register_codec",
     "FLAG_WANT_DEEP", "FRAME_VERSION", "HEADER_BYTES", "KIND_DEEP",
     "KIND_IDS", "KIND_NAMES", "KIND_PREFILL", "KIND_VERIFY", "Frame",
-    "decode_hidden", "encode_hidden", "iter_frames",
+    "decode_hidden", "encode_hidden", "iter_frames", "stamp_t_send",
 ]

@@ -5,7 +5,7 @@ arrays: a frame carries enough routing metadata (request, cache offset,
 job kind, codec) for the receiver to decode the payload and place it at the
 right KV position without side-channel state.
 
-Layout (little-endian, 20-byte header)::
+Layout (little-endian, 28-byte header)::
 
     magic    2s   b"HW"
     version  B    FRAME_VERSION
@@ -16,7 +16,15 @@ Layout (little-endian, 20-byte header)::
     offset   I    cache position of payload row 0
     n_tokens H
     length   I    payload byte length
+    t_send   d    event timestamp (seconds, sender clock; 0 = unstamped)
     payload  length bytes (codec-encoded [n_tokens, d_model] rows)
+
+``t_send`` is the frame *event timestamp*: transports that keep a virtual
+clock (``DelayModelTransport``) stamp each uplink frame with its
+send-complete time, so the cloud scheduler knows when a queued job became
+available — the concurrent ``EngineRuntime`` derives batch start times from
+it.  Stamping is done in place on the serialized bytes (``stamp_t_send``)
+so the encode path stays codec-pure.
 
 Frames are self-delimiting, so a TCP-style byte stream of concatenated
 frames is parsed with ``iter_frames``.
@@ -32,7 +40,7 @@ import numpy as np
 from .codec import WireCodec, codec_by_id
 
 MAGIC = b"HW"
-FRAME_VERSION = 1
+FRAME_VERSION = 2
 
 KIND_PREFILL = 0
 KIND_VERIFY = 1
@@ -42,8 +50,9 @@ KIND_IDS = {v: k for k, v in KIND_NAMES.items()}
 
 FLAG_WANT_DEEP = 1
 
-_HEADER = struct.Struct("<2sBBBBIIHI")
+_HEADER = struct.Struct("<2sBBBBIIHId")
 HEADER_BYTES = _HEADER.size
+_T_SEND_OFFSET = HEADER_BYTES - 8          # f64 tail of the header
 
 
 @dataclass(frozen=True)
@@ -55,6 +64,7 @@ class Frame:
     n_tokens: int
     payload: bytes
     flags: int = 0
+    t_send: float = 0.0        # event timestamp (sender clock, seconds)
 
     @property
     def want_deep(self) -> bool:
@@ -72,6 +82,7 @@ class Frame:
         return _HEADER.pack(
             MAGIC, FRAME_VERSION, self.codec_id, self.kind, self.flags,
             self.req_id, self.offset, self.n_tokens, len(self.payload),
+            self.t_send,
         ) + self.payload
 
     def nbytes(self) -> int:
@@ -92,7 +103,7 @@ class Frame:
         """Parse one frame at ``data[pos:]`` -> (frame, end position)."""
         if len(data) - pos < HEADER_BYTES:
             raise ValueError("truncated frame header")
-        magic, ver, codec_id, kind, flags, req_id, offset, n_tok, plen = (
+        magic, ver, codec_id, kind, flags, req_id, offset, n_tok, plen, t_send = (
             _HEADER.unpack_from(data, pos)
         )
         if magic != MAGIC:
@@ -105,7 +116,20 @@ class Frame:
         if len(data) < end:
             raise ValueError("truncated frame payload")
         return cls(req_id, offset, kind, codec_id, n_tok,
-                   bytes(data[pos + HEADER_BYTES:end]), flags), end
+                   bytes(data[pos + HEADER_BYTES:end]), flags, t_send), end
+
+
+def stamp_t_send(data: bytes, t_send: float) -> bytes:
+    """Rewrite a serialized frame's event timestamp in place.
+
+    Transports own the clock, not codecs: the client encodes the frame
+    once, and the transport stamps the send-complete time into the header
+    tail just before handing the bytes to the receiver."""
+    if len(data) < HEADER_BYTES or data[:2] != MAGIC:
+        raise ValueError("not a frame")
+    buf = bytearray(data)
+    struct.pack_into("<d", buf, _T_SEND_OFFSET, float(t_send))
+    return bytes(buf)
 
 
 def iter_frames(stream: bytes) -> Iterator[Frame]:
@@ -125,6 +149,7 @@ def encode_hidden(
     offset: int,
     kind: str,
     want_deep: bool = True,
+    t_send: float = 0.0,
 ) -> bytes:
     """Encode one chunk of hidden states as a wire frame."""
     hidden = np.asarray(hidden, np.float32)
@@ -132,7 +157,7 @@ def encode_hidden(
     return Frame(
         req_id=req_id, offset=offset, kind=KIND_IDS[kind],
         codec_id=codec.codec_id, n_tokens=hidden.shape[0],
-        payload=codec.encode(hidden), flags=flags,
+        payload=codec.encode(hidden), flags=flags, t_send=t_send,
     ).to_bytes()
 
 

@@ -57,6 +57,36 @@ def test_verify_kernel_allclose(case, dtype):
     assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))) < tol
 
 
+def test_attention_op_threshold_dispatch():
+    """VERIFY_MAX_T routes short causal strips to the decode-shaped kernel
+    and long chunks to the MXU-tiled prefill kernel."""
+    from repro.kernels import VERIFY_MAX_T, attention_impl_for
+
+    assert attention_impl_for(1) == "verify"
+    assert attention_impl_for(VERIFY_MAX_T) == "verify"
+    assert attention_impl_for(VERIFY_MAX_T + 1) == "prefill"
+    assert attention_impl_for(4, causal=False) == "prefill"   # non-causal
+
+
+@pytest.mark.parametrize("T", [4, 9, 32, 33, 48])
+def test_attention_op_interpret_parity(T):
+    """attention_op(impl='interpret') — whichever Pallas kernel the
+    VERIFY_MAX_T threshold picks — matches the jnp oracle on both sides of
+    the dispatch boundary."""
+    from repro.kernels import attention_impl_for, attention_op
+
+    B, S, nh, nkv, hd = 2, 96, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(T), 3)
+    q = jax.random.normal(ks[0], (B, T, nh, hd))
+    k = jax.random.normal(ks[1], (B, S, nkv, hd))
+    v = jax.random.normal(ks[2], (B, S, nkv, hd))
+    off = S - T - 5
+    vlen = off + T
+    out = attention_op(q, k, v, off, vlen, impl="interpret")
+    ref = attention_op(q, k, v, off, vlen, impl="reference")
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5, attention_impl_for(T)
+
+
 def test_kernels_match_model_attention(key):
     """The kernel semantics equal the model's attend() on a cache snapshot."""
     from repro.models.layers import attend
