@@ -18,6 +18,11 @@ Emits the standard ``name,us_per_call,derived`` CSV rows plus a JSON anchor
 file (``--json``) with the raw sweep, and enforces the acceptance bar:
 concurrent ≥ 1.5× sequential engine tokens/s at 8 sessions.
 
+``--trace-out PATH`` runs one extra *traced* concurrent pass after the
+(untraced) timing sweep, asserts every request's per-phase TTFT breakdown
+sums to its measured TTFT within 1%, and dumps the Chrome-trace JSON —
+open it in chrome://tracing or ui.perfetto.dev.
+
     PYTHONPATH=src python benchmarks/bench_engine.py            # full sweep
     PYTHONPATH=src python benchmarks/bench_engine.py --smoke    # CI smoke
 """
@@ -109,12 +114,54 @@ def _run(cfg, split, adapter, *, codec, n_sessions, concurrent,
     return best
 
 
+def _traced_pass(cfg, split, adapter, *, n_sessions, prompt_len, new_tokens,
+                 max_len, trace_out):
+    """One flight-recorded concurrent run: dump the Chrome trace and check
+    the per-request phase breakdown tiles TTFT (the obs contract)."""
+    from repro.obs import Tracer, validate_chrome_trace
+    from repro.serving import EngineRuntime, ServeConfig
+
+    tracer = Tracer()
+    config = ServeConfig.hat(
+        wire_codec="fp16", n_devices=max(n_sessions, 1),
+        dynamic_chunks=False, fixed_chunk=16,
+    )
+    runtime = EngineRuntime(
+        config, split, adapter_params=adapter,
+        rng=np.random.default_rng(1), n_slots=max(n_sessions, 8),
+        max_len=max_len, concurrent=True, tracer=tracer,
+    )
+    m = runtime.serve(_specs(cfg, n_sessions, prompt_len=prompt_len,
+                             new_tokens=new_tokens))
+    worst = 0.0
+    for r in m.requests:
+        assert r.phase_ttft_s is not None, f"req {r.req_id} has no breakdown"
+        err = abs(sum(r.phase_ttft_s.values()) - r.ttft_s) / max(r.ttft_s, 1e-12)
+        worst = max(worst, err)
+        if err > 0.01:
+            raise SystemExit(
+                f"req {r.req_id}: phase breakdown off by {err:.2%} "
+                f"(> 1% of TTFT) — span tiling broke"
+            )
+    obj = tracer.to_chrome_trace()
+    validate_chrome_trace(obj)
+    tracer.dump(trace_out)
+    bd = m.summary()["ttft_breakdown_ms"]
+    emit(
+        "engine_trace_ttft_breakdown", 0.0,
+        ";".join(f"{k}={v:.1f}ms" for k, v in bd.items())
+        + f";worst_err={worst:.2e};events={len(obj['traceEvents'])}",
+    )
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI (fp16, 1/8 sessions)")
     ap.add_argument("--json", default="bench_engine.json",
                     help="JSON anchor output path")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump a Chrome-trace JSON from a traced extra pass")
     ap.add_argument("--arch", default="internlm2-1.8b")
     args, _ = ap.parse_known_args(argv)
 
@@ -161,6 +208,14 @@ def main(argv=None) -> None:
     with open(args.json, "w") as f:
         json.dump({"rows": rows, "speedup_at_8_sessions": anchors,
                    "accept_bar": ACCEPT_SPEEDUP}, f, indent=1)
+
+    if args.trace_out:
+        # separate pass so the timing rows above stay untraced
+        _traced_pass(
+            cfg, split, adapter, n_sessions=ACCEPT_SESSIONS,
+            prompt_len=prompt_len, new_tokens=new_tokens, max_len=max_len,
+            trace_out=args.trace_out,
+        )
 
     worst = min(anchors.values())
     if worst < ACCEPT_SPEEDUP:

@@ -44,6 +44,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI (fp16/int8 at 5 MB/s)")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump a Chrome-trace JSON from a traced fleet run")
     args, _ = ap.parse_known_args(argv)
 
     codecs = ["fp16", "int8"] if args.smoke else CODECS
@@ -71,6 +73,27 @@ def main(argv=None) -> None:
             raise SystemExit(
                 f"int8 wire TTFT cut {cut:.1%} < 25% acceptance bar at 5 MB/s"
             )
+
+    if args.trace_out:
+        # flight-recorded fleet run (discrete-event simulator on its
+        # virtual clock): same trace format as the engine benches
+        from repro.data import SPECBENCH, sample_workload
+        from repro.obs import Tracer, validate_chrome_trace
+        from repro.serving import ServeConfig, SimulatorRuntime
+
+        tracer = Tracer()
+        rng = np.random.default_rng(0)
+        reqs = sample_workload(SPECBENCH, rng, n_requests=min(n, 20),
+                               rate_per_s=6.0)
+        SimulatorRuntime(
+            ServeConfig.hat(wire_codec="int8", uplink_bps=5e6,
+                            downlink_bps=10e6),
+            rng=np.random.default_rng(1), tracer=tracer,
+        ).serve(reqs)
+        obj = tracer.to_chrome_trace()
+        validate_chrome_trace(obj)
+        tracer.dump(args.trace_out)
+        emit("wire_trace_events", 0.0, f"{len(obj['traceEvents'])}")
 
 
 if __name__ == "__main__":

@@ -17,8 +17,19 @@ import json
 import numpy as np
 
 
+def _dump_trace(tracer, path, label):
+    from repro.obs import validate_chrome_trace
+
+    obj = tracer.to_chrome_trace()
+    validate_chrome_trace(obj)
+    tracer.dump(path)
+    print(f"{label}: {len(obj['traceEvents'])} trace events -> {path} "
+          "(open in chrome://tracing or ui.perfetto.dev)")
+
+
 def fleet_comparison(args):
     from repro.data import SPECBENCH, sample_workload
+    from repro.obs import Tracer
     from repro.serving import ServeConfig, SimulatorRuntime
 
     rng = np.random.default_rng(0)
@@ -77,12 +88,19 @@ def fleet_comparison(args):
             fw, wire_codec=args.wire_codec, d_model=d_model,
             pipeline_len=args.pipeline_len,
         )
+        # flight-record the HAT run when asked: every hop of every request
+        # lands in one Chrome trace on the simulator's virtual clock
+        tracer = Tracer() if args.trace_out and fw == "hat" else None
         runtime = SimulatorRuntime(config, backend=make_backend(fw),
-                                   rng=np.random.default_rng(9))
-        s = runtime.serve(reqs).summary()
+                                   rng=np.random.default_rng(9),
+                                   tracer=tracer)
+        m = runtime.serve(reqs)
+        s = m.summary()
         print(f"{fw:12s} {s['ttft_mean_ms']:10.1f} {s['tbt_mean_ms']:9.1f} "
               f"{s['accept_length']:7.2f} "
               f"{s['cloud_delay_mean_ms']:6.1f}±{s['cloud_delay_std_ms']:.1f}")
+        if tracer is not None:
+            _dump_trace(tracer, args.trace_out, f"{fw} fleet trace")
 
 
 def engine_demo(args):
@@ -145,8 +163,13 @@ def engine_demo(args):
     ]
     config = ServeConfig.u_shape(wire_codec=args.wire_codec, n_devices=3,
                                  dynamic_chunks=False, fixed_chunk=16)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
     runtime = EngineRuntime(config, split, rng=np.random.default_rng(1),
-                            n_slots=4, max_len=128, concurrent=True)
+                            n_slots=4, max_len=128, concurrent=True,
+                            tracer=tracer)
     m = runtime.serve(reqs)
     s = m.summary()
     for r in m.requests:
@@ -155,6 +178,11 @@ def engine_demo(args):
           f"{s['batch_tokens_per_step_mean']:.1f} tokens/step, "
           f"{s['engine_jit_compiles']} step variants compiled, "
           f"peak {runtime.server.engine.kv.peak_active} sessions in flight")
+    if tracer is not None:
+        bd = s.get("ttft_breakdown_ms", {})
+        print("mean TTFT breakdown: "
+              + ", ".join(f"{k} {v:.2f}ms" for k, v in bd.items()))
+        _dump_trace(tracer, args.trace_out, "engine trace")
 
 
 def main():
@@ -165,6 +193,9 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--engine", action="store_true")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump a Chrome-trace JSON of the run "
+                         "(HAT fleet run, or the concurrent engine demo)")
     from repro.wire import CODECS
 
     ap.add_argument("--wire-codec", default="fp16", choices=sorted(CODECS),

@@ -1,0 +1,88 @@
+"""Summarize a flight-recorder Chrome-trace JSON in the terminal.
+
+The trace itself opens in chrome://tracing or https://ui.perfetto.dev; this
+script is the no-browser path: validate the schema, then print per-request
+phase tables (where every millisecond of each request's TTFT window went)
+and the longest individual spans.
+
+    PYTHONPATH=src python scripts/render_trace.py bench_engine_trace.json
+    PYTHONPATH=src python scripts/render_trace.py trace.json --top 20
+
+stdlib + repro.obs only — safe to run anywhere the repo runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from repro.obs import PHASES, PID_VIRTUAL, TID_CLOUD, validate_chrome_trace
+
+
+def _spans(obj):
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "X":
+            yield ev
+
+
+def phase_table(obj) -> dict:
+    """tid -> phase -> total ms, over the virtual-time request rows."""
+    table: dict = defaultdict(lambda: defaultdict(float))
+    for ev in _spans(obj):
+        if ev["pid"] != PID_VIRTUAL or ev["tid"] == TID_CLOUD:
+            continue
+        phase = ev.get("args", {}).get("phase")
+        if phase:
+            table[ev["tid"]][phase] += ev["dur"] / 1e3
+    return table
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON (tracer.dump output)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="longest spans to list")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        obj = json.load(f)
+    validate_chrome_trace(obj)
+
+    spans = list(_spans(obj))
+    other = obj.get("otherData", {})
+    print(f"{args.trace}: schema v{obj['schemaVersion']}, "
+          f"{len(obj['traceEvents'])} events ({len(spans)} spans), "
+          f"{other.get('droppedEvents', 0)} dropped")
+
+    table = phase_table(obj)
+    if table:
+        cols = [p for p in PHASES if any(p in r for r in table.values())]
+        header = "req".rjust(6) + "".join(c.rjust(12) for c in cols) \
+            + "total ms".rjust(12)
+        print("\nper-request phase attribution (ms):\n" + header)
+        for tid in sorted(table):
+            row = table[tid]
+            print(f"{tid:6d}"
+                  + "".join(f"{row.get(c, 0.0):12.2f}" for c in cols)
+                  + f"{sum(row.values()):12.2f}")
+
+    longest = sorted(spans, key=lambda e: e["dur"], reverse=True)[: args.top]
+    if longest:
+        print(f"\ntop {len(longest)} spans by duration:")
+        for ev in longest:
+            where = ("cloud" if ev["tid"] == TID_CLOUD
+                     else f"req {ev['tid']}" if ev["pid"] == PID_VIRTUAL
+                     else "host")
+            print(f"  {ev['dur'] / 1e3:10.2f} ms  {ev['name']:<16s} {where}")
+
+    hists = other.get("histograms", {})
+    for name, h in hists.items():
+        if h.get("count"):
+            print(f"\nhistogram {name}: n={h['count']} mean={h['mean']:.1f} "
+                  f"p50={h['p50']:.1f} p90={h['p90']:.1f} max={h['max']:.1f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -66,9 +66,13 @@ class DelayPredictor:
             # single observation: scale ∝ tokens beyond the observed point
             return float(ys[0] * max(1.0, t / max(xs[0], 1.0)))
         if t >= xs[-1]:
+            # delays are non-negative: noisy bins can give the tail a
+            # negative slope, and unclamped linear extrapolation would then
+            # predict negative delays far past the last bin (which breaks
+            # the Eq. 3 chunk solver's cost comparison)
             slope = (ys[-1] - ys[-2]) / max(xs[-1] - xs[-2], 1e-9)
-            return float(ys[-1] + slope * (t - xs[-1]))
-        return float(np.interp(t, xs, ys))
+            return float(max(ys[-1] + slope * (t - xs[-1]), 0.0))
+        return float(max(np.interp(t, xs, ys), 0.0))
 
 
 @dataclass

@@ -1,0 +1,26 @@
+from .bridge import StateMonitorBridge, attach_monitor
+from .export import (
+    PROCESS_NAMES,
+    TRACE_SCHEMA_VERSION,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from .tracer import (
+    NULL_TRACER,
+    PHASES,
+    PID_HOST,
+    PID_VIRTUAL,
+    TID_CLOUD,
+    Histogram,
+    NullTracer,
+    TraceEvent,
+    Tracer,
+)
+
+__all__ = [
+    "StateMonitorBridge", "attach_monitor",
+    "PROCESS_NAMES", "TRACE_SCHEMA_VERSION", "to_chrome_trace",
+    "validate_chrome_trace",
+    "NULL_TRACER", "PHASES", "PID_HOST", "PID_VIRTUAL", "TID_CLOUD",
+    "Histogram", "NullTracer", "TraceEvent", "Tracer",
+]

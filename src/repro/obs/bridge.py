@@ -1,0 +1,73 @@
+"""StateMonitor <- trace spans: one observation point for the §3.2 EWMAs.
+
+Before the flight recorder, every transport/runtime updated the
+:class:`~repro.core.monitor.StateMonitor` from its own ad-hoc call sites.
+Now the instrumented hops emit spans and this bridge turns them into the
+paper's observations, so tracing and monitoring can never disagree about
+what happened on a hop:
+
+    ``uplink`` span    (dev_id, nbytes)  -> β_up  = nbytes / duration
+    ``downlink`` span  (dev_id, nbytes)  -> β_down = nbytes / duration
+    ``cloud_step`` span (tokens)         -> μ, η, g  (record_batch)
+    ``draft`` span     (dev_id, steps)   -> γ_i   = duration / steps
+
+Durations prefer the exact ``dur_s`` attribute over ``t1 - t0``: virtual
+clocks place spans at ``t0 + dur``, and the float round-trip
+``(t0 + dur) - t0`` can differ from ``dur`` in the last ulp — enough to
+perturb EWMA state and break the sequential-vs-concurrent token-parity
+guarantee that both modes feed the monitor identical samples.
+
+The bridge fires even when the tracer's ring buffer is disabled (observers
+always run), so monitoring works with tracing off.  Note the discrete-event
+``Simulator`` intentionally does *not* use the bridge — it feeds its
+monitor directly (its zero-duration transfer convention differs) — so do
+not attach one to a tracer you pass to ``SimulatorRuntime``.
+"""
+from __future__ import annotations
+
+from ..core.monitor import StateMonitor
+from .tracer import Tracer, TraceEvent
+
+
+class StateMonitorBridge:
+    """Trace observer mapping hop spans onto StateMonitor updates."""
+
+    def __init__(self, monitor: StateMonitor):
+        self.monitor = monitor
+
+    def __call__(self, ev: TraceEvent) -> None:
+        if ev.ph != "X":
+            return
+        a = ev.attrs
+        dur = a.get("dur_s", ev.t1_s - ev.t0_s)
+        if ev.name == "uplink":
+            if dur > 0 and "dev_id" in a and "nbytes" in a:
+                self.monitor.record_device(
+                    a["dev_id"], beta_up=a["nbytes"] / dur
+                )
+        elif ev.name == "downlink":
+            if dur > 0 and "dev_id" in a and "nbytes" in a:
+                self.monitor.record_device(
+                    a["dev_id"], beta_down=a["nbytes"] / dur
+                )
+        elif ev.name == "cloud_step":
+            if "tokens" in a:
+                self.monitor.record_batch(int(a["tokens"]), dur)
+        elif ev.name == "draft":
+            steps = a.get("steps", 0)
+            if dur > 0 and steps and "dev_id" in a:
+                self.monitor.record_device(a["dev_id"], gamma=dur / steps)
+
+
+def attach_monitor(tracer: Tracer, monitor: StateMonitor) -> StateMonitorBridge:
+    """Idempotently subscribe a bridge for ``monitor`` on ``tracer``.
+
+    Several components sharing one tracer (a runtime plus its per-session
+    transports) each ensure their monitor is bridged; only the first
+    subscription sticks, so one hop never produces duplicate EWMA samples."""
+    for obs in tracer.observers:
+        if isinstance(obs, StateMonitorBridge) and obs.monitor is monitor:
+            return obs
+    bridge = StateMonitorBridge(monitor)
+    tracer.subscribe(bridge)
+    return bridge

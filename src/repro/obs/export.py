@@ -1,0 +1,116 @@
+"""Chrome-trace / Perfetto JSON export for the flight recorder.
+
+The output follows the Chrome Trace Event Format (the ``traceEvents``
+array form), so a dump opens directly in ``chrome://tracing`` or
+https://ui.perfetto.dev.  Layout:
+
+* pid :data:`~repro.obs.tracer.PID_VIRTUAL` — the fleet on virtual time:
+  one thread row per request (tid = req_id) carrying its phase spans, plus
+  a ``cloud`` row (tid = :data:`~repro.obs.tracer.TID_CLOUD`) with the
+  batched engine steps.
+* pid :data:`~repro.obs.tracer.PID_HOST` — host wall time: the engine's
+  batch-build / jit-step / gather spans and counters.
+
+The two pids are different time domains (a virtual second is not a wall
+second), so timestamps are normalized to each pid's own epoch; rows within
+a pid are mutually comparable, rows across pids are not.
+
+``schemaVersion`` is the trace format contract: consumers
+(``scripts/render_trace.py``, the CI smoke assertion) check it before
+reading anything else and must be bumped together with layout changes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .tracer import PID_HOST, PID_VIRTUAL, TID_CLOUD, Tracer
+
+TRACE_SCHEMA_VERSION = 1
+
+PROCESS_NAMES = {
+    PID_VIRTUAL: "fleet (virtual time)",
+    PID_HOST: "engine host (wall time)",
+}
+
+
+def _jsonable(v):
+    """Chrome trace args must be plain JSON — collapse numpy scalars."""
+    if hasattr(v, "item"):
+        return v.item()
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+def _thread_name(pid: int, tid: int) -> str:
+    if tid == TID_CLOUD:
+        return "cloud"
+    if pid == PID_VIRTUAL:
+        return f"req {tid}"
+    return "engine" if tid == 0 else f"host {tid}"
+
+
+def to_chrome_trace(tracer: Tracer) -> dict:
+    events = list(tracer.events)
+    epoch: Dict[int, float] = {}
+    for ev in events:
+        epoch[ev.pid] = min(epoch.get(ev.pid, ev.t0_s), ev.t0_s)
+
+    trace_events: List[dict] = []
+    for pid, name in sorted(PROCESS_NAMES.items()):
+        if pid in epoch:
+            trace_events.append({
+                "ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                "args": {"name": name},
+            })
+    for pid, tid in sorted({(ev.pid, ev.tid) for ev in events}):
+        trace_events.append({
+            "ph": "M", "name": "thread_name", "pid": pid, "tid": tid,
+            "args": {"name": _thread_name(pid, tid)},
+        })
+
+    for ev in events:
+        ts_us = (ev.t0_s - epoch[ev.pid]) * 1e6
+        args = {k: _jsonable(v) for k, v in ev.attrs.items()}
+        rec = {
+            "name": ev.name, "ph": ev.ph, "ts": ts_us,
+            "pid": ev.pid, "tid": ev.tid,
+        }
+        if ev.ph == "X":
+            rec["dur"] = max(ev.t1_s - ev.t0_s, 0.0) * 1e6
+            rec["cat"] = args.get("phase", "span")
+            rec["args"] = args
+        elif ev.ph == "i":
+            rec["s"] = "t"                      # thread-scoped instant
+            rec["args"] = args
+        else:                                   # "C" counter
+            rec["args"] = {ev.name: args.get("value", 0.0)}
+        trace_events.append(rec)
+
+    return {
+        "schemaVersion": TRACE_SCHEMA_VERSION,
+        "displayTimeUnit": "ms",
+        "traceEvents": trace_events,
+        "otherData": {
+            "droppedEvents": tracer.dropped,
+            "histograms": {k: h.summary() for k, h in tracer.hists.items()},
+        },
+    }
+
+
+def validate_chrome_trace(obj: dict) -> None:
+    """Cheap structural check used by tests and the render script; raises
+    ``ValueError`` on format drift."""
+    if obj.get("schemaVersion") != TRACE_SCHEMA_VERSION:
+        raise ValueError(
+            f"trace schemaVersion {obj.get('schemaVersion')!r} != "
+            f"{TRACE_SCHEMA_VERSION} (format drift?)"
+        )
+    evs = obj.get("traceEvents")
+    if not isinstance(evs, list):
+        raise ValueError("traceEvents missing or not a list")
+    for ev in evs:
+        if "ph" not in ev or "pid" not in ev or "tid" not in ev:
+            raise ValueError(f"malformed trace event: {ev!r}")
+        if ev["ph"] == "X" and ("ts" not in ev or "dur" not in ev):
+            raise ValueError(f"span event missing ts/dur: {ev!r}")

@@ -1,0 +1,284 @@
+"""Hop-level flight recorder: span tracing for the device-cloud request path.
+
+HAT's whole argument is a delay budget — TTFT/TBT decompose into draft,
+uplink, cloud queue, cloud step, downlink and accept phases (paper Eq. 3,
+Figs. 6–12) — so the serving stack records *where* every second went, not
+just end-of-run aggregates.  The :class:`Tracer` is a low-overhead ring
+buffer of spans/instants/counters that both real wall clocks and the
+runtimes' virtual clocks write into, giving one trace format for simulated
+and real time:
+
+* ``tracer.add_span(name, t0, t1, tid=req_id, phase="uplink", ...)`` —
+  explicit-timestamp spans, used by everything that runs on a *virtual*
+  clock (``DelayModelTransport``, the concurrent ``EngineRuntime``
+  scheduler, the discrete-event ``Simulator``).
+* ``with tracer.span(name): ...`` — wall-clock spans for host-side work
+  (``CloudEngine.step``'s batch-build / jit-step / gather phases).
+* ``tracer.counter`` / ``tracer.record_hist`` — time series and
+  distributions (batched tokens per step, slot occupancy).
+
+Spans carrying a ``phase`` attribute are *delay attribution*: on the
+instrumented request path they tile the session's clock exactly (every
+clock advance is covered by exactly one phase span), so
+:meth:`phase_breakdown` summed over phases equals the request's measured
+TTFT/latency — the property ``FleetMetrics.summary``'s
+``ttft_breakdown_ms`` table and the CI smoke assertion rely on.
+
+A disabled tracer (``Tracer(enabled=False)``) records nothing but still
+notifies subscribed observers — that is how ``StateMonitorBridge`` keeps
+feeding the §3.2 EWMAs when tracing is off.  :data:`NULL_TRACER` is the
+shared do-nothing default for components constructed without a tracer.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+# Chrome-trace process ids: virtual-time spans (transports, schedulers,
+# simulator) and host wall-time spans (engine internals) are different time
+# domains — they never share a pid, and the exporter normalizes each pid to
+# its own epoch.
+PID_VIRTUAL = 1
+PID_HOST = 2
+
+# thread id for cloud-wide events (engine steps) in the virtual domain;
+# request spans use tid=req_id, so keep this far out of the req_id range
+TID_CLOUD = 1_000_000
+
+# the delay-attribution phases of the HAT request path (Eq. 3 terms).
+# "draft" covers all on-device compute: shallow forward, drafting, head.
+PHASES = ("draft", "uplink", "queue", "cloud_step", "downlink")
+
+
+@dataclass
+class TraceEvent:
+    """One recorded event.  ``ph`` follows the Chrome trace phase codes:
+    ``"X"`` complete span, ``"i"`` instant, ``"C"`` counter."""
+
+    name: str
+    ph: str
+    t0_s: float
+    t1_s: float
+    pid: int
+    tid: int
+    attrs: Dict = field(default_factory=dict)
+
+    @property
+    def dur_s(self) -> float:
+        return self.t1_s - self.t0_s
+
+    @property
+    def phase(self) -> Optional[str]:
+        return self.attrs.get("phase")
+
+
+class Histogram:
+    """Value distribution with percentile summary (trace registry)."""
+
+    def __init__(self):
+        self.values: List[float] = []
+
+    def record(self, value: float) -> None:
+        self.values.append(float(value))
+
+    def summary(self) -> Dict[str, float]:
+        if not self.values:
+            return {"count": 0}
+        v = np.asarray(self.values)
+        return {
+            "count": int(len(v)),
+            "mean": float(v.mean()),
+            "p50": float(np.percentile(v, 50)),
+            "p90": float(np.percentile(v, 90)),
+            "max": float(v.max()),
+        }
+
+
+class Tracer:
+    """Ring-buffered span/event recorder.
+
+    ``capacity`` bounds memory: the oldest events are evicted first and
+    counted in :attr:`dropped` (a breakdown computed after eviction of its
+    spans would silently under-attribute — check ``dropped == 0`` before
+    trusting exact sums).  ``enabled=False`` skips all recording but still
+    notifies observers, making the disabled path one attribute check when
+    no observers are subscribed.
+    """
+
+    def __init__(
+        self,
+        capacity: int = 1 << 16,
+        *,
+        enabled: bool = True,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        self.enabled = enabled
+        self.events: deque = deque(maxlen=capacity)
+        self.hists: Dict[str, Histogram] = {}
+        self._clock = clock
+        self._observers: List[Callable[[TraceEvent], None]] = []
+        self._appended = 0
+
+    # ------------------------------------------------------------- recording
+    @property
+    def dropped(self) -> int:
+        """Events evicted from the ring buffer so far."""
+        return self._appended - len(self.events)
+
+    def _emit(self, ev: TraceEvent) -> None:
+        if self.enabled:
+            self.events.append(ev)
+            self._appended += 1
+        for fn in self._observers:
+            fn(ev)
+
+    def add_span(
+        self, name: str, t0_s: float, t1_s: float,
+        *, tid: int = 0, pid: int = PID_VIRTUAL, **attrs,
+    ) -> None:
+        """Record a completed span with explicit timestamps (virtual or
+        wall clocks alike — the caller owns the time domain via ``pid``)."""
+        if not (self.enabled or self._observers):
+            return
+        self._emit(TraceEvent(name, "X", float(t0_s), float(t1_s),
+                              pid, tid, attrs))
+
+    def instant(
+        self, name: str, t_s: float,
+        *, tid: int = 0, pid: int = PID_VIRTUAL, **attrs,
+    ) -> None:
+        if not (self.enabled or self._observers):
+            return
+        self._emit(TraceEvent(name, "i", float(t_s), float(t_s),
+                              pid, tid, attrs))
+
+    def counter(
+        self, name: str, value: float, t_s: Optional[float] = None,
+        *, tid: int = 0, pid: int = PID_HOST,
+    ) -> None:
+        if not (self.enabled or self._observers):
+            return
+        t = self._clock() if t_s is None else float(t_s)
+        self._emit(TraceEvent(name, "C", t, t, pid, tid,
+                              {"value": float(value)}))
+
+    @contextmanager
+    def span(self, name: str, *, tid: int = 0, pid: int = PID_HOST, **attrs):
+        """Wall-clock span context manager; yields the attrs dict so the
+        body can attach results (``a["tokens"] = n``) before close."""
+        if not (self.enabled or self._observers):
+            yield attrs
+            return
+        t0 = self._clock()
+        try:
+            yield attrs
+        finally:
+            self.add_span(name, t0, self._clock(), tid=tid, pid=pid, **attrs)
+
+    def record_hist(self, name: str, value: float) -> None:
+        if not self.enabled:
+            return
+        self.hists.setdefault(name, Histogram()).record(value)
+
+    # ------------------------------------------------------------- observers
+    def subscribe(self, fn: Callable[[TraceEvent], None]) -> None:
+        """Register an observer called on every event (even when recording
+        is disabled) — the hook ``StateMonitorBridge`` uses to drive the
+        §3.2 EWMAs from the same spans the flight recorder sees."""
+        self._observers.append(fn)
+
+    @property
+    def observers(self) -> tuple:
+        return tuple(self._observers)
+
+    # --------------------------------------------------------------- queries
+    def spans(
+        self, *, name: Optional[str] = None, tid: Optional[int] = None,
+        pid: Optional[int] = None,
+    ) -> Iterator[TraceEvent]:
+        for ev in self.events:
+            if ev.ph != "X":
+                continue
+            if name is not None and ev.name != name:
+                continue
+            if tid is not None and ev.tid != tid:
+                continue
+            if pid is not None and ev.pid != pid:
+                continue
+            yield ev
+
+    def phase_breakdown(
+        self, tid: int, *, until: Optional[float] = None,
+    ) -> Dict[str, float]:
+        """Per-phase wall-clock attribution for one request (seconds).
+
+        Sums the durations of this tid's phase-attributed spans, clipping
+        at ``until`` (pass the request's ``first_token_s`` for the TTFT
+        breakdown).  On the instrumented runtimes the phase spans tile the
+        session clock, so the values sum to the measured latency."""
+        out: Dict[str, float] = {}
+        for ev in self.events:
+            if ev.ph != "X" or ev.tid != tid:
+                continue
+            phase = ev.attrs.get("phase")
+            if phase is None:
+                continue
+            t0, t1 = ev.t0_s, ev.t1_s
+            if until is not None:
+                if t0 >= until:
+                    continue
+                t1 = min(t1, until)
+            out[phase] = out.get(phase, 0.0) + max(t1 - t0, 0.0)
+        return out
+
+    # --------------------------------------------------------------- export
+    def to_chrome_trace(self) -> dict:
+        from .export import to_chrome_trace
+
+        return to_chrome_trace(self)
+
+    def dump(self, path: str) -> None:
+        import json
+
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f, indent=1)
+
+
+class NullTracer(Tracer):
+    """Do-nothing tracer: the shared default for components constructed
+    without one.  Refuses observers — a subscription on the shared
+    singleton would silently leak across unrelated runtimes; subscribe to
+    a private ``Tracer(enabled=False)`` instead."""
+
+    def __init__(self):
+        super().__init__(capacity=1, enabled=False)
+
+    def add_span(self, *a, **kw) -> None:  # pragma: no cover - trivial
+        pass
+
+    def instant(self, *a, **kw) -> None:  # pragma: no cover - trivial
+        pass
+
+    def counter(self, *a, **kw) -> None:  # pragma: no cover - trivial
+        pass
+
+    def record_hist(self, *a, **kw) -> None:  # pragma: no cover - trivial
+        pass
+
+    @contextmanager
+    def span(self, name: str, **kw):
+        yield kw
+
+    def subscribe(self, fn) -> None:
+        raise ValueError(
+            "NULL_TRACER takes no observers; use a private "
+            "Tracer(enabled=False) to bridge without recording"
+        )
+
+
+NULL_TRACER = NullTracer()

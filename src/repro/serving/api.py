@@ -46,6 +46,7 @@ soup, raw ``CloudEngine.submit``/``step`` with caller-side chunking, and
 from __future__ import annotations
 
 import itertools
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import (
@@ -74,7 +75,15 @@ from ..core.speculative import (
     snapshot_states,
 )
 from ..core.split import SplitModels
-from ..wire import Frame, decode_hidden, encode_hidden, get_codec, stamp_t_send
+from ..obs import NULL_TRACER, TID_CLOUD, Tracer, attach_monitor
+from ..wire import (
+    Frame,
+    decode_hidden,
+    encode_hidden,
+    frame_req_id,
+    get_codec,
+    stamp_t_send,
+)
 from . import medusa as medusa_mod
 from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
 from .engine import CloudEngine, EngineOverflowError
@@ -232,11 +241,13 @@ class CloudServer:
         kv_budget=None,
         memory: Optional[jax.Array] = None,
         auto_grow: bool = False,
+        tracer: Optional[Tracer] = None,
     ):
         self.engine = CloudEngine(
             split, n_slots=n_slots, max_len=max_len,
             max_batch_tokens=max_batch_tokens, kv_budget=kv_budget,
             memory=memory, wire_codec=wire_codec, auto_grow=auto_grow,
+            tracer=tracer,
         )
         self._outbox: Dict[int, deque] = {}
 
@@ -309,7 +320,15 @@ class Transport:
     ``restore`` implement speculative rollback of cloud-resident recurrent
     state (SSM middles; attention middles roll back positionally and never
     call these).  ``tick`` lets the device report local compute time to
-    transports that keep a clock."""
+    transports that keep a clock; ``clock`` reads that clock back — wall
+    time by default, virtual seconds on simulated transports — and is what
+    stamps every uplink frame's ``t_send`` and timestamps trace spans, so
+    hop attribution works identically over loopback, delay-model, and
+    future socket transports."""
+
+    def clock(self) -> float:
+        """Seconds on this transport's clock (wall time by default)."""
+        return time.perf_counter()
 
     def open(self, req_id: int, expected_tokens: int) -> None:
         raise NotImplementedError
@@ -337,12 +356,22 @@ class LoopbackTransport(Transport):
     """In-process wire: frames go straight into the server, ``recv`` pumps
     the engine until the request's downlink frame materializes.  Zero
     latency — the timing-free transport for parity tests and the rebuilt
-    ``RealBackend`` (the simulator owns the clock there)."""
+    ``RealBackend`` (the simulator owns the clock there).
 
-    def __init__(self, server: CloudServer):
+    Every uplink frame is stamped with the transport clock's ``t_send``
+    here in the base class (subclasses only move the clock), so trace
+    uplink spans and engine job ``ready_s`` values are well-defined on
+    every transport."""
+
+    def __init__(self, server: CloudServer, *, tracer: Optional[Tracer] = None):
         self.server = server
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.bytes_up = 0
         self.bytes_down = 0
+        self._epoch = time.perf_counter()
+
+    def clock(self) -> float:
+        return time.perf_counter() - self._epoch
 
     def open(self, req_id: int, expected_tokens: int) -> None:
         if not self.server.open_session(req_id, expected_tokens):
@@ -355,7 +384,14 @@ class LoopbackTransport(Transport):
 
     def send(self, data: bytes) -> None:
         self.bytes_up += len(data)
-        self.server.handle_frame(data)
+        t0 = self.clock()
+        attrs = self._on_uplink(data) or {}
+        t1 = self.clock()
+        self.tracer.add_span(
+            "uplink", t0, t1, tid=frame_req_id(data), phase="uplink",
+            nbytes=len(data), **attrs,
+        )
+        self.server.handle_frame(stamp_t_send(data, t1))
 
     def has_frame(self, req_id: int) -> bool:
         """Non-blocking: is the request's downlink frame already parked?"""
@@ -368,7 +404,12 @@ class LoopbackTransport(Transport):
         data = self.server.poll(req_id)
         if data is not None:
             self.bytes_down += len(data)
-            self._on_downlink(data)
+            t0 = self.clock()
+            attrs = self._on_downlink(data) or {}
+            self.tracer.add_span(
+                "downlink", t0, self.clock(), tid=req_id, phase="downlink",
+                nbytes=len(data), **attrs,
+            )
         return data
 
     def recv(self, req_id: int) -> bytes:
@@ -376,7 +417,7 @@ class LoopbackTransport(Transport):
             data = self.deliver(req_id)
             if data is not None:
                 return data
-            if self._pump() == 0:
+            if self._pump(req_id) == 0:
                 raise RuntimeError(
                     f"downlink starved: no frame in flight for request {req_id}"
                 )
@@ -388,11 +429,16 @@ class LoopbackTransport(Transport):
         self.server.restore_session(req_id, snap)
 
     # ------------------------------------------------- subclass timing hooks
-    def _pump(self) -> int:
+    def _pump(self, req_id: Optional[int] = None) -> int:
         return self.server.pump()
 
-    def _on_downlink(self, data: bytes) -> None:
-        pass
+    def _on_uplink(self, data: bytes) -> Optional[Dict]:
+        """Advance the clock for an uplink transfer; returns extra span
+        attributes (``dev_id``, exact ``dur_s``) or None."""
+        return None
+
+    def _on_downlink(self, data: bytes) -> Optional[Dict]:
+        return None
 
 
 class DelayModelTransport(LoopbackTransport):
@@ -405,7 +451,10 @@ class DelayModelTransport(LoopbackTransport):
     batched token count, and the device reports its local compute through
     :meth:`tick`.  A shared :class:`StateMonitor` (when given) sees the same
     observations the paper's cloud would — which is what warms up the Eq. 3
-    chunk solver on real runs."""
+    chunk solver on real runs.  Monitor updates flow through the trace
+    spans (``repro.obs.StateMonitorBridge``): pass a shared ``tracer`` that
+    already carries a bridge (the runtimes do), or let the transport build
+    a private disabled tracer + bridge for its own monitor."""
 
     def __init__(
         self,
@@ -417,46 +466,59 @@ class DelayModelTransport(LoopbackTransport):
         monitor: Optional[StateMonitor] = None,
         start_s: float = 0.0,
         rng: Optional[np.random.Generator] = None,
+        tracer: Optional[Tracer] = None,
     ):
-        super().__init__(server)
+        if tracer is None and monitor is not None:
+            tracer = Tracer(enabled=False)      # bridge-only instrumentation
+        super().__init__(server, tracer=tracer)
         self.device = device
         self.net = net or NetworkModel(rng or np.random.default_rng(0))
         self.cloud = cloud or CloudDelayModel()
         self.monitor = monitor
+        if monitor is not None:
+            attach_monitor(self.tracer, monitor)
         self.clock_s = float(start_s)
         self.cloud_step_delays_s: List[float] = []
+
+    def clock(self) -> float:
+        return self.clock_s
 
     def tick(self, seconds: float) -> None:
         self.clock_s += seconds
 
-    def send(self, data: bytes) -> None:
+    def _on_uplink(self, data: bytes) -> Dict:
+        # advancing the clock before the base class stamps t_send makes the
+        # stamp the frame's send-*complete* time — the cloud scheduler
+        # reads it back as the job's ready time
         dur = self.net.up_time(self.device, len(data))
         self.clock_s += dur
-        if self.monitor is not None and dur > 0:
-            self.monitor.record_device(
-                self.device.dev_id, beta_up=len(data) / dur
-            )
-        # stamp the frame's event timestamp with its send-complete time:
-        # the cloud scheduler reads it back as the job's ready time
-        super().send(stamp_t_send(data, self.clock_s))
+        return {"dev_id": self.device.dev_id, "dur_s": dur}
 
-    def _pump(self) -> int:
-        tokens = super()._pump()
+    def _pump(self, req_id: Optional[int] = None) -> int:
+        t0 = self.clock_s
+        tokens = super()._pump(req_id)
         if tokens > 0:
             delay = self.cloud.delay(tokens)
             self.clock_s += delay
             self.cloud_step_delays_s.append(self.cloud.stage_time(tokens))
-            if self.monitor is not None:
-                self.monitor.record_batch(tokens, delay)
+            # cloud-wide step span drives μ/η/g through the monitor bridge
+            self.tracer.add_span(
+                "cloud_step", t0, t0 + delay, tid=TID_CLOUD,
+                tokens=tokens, dur_s=delay,
+            )
+            if req_id is not None:
+                # a private pump serves exactly one blocked request: its
+                # whole wait is cloud compute (no cross-session queueing)
+                self.tracer.add_span(
+                    "cloud_wait", t0, t0 + delay, tid=req_id,
+                    phase="cloud_step", tokens=tokens,
+                )
         return tokens
 
-    def _on_downlink(self, data: bytes) -> None:
+    def _on_downlink(self, data: bytes) -> Dict:
         dur = self.net.down_time(self.device, len(data))
         self.clock_s += dur
-        if self.monitor is not None and dur > 0:
-            self.monitor.record_device(
-                self.device.dev_id, beta_down=len(data) / dur
-            )
+        return {"dev_id": self.device.dev_id, "dur_s": dur}
 
 
 # ---------------------------------------------------------------------------
@@ -527,10 +589,17 @@ class DeviceClient:
         monitor: Optional[StateMonitor] = None,
         profile: Optional[DeviceProfile] = None,
         memory: Optional[jax.Array] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.split = split
         self.cfg = split.cfg
         self.transport = transport
+        # default to the transport's tracer so one shared flight recorder
+        # sees device compute, wire hops and cloud steps on the same clock
+        self.tracer = (
+            tracer if tracer is not None
+            else getattr(transport, "tracer", None) or NULL_TRACER
+        )
         self.codec = get_codec(wire_codec)           # uplink codec
         self.draft_model = (
             DraftModel(split, adapter_params) if adapter_params is not None else None
@@ -562,9 +631,21 @@ class DeviceClient:
         self._auto_id = itertools.count()
 
     # --------------------------------------------------------- device clock
-    def _tick(self, seconds: float) -> None:
-        if self.profile is not None:
-            self.transport.tick(seconds)
+    def _tick(
+        self, seconds: float, req_id: int = 0, name: str = "device", **attrs
+    ) -> None:
+        """Charge device compute time: advance the transport clock and
+        record the interval as a ``phase="draft"`` span, so on-device work
+        (shallow forward, drafting, head) shows up in the delay breakdown.
+        The exact ``dur_s`` rides along for the monitor bridge (γ_i)."""
+        if self.profile is None:
+            return
+        t0 = self.transport.clock()
+        self.transport.tick(seconds)
+        self.tracer.add_span(
+            name, t0, t0 + seconds, tid=req_id, phase="draft",
+            dev_id=self.profile.dev_id, dur_s=seconds, **attrs,
+        )
 
     # ----------------------------------------------------- coroutine driver
     def _drive(self, coro):
@@ -591,7 +672,8 @@ class DeviceClient:
             offset=sess.offset, memory=self.memory, return_hidden=True,
         )
         if self.profile is not None:
-            self._tick(self.profile.shallow_delay(len(tokens)))
+            self._tick(self.profile.shallow_delay(len(tokens)),
+                       sess.req_id, "shallow", tokens=len(tokens))
         self.transport.send(encode_hidden(
             self.codec, np.asarray(shallow[0], np.float32),
             req_id=sess.req_id, offset=sess.offset, kind=kind, want_deep=True,
@@ -600,7 +682,7 @@ class DeviceClient:
         deep = decode_hidden(Frame.from_bytes(data), self.cfg.d_model)
         logits = self.split.head_logits(jnp.asarray(deep)[None])
         if self.profile is not None:
-            self._tick(self.profile.head_delay())
+            self._tick(self.profile.head_delay(), sess.req_id, "head")
         return np.asarray(logits[0], np.float32), deep
 
     # -------------------------------------------------------------- prefill
@@ -646,6 +728,7 @@ class DeviceClient:
             mu=mon.mu.get(64.0) if mon else 64.0,
             pipeline_len=self.pipeline_len,
         )
+        t_pf = self.transport.clock()
         off = 0
         for i, size in enumerate(chunks):
             toks = jnp.asarray(prompt[off:off + size], jnp.int32)[None]
@@ -654,7 +737,8 @@ class DeviceClient:
                 offset=off, memory=self.memory, return_hidden=True,
             )
             if self.profile is not None:
-                self._tick(self.profile.shallow_delay(size))
+                self._tick(self.profile.shallow_delay(size),
+                           req_id, "shallow", tokens=size)
             self.transport.send(encode_hidden(
                 self.codec, np.asarray(shallow[0], np.float32),
                 req_id=req_id, offset=off, kind="prefill",
@@ -665,7 +749,12 @@ class DeviceClient:
         deep = decode_hidden(Frame.from_bytes(data), self.cfg.d_model)
         logits = self.split.head_logits(jnp.asarray(deep)[None])
         if self.profile is not None:
-            self._tick(self.profile.head_delay())
+            self._tick(self.profile.head_delay(), req_id, "head")
+        # annotation span (no phase attr): the whole prefill window
+        self.tracer.add_span(
+            "prefill", t_pf, self.transport.clock(), tid=req_id,
+            prompt_len=len(prompt), n_chunks=len(chunks),
+        )
         sess.offset = len(prompt)
         sess.deep_last = deep[-1]
         tok = int(np.asarray(logits[0], np.float32)[-1].argmax())
@@ -721,7 +810,8 @@ class DeviceClient:
         )
         sess.topk_last = res.topk_last
         if self.profile is not None and charge_time:
-            self._tick(self.profile.draft_delay(res.steps))
+            self._tick(self.profile.draft_delay(res.steps),
+                       req_id, "draft", steps=res.steps)
         return res.tokens.tolist()
 
     def parallel_draft_hit(self, req_id: int) -> bool:
@@ -774,6 +864,10 @@ class DeviceClient:
         sess.drafted += len(draft)
         sess.accepted += accepted          # accepted drafts + the bonus token
         sess.last_commit = [*list(draft)[:n], bonus]
+        self.tracer.instant(
+            "accept", self.transport.clock(), tid=req_id,
+            accepted=n, drafted=len(draft),
+        )
         return n, bonus
 
     def verify(self, req_id: int, draft: List[int]) -> Tuple[int, int]:
@@ -830,7 +924,7 @@ class DeviceClient:
         if self.sd == "medusa":
             tree = self.medusa_tree(req_id)
             if self.profile is not None:
-                self._tick(self.profile.head_delay() * 4)
+                self._tick(self.profile.head_delay() * 4, req_id, "medusa_heads")
             yield from self._medusa_verify_gen(req_id)
             return list(self.sessions[req_id].last_commit)
         if self.sd == "draft":
@@ -957,15 +1051,17 @@ class SimulatorRuntime:
         backend=None,
         rng: Optional[np.random.Generator] = None,
         cloud: Optional[CloudDelayModel] = None,
+        tracer: Optional[Tracer] = None,
     ):
         self.config = config
         self.rng = rng or np.random.default_rng(0)
         self.backend = backend or StatisticalBackend(self.rng)
         config.configure_backend(self.backend)
         self.cloud = cloud or CloudDelayModel(pipeline_len=config.pipeline_len)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.simulator = Simulator(
             config.to_sim_config(), self.cloud, self.backend, self.rng,
-            n_devices=config.n_devices,
+            n_devices=config.n_devices, tracer=self.tracer,
         )
 
     def serve(self, requests) -> FleetMetrics:
@@ -1036,6 +1132,7 @@ class EngineRuntime:
         max_len: int = 512,
         memory: Optional[jax.Array] = None,
         concurrent: bool = True,
+        tracer: Optional[Tracer] = None,
     ):
         if config.sd == "draft" and adapter_params is None:
             raise ValueError(
@@ -1057,6 +1154,12 @@ class EngineRuntime:
         self.memory = memory
         self.concurrent = concurrent
         self.monitor = StateMonitor(alpha=0.8)
+        # one shared flight recorder for the whole runtime: device ticks,
+        # wire hops, scheduler waits and engine steps land in one trace;
+        # a disabled private tracer (the default) still carries the
+        # monitor bridge, so the §3.2 EWMAs work with tracing off
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        attach_monitor(self.tracer, self.monitor)
         # max_batch_tokens=None passes through: u-shape/u-medusa run the
         # same naive unbudgeted admission on the engine as in the simulator
         # (scheduling.py is the shared policy — the two must not diverge)
@@ -1064,6 +1167,7 @@ class EngineRuntime:
             split, n_slots=n_slots, max_len=max_len,
             max_batch_tokens=config.max_batch_tokens,
             wire_codec=config.codec_name, memory=memory,
+            tracer=self.tracer,
         )
 
     # ------------------------------------------------------------- sessions
@@ -1086,6 +1190,7 @@ class EngineRuntime:
             transport = DelayModelTransport(
                 self.server, device=dev, net=net, cloud=cloud,
                 monitor=self.monitor, start_s=spec.arrival_s,
+                tracer=self.tracer,
             )
             client = DeviceClient(
                 self.split, transport,
@@ -1133,6 +1238,12 @@ class EngineRuntime:
         s.req.accepted = int(stats.get("accepted", 0))
         s.req.phase = Phase.DONE
         s.req.done_s = s.transport.clock_s
+        if self.tracer.enabled and s.req.first_token_s is not None:
+            # the phase spans tile this session's clock, so the breakdown
+            # sums to the measured TTFT (checked by CI's bench smoke)
+            s.req.phase_ttft_s = self.tracer.phase_breakdown(
+                s.spec.req_id, until=s.req.first_token_s
+            )
         metrics.add(s.req)
 
     # ---------------------------------------------------------------- serve
@@ -1200,6 +1311,12 @@ class EngineRuntime:
                     break
                 pending.popleft()
                 s.transport.clock_s = max(s.spec.arrival_s, now_s)
+                if s.transport.clock_s > s.spec.arrival_s:
+                    # slot-pool admission wait: arrival -> admission
+                    self.tracer.add_span(
+                        "admission_wait", s.spec.arrival_s,
+                        s.transport.clock_s, tid=s.spec.req_id, phase="queue",
+                    )
                 reserved += 1
                 active.append(s)
 
@@ -1297,12 +1414,33 @@ class EngineRuntime:
         full = cloud.delay(tokens)
         stage = cloud.stage_time(tokens)
         done_s = start_s + full
-        self.monitor.record_batch(tokens, full)
+        # cloud-wide step span: drives μ/η/g through the monitor bridge
+        # (the exact dur_s keeps EWMA samples identical to sequential mode)
+        self.tracer.add_span(
+            "cloud_step", start_s, done_s, tid=TID_CLOUD,
+            tokens=tokens, dur_s=full, jobs=len(info),
+        )
         metrics.cloud_step_delays_s.append(stage)
         for s in waiting:
             if s.frame is None and s.transport.has_frame(s.wait):
-                # downlink transfer begins once the batch is done
-                s.transport.clock_s = max(s.transport.clock_s, done_s)
+                # downlink transfer begins once the batch is done; split
+                # the wait into queue time (before the step ran) and cloud
+                # compute so the two parts tile the clock jump exactly
+                t_wait = s.transport.clock_s
+                jump = max(done_s - t_wait, 0.0)
+                cloud_part = min(jump, full)
+                queue_part = jump - cloud_part
+                if queue_part > 0:
+                    self.tracer.add_span(
+                        "queue_wait", t_wait, t_wait + queue_part,
+                        tid=s.wait, phase="queue", dur_s=queue_part,
+                    )
+                if cloud_part > 0:
+                    self.tracer.add_span(
+                        "cloud_wait", done_s - cloud_part, done_s,
+                        tid=s.wait, phase="cloud_step", dur_s=cloud_part,
+                    )
+                s.transport.clock_s = max(t_wait, done_s)
                 s.frame = s.transport.deliver(s.wait)
         # budgeted admission pipelines microbatches at one-stage cadence;
         # naive (unbudgeted) batch-level scheduling can't fully hide the

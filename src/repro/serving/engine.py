@@ -29,6 +29,7 @@ import numpy as np
 
 from ..core.speculative import SSM_STATE_KEYS
 from ..core.split import SplitModels
+from ..obs import NULL_TRACER, TID_CLOUD, Tracer
 from ..wire import KIND_DEEP, Frame, decode_hidden, encode_hidden, get_codec
 from .kv_manager import KVBudget, SlotKVManager
 from .scheduling import budgeted_admission
@@ -90,8 +91,13 @@ class CloudEngine:
         memory: Optional[jax.Array] = None,
         wire_codec: str = "fp16",
         auto_grow: bool = False,
+        tracer: Optional[Tracer] = None,
     ):
         self.split = split
+        # host-side flight recorder: step() phases land as wall-clock spans
+        # under PID_HOST (a separate time domain from the runtimes' virtual
+        # clocks), plus batched-token / slot-occupancy counters
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.codec = get_codec(wire_codec)       # downlink (deep-state) codec
         self.wire_bytes_in = 0
         self.wire_bytes_out = 0
@@ -235,61 +241,74 @@ class CloudEngine:
         if not self.queue:
             return []
         t_start = time.perf_counter()
-        chosen, self.queue = budgeted_admission(
-            self.queue, self.max_batch_tokens,
-            tokens_of=lambda j: len(j.hidden),
-            slot_of=lambda j: self.kv.slot_of[j.req_id],
-        )
+        with self.tracer.span("batch_build", tid=TID_CLOUD) as build_a:
+            chosen, self.queue = budgeted_admission(
+                self.queue, self.max_batch_tokens,
+                tokens_of=lambda j: len(j.hidden),
+                slot_of=lambda j: self.kv.slot_of[j.req_id],
+            )
 
-        t_step = bucket_t_step(
-            max(len(j.hidden) for j in chosen), self.max_len
-        )
-        B = self.n_slots
-        # device-side batch assembly in ONE scatter: the host transfers
-        # exactly the jobs' own rows (the wire payload, concatenated) plus
-        # a flat index vector; zero-padding to [B, t_step, D] happens on
-        # device, with no full-batch host round trip and no per-job
-        # dispatch chain re-materializing the padded buffer
-        offsets = np.zeros((B,), np.int32)
-        lengths = np.zeros((B,), np.int32)
-        flat_idx: List[np.ndarray] = []
-        for j in chosen:
-            slot = self.kv.slot_of[j.req_id]
-            offsets[slot] = j.offset
-            lengths[slot] = len(j.hidden)
-            flat_idx.append(slot * t_step + np.arange(len(j.hidden)))
-            self.kv.extend(j.req_id, j.offset + len(j.hidden))
-        rows = np.concatenate(
-            [np.asarray(j.hidden, np.float32) for j in chosen], axis=0
-        )
-        hidden = (
-            jnp.zeros((B * t_step, self.d_model), F32)
-            .at[jnp.asarray(np.concatenate(flat_idx), np.int32)]
-            .set(jnp.asarray(rows))
-            .reshape(B, t_step, self.d_model)
-        )
+            t_step = bucket_t_step(
+                max(len(j.hidden) for j in chosen), self.max_len
+            )
+            B = self.n_slots
+            # device-side batch assembly in ONE scatter: the host transfers
+            # exactly the jobs' own rows (the wire payload, concatenated)
+            # plus a flat index vector; zero-padding to [B, t_step, D]
+            # happens on device, with no full-batch host round trip and no
+            # per-job dispatch chain re-materializing the padded buffer
+            offsets = np.zeros((B,), np.int32)
+            lengths = np.zeros((B,), np.int32)
+            flat_idx: List[np.ndarray] = []
+            for j in chosen:
+                slot = self.kv.slot_of[j.req_id]
+                offsets[slot] = j.offset
+                lengths[slot] = len(j.hidden)
+                flat_idx.append(slot * t_step + np.arange(len(j.hidden)))
+                self.kv.extend(j.req_id, j.offset + len(j.hidden))
+            rows = np.concatenate(
+                [np.asarray(j.hidden, np.float32) for j in chosen], axis=0
+            )
+            hidden = (
+                jnp.zeros((B * t_step, self.d_model), F32)
+                .at[jnp.asarray(np.concatenate(flat_idx), np.int32)]
+                .set(jnp.asarray(rows))
+                .reshape(B, t_step, self.d_model)
+            )
+            tokens = sum(len(j.hidden) for j in chosen)
+            build_a["jobs"] = len(chosen)
+            build_a["tokens"] = tokens
 
-        self._compiled.add((B, t_step))
-        deep, self.cache = self._step_fn(
-            self.split.middle_params, self.cache, hidden,
-            jnp.asarray(offsets), jnp.asarray(lengths), t_step=t_step,
-        )
+        with self.tracer.span("jit_step", tid=TID_CLOUD,
+                              t_step=t_step, tokens=tokens):
+            self._compiled.add((B, t_step))
+            deep, self.cache = self._step_fn(
+                self.split.middle_params, self.cache, hidden,
+                jnp.asarray(offsets), jnp.asarray(lengths), t_step=t_step,
+            )
+            jax.block_until_ready(deep)    # charge the step its own compute
         self.steps += 1
-        self.batched_token_history.append(sum(len(j.hidden) for j in chosen))
+        self.batched_token_history.append(tokens)
         self.last_step_info = [
             {"req_id": j.req_id, "kind": j.kind, "tokens": len(j.hidden),
              "ready_s": j.ready_s, "want_deep": j.want_deep}
             for j in chosen
         ]
 
-        out = []
-        for j in chosen:
-            slot = self.kv.slot_of[j.req_id]
-            # only want_deep rows cross back to the host (the downlink);
-            # other slots' deep states never leave the device
-            d = np.asarray(deep[slot, : len(j.hidden)]) if j.want_deep else None
-            out.append(EngineResult(j.req_id, d, j.kind, offset=j.offset))
-        jax.block_until_ready(deep)    # charge the step its own compute
+        with self.tracer.span("gather", tid=TID_CLOUD):
+            out = []
+            for j in chosen:
+                slot = self.kv.slot_of[j.req_id]
+                # only want_deep rows cross back to the host (the
+                # downlink); other slots' deep states never leave device
+                d = (np.asarray(deep[slot, : len(j.hidden)])
+                     if j.want_deep else None)
+                out.append(EngineResult(j.req_id, d, j.kind, offset=j.offset))
+        self.tracer.counter("batched_tokens", tokens)
+        self.tracer.counter(
+            "slot_occupancy", self.n_slots - len(self.kv.free_slots)
+        )
+        self.tracer.record_hist("batch_tokens", tokens)
         self.step_wall_s += time.perf_counter() - t_start
         return out
 

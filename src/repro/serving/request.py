@@ -3,9 +3,13 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
+
+# phase order of the TTFT breakdown tables (repro.obs.PHASES re-exported
+# here to keep this module import-light)
+TTFT_PHASES = ("draft", "uplink", "queue", "cloud_step", "downlink")
 
 
 class Phase(enum.Enum):
@@ -34,6 +38,10 @@ class Request:
     first_token_s: Optional[float] = None    # absolute time of first token
     token_times_s: List[float] = field(default_factory=list)
     done_s: Optional[float] = None
+    # per-phase TTFT attribution (seconds), filled from the flight recorder
+    # on traced runs: {draft, uplink, queue, cloud_step, downlink} -> s;
+    # on the instrumented runtimes the values sum to ttft_s
+    phase_ttft_s: Optional[Dict[str, float]] = None
 
     # --- speculative-decoding stats -----------------------------------------
     rounds: int = 0
@@ -149,4 +157,13 @@ class FleetMetrics:
             float(np.mean(bt)) if bt else 0.0
         )
         out["engine_jit_compiles"] = int(self.engine_jit_compiles)
+        # per-phase TTFT attribution: mean over traced requests, in ms,
+        # keyed in pipeline order (only present when a flight recorder ran)
+        traced = [r.phase_ttft_s for r in self.requests
+                  if r.phase_ttft_s is not None]
+        if traced:
+            out["ttft_breakdown_ms"] = {
+                p: float(np.mean([b.get(p, 0.0) for b in traced]) * 1e3)
+                for p in TTFT_PHASES
+            }
         return out

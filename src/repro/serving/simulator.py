@@ -28,6 +28,7 @@ import numpy as np
 from ..core.chunking import chunk_prompt, plan_chunks
 from ..core.monitor import StateMonitor
 from ..core.parallel_draft import parallel_draft_steps
+from ..obs import NULL_TRACER, TID_CLOUD, Tracer
 from ..wire import get_codec
 from .delay_models import CloudDelayModel, DeviceProfile, NetworkModel, make_fleet
 from .request import FleetMetrics, Phase, Request
@@ -107,6 +108,7 @@ class Job:
     on_done: Callable          # (finish_time) -> None
     on_stage: Optional[Callable] = None   # (stage_clear_time) -> None
     seq: int = 0
+    t_enqueue: float = 0.0     # when the job entered the cloud queue
 
 
 @dataclass
@@ -152,11 +154,17 @@ class Simulator:
         backend,
         rng: np.random.Generator,
         n_devices: int = 30,
+        tracer: Optional[Tracer] = None,
     ):
         self.cfg = sim_cfg
         self.cloud = cloud
         self.backend = backend
         self.rng = rng
+        # flight recorder (repro.obs).  The simulator feeds its monitor
+        # directly (its zero-duration transfer convention predates the
+        # StateMonitorBridge) — pass a tracer WITHOUT a monitor bridge here
+        # or every hop would be counted twice.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.fleet = {d.dev_id: d for d in make_fleet(rng, n_devices)}
         self.net = NetworkModel(rng, up_fixed=sim_cfg.uplink_bps,
                                 down_fixed=sim_cfg.downlink_bps)
@@ -224,8 +232,13 @@ class Simulator:
             # upload, one bulk prefill job.
             self._chunks_ready[req.req_id] = len(req.chunk_sizes)
             comp = dev.shallow_delay(req.prompt_len)
-            t0 = max(self.now, self.dev_free[dev.dev_id]) + comp
+            start = max(self.now, self.dev_free[dev.dev_id])
+            t0 = start + comp
             self.dev_free[dev.dev_id] = t0
+            self.tracer.add_span(
+                "shallow", start, t0, tid=req.req_id, phase="draft",
+                dev_id=dev.dev_id, tokens=req.prompt_len,
+            )
             self._upload(req, dev, req.prompt_len * A, t0,
                          lambda ft: self._enqueue_next_chunk(req, dev))
 
@@ -235,6 +248,10 @@ class Simulator:
         start = max(self.now, self.dev_free[dev.dev_id])
         done = start + dev.shallow_delay(size)
         self.dev_free[dev.dev_id] = done
+        self.tracer.add_span(
+            "shallow", start, done, tid=req.req_id, phase="draft",
+            dev_id=dev.dev_id, tokens=size, chunk=ci,
+        )
 
         def after_compute():
             A = self.cfg.hidden_bytes_per_token
@@ -286,6 +303,10 @@ class Simulator:
 
         def after_down(ft):
             t1 = ft + dev.head_delay()
+            self.tracer.add_span(
+                "head", ft, t1, tid=req.req_id, phase="draft",
+                dev_id=dev.dev_id,
+            )
 
             def emit():
                 tok = self.backend.first_token(req)
@@ -311,6 +332,10 @@ class Simulator:
             start = max(self.now, self.dev_free[dev.dev_id])
             t0 = start + comp
             self.dev_free[dev.dev_id] = t0
+            self.tracer.add_span(
+                "device", start, t0, tid=req.req_id, phase="draft",
+                dev_id=dev.dev_id, tokens=tree,
+            )
             self._upload(req, dev, tree * A, t0,
                          lambda ft: self._verify_job(req, dev, tree, medusa=True))
             return
@@ -325,6 +350,10 @@ class Simulator:
             t0 = start + comp
             self.dev_free[dev.dev_id] = t0
             req._draft = draft
+            self.tracer.add_span(
+                "draft", start, t0, tid=req.req_id, phase="draft",
+                dev_id=dev.dev_id, steps=k, pd_hit=pd_hit,
+            )
             # report device state to the monitor (piggybacked, §3.2)
             self.monitor.record_device(dev.dev_id, gamma=dev.draft_delay(1))
             self._upload(req, dev, (k + 1) * A, t0,
@@ -336,6 +365,10 @@ class Simulator:
         start = max(self.now, self.dev_free[dev.dev_id])
         t0 = start + comp
         self.dev_free[dev.dev_id] = t0
+        self.tracer.add_span(
+            "device", start, t0, tid=req.req_id, phase="draft",
+            dev_id=dev.dev_id, tokens=1,
+        )
         self._upload(req, dev, A, t0,
                      lambda ft: self._verify_job(req, dev, 1, medusa=False))
 
@@ -345,6 +378,10 @@ class Simulator:
 
             def after_down(ft2):
                 t1 = ft2 + dev.head_delay()
+                self.tracer.add_span(
+                    "head", ft2, t1, tid=req.req_id, phase="draft",
+                    dev_id=dev.dev_id,
+                )
                 self.at(t1, lambda: self._accept(req, dev, medusa))
 
             self._download(req, dev, tokens * A, ft, after_down)
@@ -379,6 +416,14 @@ class Simulator:
     def _complete(self, req: Request) -> None:
         req.phase = Phase.DONE
         req.done_s = self.now
+        if self.tracer.enabled and req.first_token_s is not None:
+            # phase attribution is approximate here: the simulator overlaps
+            # chunk compute with uploads, so the phases can sum past TTFT
+            # (overlap counted in both) — exact tiling is an EngineRuntime
+            # guarantee, not a simulator one
+            req.phase_ttft_s = self.tracer.phase_breakdown(
+                req.req_id, until=req.first_token_s
+            )
         self.metrics.add(req)
         # session-aware backends (the rebuilt RealBackend) hold per-request
         # device caches and a cloud engine slot — let them release both
@@ -392,6 +437,10 @@ class Simulator:
         dur = self.net.up_time(dev, nbytes)
         self.up_free[dev.dev_id] = start + dur
         self.monitor.record_device(dev.dev_id, beta_up=nbytes / dur if dur > 0 else 1e9)
+        self.tracer.add_span(
+            "uplink", start, start + dur, tid=req.req_id, phase="uplink",
+            dev_id=dev.dev_id, nbytes=nbytes, dur_s=dur,
+        )
         self.at(start + dur, lambda: cb(start + dur))
 
     def _download(self, req, dev, nbytes, ready_t, cb) -> None:
@@ -399,10 +448,15 @@ class Simulator:
         dur = self.net.down_time(dev, nbytes)
         self.down_free[dev.dev_id] = start + dur
         self.monitor.record_device(dev.dev_id, beta_down=nbytes / dur if dur > 0 else 1e9)
+        self.tracer.add_span(
+            "downlink", start, start + dur, tid=req.req_id, phase="downlink",
+            dev_id=dev.dev_id, nbytes=nbytes, dur_s=dur,
+        )
         self.at(start + dur, lambda: cb(start + dur))
 
     # ------------------------------------------------------------ cloud loop
     def _push_job(self, job: Job) -> None:
+        job.t_enqueue = self.now
         self.jobs.append(job)
         self._maybe_run_batch()
 
@@ -436,6 +490,20 @@ class Simulator:
         self.metrics.cloud_batch_tokens.append(tokens)
 
         done_t = self.now + full
+        self.tracer.add_span(
+            "cloud_step", self.now, done_t, tid=TID_CLOUD,
+            tokens=tokens, dur_s=full, jobs=len(batch),
+        )
+        for j in batch:
+            if self.now > j.t_enqueue:
+                self.tracer.add_span(
+                    "queue_wait", j.t_enqueue, self.now,
+                    tid=j.req.req_id, phase="queue", kind=j.kind,
+                )
+            self.tracer.add_span(
+                "cloud_wait", self.now, done_t, tid=j.req.req_id,
+                phase="cloud_step", kind=j.kind, tokens=j.tokens,
+            )
         stage_t = self.now + stage
         # batch-level scheduling (naive baselines) cannot fully hide pipeline
         # bubbles: effective cadence ~2 stages (Sarathi-Serve's observation);

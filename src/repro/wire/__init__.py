@@ -21,6 +21,7 @@ from .framing import (
     Frame,
     decode_hidden,
     encode_hidden,
+    frame_req_id,
     iter_frames,
     stamp_t_send,
 )
@@ -30,5 +31,6 @@ __all__ = [
     "codec_by_id", "get_codec", "register_codec",
     "FLAG_WANT_DEEP", "FRAME_VERSION", "HEADER_BYTES", "KIND_DEEP",
     "KIND_IDS", "KIND_NAMES", "KIND_PREFILL", "KIND_VERIFY", "Frame",
-    "decode_hidden", "encode_hidden", "iter_frames", "stamp_t_send",
+    "decode_hidden", "encode_hidden", "frame_req_id", "iter_frames",
+    "stamp_t_send",
 ]

@@ -53,6 +53,8 @@ FLAG_WANT_DEEP = 1
 _HEADER = struct.Struct("<2sBBBBIIHId")
 HEADER_BYTES = _HEADER.size
 _T_SEND_OFFSET = HEADER_BYTES - 8          # f64 tail of the header
+_REQ_ID_OFFSET = 6                         # after magic/version/codec/kind/flags
+_REQ_ID = struct.Struct("<I")
 
 
 @dataclass(frozen=True)
@@ -130,6 +132,16 @@ def stamp_t_send(data: bytes, t_send: float) -> bytes:
     buf = bytearray(data)
     struct.pack_into("<d", buf, _T_SEND_OFFSET, float(t_send))
     return bytes(buf)
+
+
+def frame_req_id(data: bytes) -> int:
+    """Peek a serialized frame's ``req_id`` without a full parse.
+
+    Transports use this to tag trace spans with the owning request while
+    staying payload-agnostic (no decode, no copy)."""
+    if len(data) < HEADER_BYTES or data[:2] != MAGIC:
+        raise ValueError("not a frame")
+    return _REQ_ID.unpack_from(data, _REQ_ID_OFFSET)[0]
 
 
 def iter_frames(stream: bytes) -> Iterator[Frame]:

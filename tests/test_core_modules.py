@@ -109,3 +109,39 @@ def test_state_monitor_roundtrip():
     assert m.predict_delay() > 0
     d = m.device(3)
     assert abs(d.beta_up.get() - 8e6) < 1.0
+
+
+def test_delay_predictor_negative_slope_clamps():
+    """Regression: noisy bins giving the tail a negative slope must not
+    extrapolate to negative delays (would break the Eq. 3 cost compare)."""
+    g = DelayPredictor(alpha=0.5)
+    g.update(64, 0.05)
+    g.update(256, 0.01)                   # downward tail
+    far = g.predict(1 << 18)
+    assert far >= 0.0
+    # interpolation between populated bins is clamped too
+    g2 = DelayPredictor(alpha=0.5)
+    g2.update(64, 0.0)
+    g2.update(4096, 0.0)
+    assert g2.predict(512) >= 0.0
+
+
+def test_delay_predictor_edge_bins():
+    g = DelayPredictor()
+    assert g.predict(100) == 0.0          # empty: no observations yet
+    g.update(128, 0.02)                   # single populated bin
+    assert g.predict(128) == pytest.approx(0.02)
+    assert g.predict(256) >= 0.02         # scales up beyond the sample
+    assert g.predict(1) == pytest.approx(0.02)   # never scales below it
+    assert g.predict(0) == g.predict(1)   # tokens clamped to >= 1
+
+
+def test_state_monitor_device_state_creation():
+    m = StateMonitor()
+    assert m.devices == {}
+    d = m.device(7)                       # lazily created, then cached
+    assert m.device(7) is d
+    assert d.gamma.get(123.0) == 123.0    # untouched EWMA falls to default
+    m.record_device(7, beta_up=5e6)       # partial update touches one EWMA
+    assert d.beta_up.get() == 5e6
+    assert d.beta_down.value is None

@@ -1,0 +1,381 @@
+"""Flight recorder (repro.obs): tracing, export, monitor bridge, breakdown.
+
+Load-bearing guarantees:
+  * the Tracer is a bounded ring buffer; disabling recording keeps
+    observers (the StateMonitorBridge) firing;
+  * Chrome-trace export is schema-stable and structurally valid;
+  * the bridge drives StateMonitor to the same EWMA state as the old
+    direct call sites (tracing and monitoring cannot disagree);
+  * transports stamp ``t_send`` on every uplink frame (wire v2 contract);
+  * on a traced concurrent EngineRuntime run every request's per-phase
+    TTFT breakdown sums to its measured TTFT within 1% — the spans tile
+    the session clock — and tracing does not change emitted tokens.
+"""
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.core import StateMonitor, init_adapter, split_model
+from repro.data import RequestSpec
+from repro.obs import (
+    NULL_TRACER,
+    PHASES,
+    PID_HOST,
+    PID_VIRTUAL,
+    TID_CLOUD,
+    Tracer,
+    attach_monitor,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.serving import (
+    DelayModelTransport,
+    EngineRuntime,
+    FleetMetrics,
+    LoopbackTransport,
+    Request,
+    ServeConfig,
+    SimulatorRuntime,
+)
+from repro.serving.delay_models import DeviceProfile, NetworkModel
+from repro.wire import Frame, encode_hidden, get_codec
+
+
+# ---------------------------------------------------------------- tracer core
+
+
+def test_tracer_ring_buffer_and_dropped():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.add_span("s", i, i + 0.5, tid=i)
+    assert len(tr.events) == 4
+    assert tr.dropped == 6
+    assert [ev.tid for ev in tr.events] == [6, 7, 8, 9]   # oldest evicted
+
+
+def test_disabled_tracer_records_nothing_but_notifies_observers():
+    tr = Tracer(enabled=False)
+    seen = []
+    tr.subscribe(seen.append)
+    tr.add_span("uplink", 0.0, 1.0, tid=3, nbytes=10)
+    tr.instant("accept", 1.0, tid=3)
+    assert len(tr.events) == 0
+    assert [ev.name for ev in seen] == ["uplink", "accept"]
+
+
+def test_span_context_manager_attaches_result_attrs():
+    tr = Tracer()
+    with tr.span("jit_step", tid=TID_CLOUD) as a:
+        a["tokens"] = 42
+    (ev,) = list(tr.spans(name="jit_step"))
+    assert ev.pid == PID_HOST and ev.attrs["tokens"] == 42
+    assert ev.t1_s >= ev.t0_s
+
+
+def test_phase_breakdown_sums_and_clips():
+    tr = Tracer()
+    tr.add_span("shallow", 0.0, 1.0, tid=1, phase="draft")
+    tr.add_span("uplink", 1.0, 2.0, tid=1, phase="uplink")
+    tr.add_span("cloud_wait", 2.0, 4.0, tid=1, phase="cloud_step")
+    tr.add_span("other_req", 0.0, 9.0, tid=2, phase="queue")
+    bd = tr.phase_breakdown(1)
+    assert bd == {"draft": 1.0, "uplink": 1.0, "cloud_step": 2.0}
+    clipped = tr.phase_breakdown(1, until=1.5)     # mid-uplink first token
+    assert clipped == {"draft": 1.0, "uplink": 0.5}
+    assert set(bd) <= set(PHASES)
+
+
+def test_null_tracer_is_inert_and_rejects_observers():
+    NULL_TRACER.add_span("x", 0, 1)
+    NULL_TRACER.instant("x", 0)
+    NULL_TRACER.counter("x", 1)
+    with NULL_TRACER.span("x"):
+        pass
+    assert len(NULL_TRACER.events) == 0
+    with pytest.raises(ValueError):
+        NULL_TRACER.subscribe(lambda ev: None)
+
+
+# -------------------------------------------------------------------- export
+
+
+def test_chrome_trace_export_valid_and_normalized():
+    tr = Tracer()
+    tr.add_span("uplink", 10.0, 10.5, tid=1, phase="uplink",
+                nbytes=np.int64(128))                 # numpy attr collapses
+    tr.add_span("cloud_step", 10.2, 10.4, tid=TID_CLOUD, tokens=16)
+    with tr.span("jit_step", tid=TID_CLOUD):
+        pass
+    tr.counter("batched_tokens", 16.0)
+    tr.record_hist("batch_tokens", 16)
+    obj = to_chrome_trace(tr)
+    validate_chrome_trace(obj)
+    assert obj["schemaVersion"] == 1
+    xs = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    # per-pid epoch normalization: earliest span in each pid starts at ts 0
+    for pid in {e["pid"] for e in xs}:
+        assert min(e["ts"] for e in xs if e["pid"] == pid) == 0.0
+    names = {e["name"] for e in obj["traceEvents"] if e["ph"] == "M"}
+    assert names == {"process_name", "thread_name"}
+    assert obj["otherData"]["histograms"]["batch_tokens"]["count"] == 1
+    import json
+    json.dumps(obj)                                   # fully serializable
+
+
+def test_validate_rejects_schema_drift():
+    tr = Tracer()
+    tr.add_span("s", 0, 1)
+    obj = to_chrome_trace(tr)
+    obj["schemaVersion"] = 999
+    with pytest.raises(ValueError):
+        validate_chrome_trace(obj)
+
+
+# -------------------------------------------------------------------- bridge
+
+
+def test_bridge_matches_direct_monitor_updates():
+    direct, bridged = StateMonitor(), StateMonitor()
+    tr = Tracer(enabled=False)
+    attach_monitor(tr, bridged)
+    attach_monitor(tr, bridged)                       # idempotent
+    assert len(tr.observers) == 1
+
+    for i in range(5):
+        dur_up, dur_dn, dur_step = 0.01 + i * 1e-3, 0.02, 0.05 + i * 1e-3
+        direct.record_device(3, beta_up=8192 / dur_up)
+        tr.add_span("uplink", 0, dur_up, tid=1, dev_id=3,
+                    nbytes=8192, dur_s=dur_up)
+        direct.record_device(3, beta_down=4096 / dur_dn)
+        tr.add_span("downlink", 0, dur_dn, tid=1, dev_id=3,
+                    nbytes=4096, dur_s=dur_dn)
+        direct.record_batch(64 + i, dur_step)
+        tr.add_span("cloud_step", 0, dur_step, tid=TID_CLOUD,
+                    tokens=64 + i, dur_s=dur_step)
+        direct.record_device(3, gamma=0.002)
+        tr.add_span("draft", 0, 0.008, tid=1, dev_id=3,
+                    steps=4, dur_s=0.008)
+    assert bridged.mu.get() == direct.mu.get()
+    assert bridged.eta.get() == direct.eta.get()
+    assert bridged.g.predict(128) == direct.g.predict(128)
+    d, b = direct.device(3), bridged.device(3)
+    assert b.beta_up.get() == pytest.approx(d.beta_up.get())
+    assert b.beta_down.get() == pytest.approx(d.beta_down.get())
+    assert b.gamma.get() == pytest.approx(d.gamma.get())
+
+
+def test_bridge_ignores_zero_duration_and_unattributed_spans():
+    m = StateMonitor()
+    tr = Tracer(enabled=False)
+    attach_monitor(tr, m)
+    tr.add_span("uplink", 0, 0, tid=1, dev_id=3, nbytes=100, dur_s=0.0)
+    tr.add_span("uplink", 0, 1, tid=1, nbytes=100)    # no dev_id
+    tr.add_span("prefill", 0, 1, tid=1)               # annotation span
+    assert m.devices == {}
+    assert m.mu.value is None
+
+
+# ----------------------------------------------------------- t_send stamping
+
+
+class _CaptureServer:
+    """Transport-facing stub: records uplink bytes, serves no downlinks."""
+
+    def __init__(self):
+        self.frames = []
+
+    def handle_frame(self, data):
+        self.frames.append(bytes(data))
+
+    def poll(self, req_id):
+        return None
+
+    def pump(self):
+        return 0
+
+
+def _frame_bytes(req_id=5):
+    codec = get_codec("fp16")
+    return encode_hidden(codec, np.zeros((3, 8), np.float32),
+                         req_id=req_id, offset=0, kind="prefill")
+
+
+def _profile(dev_id=0):
+    return DeviceProfile(dev_id=dev_id, kind="orin",
+                         rng=np.random.default_rng(0))
+
+
+def test_loopback_stamps_t_send_on_uplink():
+    srv = _CaptureServer()
+    t = LoopbackTransport(srv)
+    data = _frame_bytes()
+    assert Frame.from_bytes(data).t_send == 0.0       # unstamped at encode
+    t.send(data)
+    stamped = Frame.from_bytes(srv.frames[0])
+    assert stamped.t_send > 0.0                       # wall clock, epoch-based
+    assert t.bytes_up == len(data)
+
+
+def test_delay_model_transport_stamps_send_complete_time():
+    srv = _CaptureServer()
+    tr = Tracer()
+    net = NetworkModel(np.random.default_rng(0), up_fixed=1e6,
+                       down_fixed=2e6)
+    t = DelayModelTransport(srv, device=_profile(), net=net, start_s=2.0,
+                            tracer=tr)
+    data = _frame_bytes()
+    t.send(data)
+    stamped = Frame.from_bytes(srv.frames[0])
+    # stamp == virtual send-complete time == start + uplink transfer
+    assert stamped.t_send == pytest.approx(2.0 + len(data) / 1e6)
+    assert stamped.t_send == pytest.approx(t.clock())
+    (span,) = list(tr.spans(name="uplink"))
+    assert span.tid == 5 and span.attrs["phase"] == "uplink"
+    assert span.t1_s == pytest.approx(stamped.t_send)
+
+
+def test_delay_transport_builds_private_bridge_for_monitor():
+    srv = _CaptureServer()
+    m = StateMonitor()
+    net = NetworkModel(np.random.default_rng(0), up_fixed=1e6, down_fixed=2e6)
+    t = DelayModelTransport(srv, device=_profile(4), net=net, monitor=m)
+    assert not t.tracer.enabled                       # bridge-only tracer
+    data = _frame_bytes()
+    t.send(data)
+    assert m.device(4).beta_up.get() == pytest.approx(1e6)
+
+
+# ----------------------------------------------------------- SLA boundaries
+
+
+def _req(req_id, ttft=None, token_dts=None, prompt_len=128, arrival=0.0):
+    r = Request(req_id=req_id, device_id=0, arrival_s=arrival,
+                prompt_len=prompt_len, max_new_tokens=64)
+    t = arrival
+    if ttft is not None:
+        t += ttft
+        r.first_token_s = t
+        r.token_times_s.append(t)
+    for dt in token_dts or []:
+        t += dt
+        r.token_times_s.append(t)
+    return r
+
+
+def test_prefill_sla_rate_boundaries():
+    m = FleetMetrics()
+    assert m.prefill_sla_rate(1.0) == 0.0             # empty: no crash
+    m.add(_req(0, ttft=1.0, prompt_len=128))          # exactly on budget
+    m.add(_req(1, ttft=1.0 + 1e-6, prompt_len=128))   # just over
+    m.add(_req(2, ttft=1.5, prompt_len=256))          # 2x budget for 2x prompt
+    m.add(_req(3))                                    # never emitted: skipped
+    assert m.prefill_sla_rate(1.0) == pytest.approx(2 / 3)
+    # short prompts clamp to the 128-token floor, not a tighter budget
+    m2 = FleetMetrics()
+    m2.add(_req(0, ttft=0.9, prompt_len=1))
+    assert m2.prefill_sla_rate(1.0) == 1.0
+
+
+def test_decode_sla_rate_boundaries():
+    m = FleetMetrics()
+    assert m.decode_sla_rate(1.0) == 0.0
+    # exact binary dt (2^-5) so the 10-token window is float-exact
+    m.add(_req(0, ttft=0.125, token_dts=[0.03125] * 9))   # 10 tokens: too few
+    assert m.decode_sla_rate(1.0) == 0.0                  # skipped, not failed
+    m.add(_req(1, ttft=0.125, token_dts=[0.03125] * 10))  # exactly 11 tokens
+    assert m.decode_sla_rate(0.3125) == 1.0               # window == SLA: pass
+    assert m.decode_sla_rate(0.3125 - 1e-9) == 0.0
+
+
+# ------------------------------------------------- traced runtimes (tensors)
+
+
+@pytest.fixture(scope="module")
+def hat_setup():
+    import jax
+
+    cfg, model, params = reduced_model("internlm2-1.8b")
+    sp = split_model(cfg, params)
+    adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+    return cfg, sp, adapter
+
+
+def _engine_specs(cfg, n=3, prompt_len=12, new=4):
+    rng = np.random.default_rng(0)
+    return [
+        RequestSpec(
+            req_id=i, device_id=i, arrival_s=0.05 * i,
+            prompt_len=prompt_len, max_new_tokens=new,
+            prompt=rng.integers(3, cfg.vocab_size, prompt_len).astype(np.int32),
+        )
+        for i in range(n)
+    ]
+
+
+def test_engine_runtime_traced_breakdown_tiles_ttft(hat_setup):
+    cfg, sp, adapter = hat_setup
+    config = ServeConfig.hat(n_devices=3, dynamic_chunks=False, fixed_chunk=8)
+    mk = lambda tracer: EngineRuntime(
+        config, sp, adapter_params=adapter, rng=np.random.default_rng(6),
+        n_slots=3, max_len=64, concurrent=True, tracer=tracer,
+    )
+    tracer = Tracer()
+    traced = mk(tracer).serve(_engine_specs(cfg))
+    plain = mk(None).serve(_engine_specs(cfg))
+
+    # tracing is observationally neutral: identical tokens and timings
+    for a, b in zip(traced.requests, plain.requests):
+        assert a.generated == b.generated
+        assert a.ttft_s == b.ttft_s and a.done_s == b.done_s
+        assert b.phase_ttft_s is None                 # untraced: no breakdown
+
+    # every request's phase breakdown tiles its measured TTFT (<= 1%)
+    assert tracer.dropped == 0
+    for r in traced.requests:
+        assert r.phase_ttft_s is not None
+        total = sum(r.phase_ttft_s.values())
+        assert total == pytest.approx(r.ttft_s, rel=0.01)
+        assert set(r.phase_ttft_s) <= set(PHASES)
+        assert r.phase_ttft_s.get("cloud_step", 0) > 0
+
+    s = traced.summary()
+    bd = s["ttft_breakdown_ms"]
+    assert list(bd) == list(PHASES)
+    assert sum(bd.values()) == pytest.approx(s["ttft_mean_ms"], rel=0.01)
+    assert "ttft_breakdown_ms" not in plain.summary()
+
+    # the trace itself: valid Chrome JSON with request + cloud + host rows
+    obj = tracer.to_chrome_trace()
+    validate_chrome_trace(obj)
+    pids = {e["pid"] for e in obj["traceEvents"] if e["ph"] == "X"}
+    assert {PID_VIRTUAL, PID_HOST} <= pids            # both time domains
+    host = [e for e in obj["traceEvents"]
+            if e["ph"] == "X" and e["pid"] == PID_HOST]
+    assert {"batch_build", "jit_step", "gather"} <= {e["name"] for e in host}
+    assert any(e["ph"] == "C" and e["name"] == "batched_tokens"
+               for e in obj["traceEvents"])
+
+
+def test_simulator_runtime_traced_run():
+    tracer = Tracer()
+    rt = SimulatorRuntime(ServeConfig.hat(), rng=np.random.default_rng(1),
+                          tracer=tracer)
+    reqs = _sim_specs()
+    m = rt.serve(reqs)
+    assert len(m.requests) == len(reqs)
+    names = {ev.name for ev in tracer.spans()}
+    assert {"uplink", "downlink", "cloud_step", "shallow"} <= names
+    for r in m.requests:
+        assert r.phase_ttft_s is not None
+        assert r.phase_ttft_s.get("uplink", 0) > 0
+    validate_chrome_trace(tracer.to_chrome_trace())
+
+
+def _sim_specs(n=4):
+    rng = np.random.default_rng(3)
+    return [
+        RequestSpec(req_id=i, device_id=i % 30, arrival_s=0.2 * i,
+                    prompt_len=int(rng.integers(64, 256)),
+                    max_new_tokens=24)
+        for i in range(n)
+    ]
