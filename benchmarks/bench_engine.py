@@ -23,8 +23,16 @@ concurrent ≥ 1.5× sequential engine tokens/s at 8 sessions.
 sums to its measured TTFT within 1%, and dumps the Chrome-trace JSON —
 open it in chrome://tracing or ui.perfetto.dev.
 
+``--net tcp`` benchmarks the *real* wire instead: it spawns 1 cloud +
+N device processes on localhost (``repro.net``), measures wall-clock
+TTFT/TBT through actual sockets, replays the identical workload through an
+in-process ``LoopbackTransport``, and asserts the two token streams match
+per request — the measured numbers are only meaningful because the
+computation is provably the same.
+
     PYTHONPATH=src python benchmarks/bench_engine.py            # full sweep
     PYTHONPATH=src python benchmarks/bench_engine.py --smoke    # CI smoke
+    PYTHONPATH=src python benchmarks/bench_engine.py --smoke --net tcp
 """
 from __future__ import annotations
 
@@ -154,6 +162,92 @@ def _traced_pass(cfg, split, adapter, *, n_sessions, prompt_len, new_tokens,
     )
 
 
+def _net_bench(args) -> None:
+    """Measured sockets vs in-process loopback, token parity asserted.
+
+    The socket path runs first (3 real processes); then the *same* specs —
+    ``repro.net.worker.device_specs`` is deterministic in (seed, device
+    index) — replay through one in-process server over
+    ``LoopbackTransport``.  Any per-request token divergence is a hard
+    failure: real-wire timings are only comparable when the computation is
+    identical."""
+    from repro.configs import get_config
+    from repro.net import run_cluster
+    from repro.net.service import build_server
+    from repro.net.worker import build_client, device_specs, run_device_workload
+    from repro.serving import LoopbackTransport
+
+    n_devices = 2
+    requests_per_device = 2 if args.smoke else 3
+    prompt_len = 16 if args.smoke else 32
+    new_tokens = 4 if args.smoke else 8
+    max_len = 128
+    codec = "fp16"
+
+    result = run_cluster(
+        args.arch, n_devices=n_devices,
+        requests_per_device=requests_per_device, prompt_len=prompt_len,
+        new_tokens=new_tokens, max_len=max_len, wire_codec=codec,
+        seed=0, workdir=args.net_workdir,
+    )
+    socket_tokens = {
+        r["req_id"]: list(r["tokens"])
+        for w in result["workers"] for r in w["requests"]
+    }
+
+    cfg = get_config(args.arch).reduced()
+    server = build_server(args.arch, slots=8, max_len=max_len,
+                         max_batch_tokens=256, wire_codec=codec, seed=0)
+    transport = LoopbackTransport(server)
+    client = build_client(args.arch, transport, max_len=max_len,
+                          wire_codec=codec, draft=False, seed=0)
+    loop_tokens = {}
+    t0 = time.perf_counter()
+    for k in range(n_devices):
+        specs = device_specs(cfg, k, n_requests=requests_per_device,
+                             prompt_len=prompt_len, new_tokens=new_tokens,
+                             seed=0)
+        for r in run_device_workload(client, transport, specs):
+            loop_tokens[r.req_id] = list(r.generated)
+    loop_wall_s = time.perf_counter() - t0
+
+    if sorted(socket_tokens) != sorted(loop_tokens):
+        raise SystemExit(
+            f"request sets diverge: socket {sorted(socket_tokens)} vs "
+            f"loopback {sorted(loop_tokens)}"
+        )
+    for rid in sorted(socket_tokens):
+        if socket_tokens[rid] != loop_tokens[rid]:
+            raise SystemExit(
+                f"token parity broken for req {rid}: socket "
+                f"{socket_tokens[rid]} vs loopback {loop_tokens[rid]}"
+            )
+
+    emit(
+        "net_tcp_ttft", result["ttft_mean_ms"] * 1e3,  # us
+        f"ttft_p90_ms={result['ttft_p90_ms']:.1f};"
+        f"tbt_mean_ms={result['tbt_mean_ms']:.1f};"
+        f"requests={result['n_requests']};devices={n_devices};"
+        f"bytes_up={result['bytes_up']};bytes_down={result['bytes_down']}",
+    )
+    emit("net_tcp_token_parity", 0.0,
+         f"{len(socket_tokens)}/{len(socket_tokens)} requests byte-identical "
+         f"to loopback;loopback_wall_s={loop_wall_s:.1f}")
+    with open(args.json, "w") as f:
+        json.dump({
+            "mode": "net-tcp",
+            "n_devices": n_devices,
+            "n_requests": result["n_requests"],
+            "ttft_mean_ms": result["ttft_mean_ms"],
+            "ttft_p90_ms": result["ttft_p90_ms"],
+            "tbt_mean_ms": result["tbt_mean_ms"],
+            "bytes_up": result["bytes_up"],
+            "bytes_down": result["bytes_down"],
+            "token_parity": True,
+            "merged_trace": result["merged_trace"],
+        }, f, indent=1)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -163,7 +257,18 @@ def main(argv=None) -> None:
     ap.add_argument("--trace-out", default=None,
                     help="dump a Chrome-trace JSON from a traced extra pass")
     ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--net", default=None, choices=["tcp"],
+                    help="benchmark the real socket path (1 cloud + 2 "
+                         "device processes) against in-process loopback "
+                         "with token parity asserted")
+    ap.add_argument("--net-workdir", default=None,
+                    help="with --net: directory for per-process logs and "
+                         "the merged Chrome trace")
     args, _ = ap.parse_known_args(argv)
+
+    if args.net == "tcp":
+        _net_bench(args)
+        return
 
     codecs = ["fp16"] if args.smoke else ["fp16", "int8"]
     session_counts = [1, ACCEPT_SESSIONS] if args.smoke else [1, 4, ACCEPT_SESSIONS]

@@ -4,12 +4,16 @@
     PYTHONPATH=src python examples/serve_cluster.py                 # statistical fleet
     PYTHONPATH=src python examples/serve_cluster.py --real          # real JAX models
     PYTHONPATH=src python examples/serve_cluster.py --engine        # session API demo
+    PYTHONPATH=src python examples/serve_cluster.py --net           # real processes
 
 The default mode runs the paper's §4.2 experiment shape: Poisson arrivals
 over 30 heterogeneous Jetson-class devices, SpecBench-like prompt lengths,
 continuous batching in the cloud; prints the Fig. 6/8-style comparison.
 ``--engine`` demonstrates the session API: DeviceClient sessions streaming
 tokens through a CloudServer over wire frames — no hand-rolled framing.
+``--net`` runs the real thing: 1 cloud service process + N device worker
+processes exchanging frames over localhost TCP, wall-clock TTFT/TBT and a
+merged multi-process Chrome trace.
 """
 import argparse
 import json
@@ -185,6 +189,34 @@ def engine_demo(args):
         _dump_trace(tracer, args.trace_out, "engine trace")
 
 
+def net_demo(args):
+    """Real multi-process serving: spawn 1 cloud + N device processes on
+    localhost TCP and report measured (not simulated) latency.  The token
+    streams are deterministic in (arch, seed), so the same workload served
+    through an in-process loopback must match byte for byte — which is
+    exactly what ``benchmarks/bench_engine.py --net tcp`` asserts."""
+    from repro.net import run_cluster
+
+    n_devices = 2
+    result = run_cluster(
+        args.arch,
+        n_devices=n_devices,
+        requests_per_device=max(1, args.requests // n_devices),
+        wire_codec=args.wire_codec,
+        workdir=args.net_workdir,
+    )
+    print(f"{n_devices} device processes + 1 cloud process "
+          f"({result['host']}:{result['port']}), "
+          f"{result['n_requests']} requests over TCP")
+    print(f"measured TTFT mean {result['ttft_mean_ms']:.1f}ms "
+          f"p90 {result['ttft_p90_ms']:.1f}ms, "
+          f"TBT mean {result['tbt_mean_ms']:.1f}ms")
+    print(f"wire: {result['bytes_up']} B up, {result['bytes_down']} B down")
+    if result["merged_trace"]:
+        print(f"merged cross-process trace -> {result['merged_trace']} "
+              "(open in chrome://tracing or ui.perfetto.dev)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=150)
@@ -193,6 +225,11 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--engine", action="store_true")
+    ap.add_argument("--net", action="store_true",
+                    help="real multi-process serving over localhost TCP "
+                         "(1 cloud + 2 device processes)")
+    ap.add_argument("--net-workdir", default=None,
+                    help="with --net: directory for logs/results/traces")
     ap.add_argument("--trace-out", default=None,
                     help="dump a Chrome-trace JSON of the run "
                          "(HAT fleet run, or the concurrent engine demo)")
@@ -201,7 +238,10 @@ def main():
     ap.add_argument("--wire-codec", default="fp16", choices=sorted(CODECS),
                     help="hidden-state transport codec on the device-cloud wire")
     args = ap.parse_args()
-    if args.engine:
+    if args.net:
+        args.requests = min(args.requests, 8)  # real processes: keep it a demo
+        net_demo(args)
+    elif args.engine:
         engine_demo(args)
     else:
         fleet_comparison(args)

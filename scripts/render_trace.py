@@ -1,12 +1,19 @@
-"""Summarize a flight-recorder Chrome-trace JSON in the terminal.
+"""Summarize flight-recorder Chrome-trace JSONs in the terminal.
 
 The trace itself opens in chrome://tracing or https://ui.perfetto.dev; this
 script is the no-browser path: validate the schema, then print per-request
 phase tables (where every millisecond of each request's TTFT window went)
 and the longest individual spans.
 
+Multiple trace files — e.g. the per-process dumps a ``repro.net`` cluster
+writes (cloud service + each device worker) — are merged into one trace
+with disjoint pids before rendering; ``--merge-out`` saves the merged
+(validated) JSON for the browser.
+
     PYTHONPATH=src python scripts/render_trace.py bench_engine_trace.json
     PYTHONPATH=src python scripts/render_trace.py trace.json --top 20
+    PYTHONPATH=src python scripts/render_trace.py out/cloud_trace.json \
+        out/dev0_trace.json out/dev1_trace.json --merge-out out/merged.json
 
 stdlib + repro.obs only — safe to run anywhere the repo runs.
 """
@@ -14,10 +21,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from collections import defaultdict
 
-from repro.obs import PHASES, PID_VIRTUAL, TID_CLOUD, validate_chrome_trace
+from repro.obs import (
+    MERGE_PID_STRIDE,
+    PHASES,
+    PID_VIRTUAL,
+    TID_CLOUD,
+    merge_chrome_traces,
+    validate_chrome_trace,
+)
 
 
 def _spans(obj):
@@ -26,44 +41,78 @@ def _spans(obj):
             yield ev
 
 
+def _is_virtual(pid: int) -> bool:
+    # merged traces shift each input's pids by k * MERGE_PID_STRIDE while
+    # preserving the pid role within each block
+    return pid % MERGE_PID_STRIDE == PID_VIRTUAL
+
+
 def phase_table(obj) -> dict:
-    """tid -> phase -> total ms, over the virtual-time request rows."""
+    """(pid, tid) -> phase -> total ms, over the virtual-time request rows."""
     table: dict = defaultdict(lambda: defaultdict(float))
     for ev in _spans(obj):
-        if ev["pid"] != PID_VIRTUAL or ev["tid"] == TID_CLOUD:
+        if not _is_virtual(ev["pid"]) or ev["tid"] == TID_CLOUD:
             continue
         phase = ev.get("args", {}).get("phase")
         if phase:
-            table[ev["tid"]][phase] += ev["dur"] / 1e3
+            table[(ev["pid"], ev["tid"])][phase] += ev["dur"] / 1e3
     return table
+
+
+def load_traces(paths):
+    """Load one trace, or merge several (labelled by filename stem) into a
+    single validated object with disjoint pids."""
+    objs = []
+    for path in paths:
+        with open(path) as f:
+            objs.append(json.load(f))
+    if len(objs) == 1:
+        validate_chrome_trace(objs[0])
+        return objs[0]
+    labels = [os.path.splitext(os.path.basename(p))[0] for p in paths]
+    if len(set(labels)) != len(labels):         # e.g. a/trace.json b/trace.json
+        labels = [f"{i}:{lab}" for i, lab in enumerate(labels)]
+    merged = merge_chrome_traces(objs, labels)
+    validate_chrome_trace(merged)
+    return merged
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("trace", help="Chrome-trace JSON (tracer.dump output)")
+    ap.add_argument("traces", nargs="+",
+                    help="Chrome-trace JSON(s) (tracer.dump output); "
+                         "several files are merged with disjoint pids")
     ap.add_argument("--top", type=int, default=10,
                     help="longest spans to list")
+    ap.add_argument("--merge-out", default=None,
+                    help="write the merged (validated) trace JSON here")
     args = ap.parse_args(argv)
 
-    with open(args.trace) as f:
-        obj = json.load(f)
-    validate_chrome_trace(obj)
+    obj = load_traces(args.traces)
+    if args.merge_out:
+        with open(args.merge_out, "w") as f:
+            json.dump(obj, f, indent=1)
+        print(f"merged {len(args.traces)} traces -> {args.merge_out}")
 
     spans = list(_spans(obj))
     other = obj.get("otherData", {})
-    print(f"{args.trace}: schema v{obj['schemaVersion']}, "
+    name = args.traces[0] if len(args.traces) == 1 \
+        else f"{len(args.traces)} merged traces"
+    print(f"{name}: schema v{obj['schemaVersion']}, "
           f"{len(obj['traceEvents'])} events ({len(spans)} spans), "
           f"{other.get('droppedEvents', 0)} dropped")
 
     table = phase_table(obj)
     if table:
         cols = [p for p in PHASES if any(p in r for r in table.values())]
-        header = "req".rjust(6) + "".join(c.rjust(12) for c in cols) \
+        header = "req".rjust(10) + "".join(c.rjust(12) for c in cols) \
             + "total ms".rjust(12)
         print("\nper-request phase attribution (ms):\n" + header)
-        for tid in sorted(table):
-            row = table[tid]
-            print(f"{tid:6d}"
+        for pid, tid in sorted(table):
+            row = table[(pid, tid)]
+            proc = pid // MERGE_PID_STRIDE
+            label = f"{proc}/{tid}" if len(args.traces) > 1 else str(tid)
+            print(f"{label:>10s}"
                   + "".join(f"{row.get(c, 0.0):12.2f}" for c in cols)
                   + f"{sum(row.values()):12.2f}")
 
@@ -72,7 +121,7 @@ def main(argv=None) -> int:
         print(f"\ntop {len(longest)} spans by duration:")
         for ev in longest:
             where = ("cloud" if ev["tid"] == TID_CLOUD
-                     else f"req {ev['tid']}" if ev["pid"] == PID_VIRTUAL
+                     else f"req {ev['tid']}" if _is_virtual(ev["pid"])
                      else "host")
             print(f"  {ev['dur'] / 1e3:10.2f} ms  {ev['name']:<16s} {where}")
 

@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve --framework hat --rate 6 --requests 200
   PYTHONPATH=src python -m repro.launch.serve --framework u-shape --workload cnn_dm
   PYTHONPATH=src python -m repro.launch.serve --runtime engine --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --net tcp --devices 2 --requests 4
 
 Runs the 30-device fleet simulator (all algorithmic components real; delay
 models calibrated to the paper's testbed — DESIGN.md §3) through the typed
@@ -17,6 +18,11 @@ shared virtual clock, and the cloud batches prefill chunks + verify strips
 *across* sessions in slot-batched middle-submodel steps (continuous
 batching).  ``--sequential-engine`` keeps the legacy one-session-at-a-time
 parity mode.
+
+``--net tcp`` leaves simulation behind entirely: the launcher spawns one
+``repro.net.service`` cloud process plus ``--devices`` real device worker
+processes talking ``repro.wire`` frames over localhost TCP, then reports
+**measured** wall-clock TTFT/TBT and the merged cross-process Chrome trace.
 """
 from __future__ import annotations
 
@@ -34,7 +40,8 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=6.0)
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--pipeline-len", type=int, default=4)
-    ap.add_argument("--devices", type=int, default=30)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="fleet size (default 30 simulated; 2 with --net)")
     ap.add_argument("--real", action="store_true",
                     help="real JAX models (reduced config) instead of the "
                          "statistical backend")
@@ -54,11 +61,44 @@ def main() -> None:
                     help="hidden-state transport codec (default: fp16 byte "
                          "accounting, backend codec untouched)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--net", default=None, choices=["tcp"],
+                    help="serve over real sockets: spawn 1 cloud + N device "
+                         "processes on localhost and measure wall-clock "
+                         "TTFT/TBT (no delay models)")
+    ap.add_argument("--net-workdir", default=None,
+                    help="with --net: directory for per-process logs, "
+                         "result JSONs and the merged Chrome trace")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="with --net: tokens per synthetic prompt")
+    ap.add_argument("--new-tokens", type=int, default=4,
+                    help="with --net: tokens generated per request")
     args = ap.parse_args()
+
+    if args.net == "tcp":
+        from ..net import run_cluster
+
+        devices = args.devices if args.devices is not None else 2
+        result = run_cluster(
+            args.arch,
+            n_devices=devices,
+            requests_per_device=max(1, -(-args.requests // devices)),
+            prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens,
+            slots=args.slots,
+            max_len=args.max_len,
+            wire_codec=args.wire_codec or "fp16",
+            draft=args.framework == "hat",
+            seed=args.seed,
+            workdir=args.net_workdir,
+        )
+        result.pop("workers")        # per-request detail lives in the JSONs
+        print(json.dumps(result, indent=1))
+        return
 
     from ..data import CNN_DM, SPECBENCH, sample_workload
     from ..serving import EngineRuntime, ServeConfig, SimulatorRuntime
 
+    args.devices = args.devices if args.devices is not None else 30
     spec = SPECBENCH if args.workload == "specbench" else CNN_DM
     d_model = 4096 if args.workload == "specbench" else 5120
     rng = np.random.default_rng(args.seed)

@@ -1,0 +1,61 @@
+"""repro.net — real multi-process serving over TCP sockets.
+
+The simulated stack (``DelayModelTransport``) models the link; this
+package replaces the model with the thing itself: a length-prefixed
+stream protocol carrying ``repro.wire`` frames plus typed control
+messages, a :class:`SocketTransport` device endpoint, a
+:class:`CloudService` server process, and a launcher that spawns
+1 cloud + N device processes on localhost.  TTFT/TBT measured through
+this path are wall-clock, not simulated.
+
+Import layout: :mod:`~repro.net.errors` and :mod:`~repro.net.protocol`
+are dependency-free and imported eagerly (``repro.serving.api`` pulls
+the error hierarchy in for its timeout path).  Everything that imports
+``repro.serving`` back — transport, service, worker, launcher — is
+exposed lazily via module ``__getattr__`` to keep the import graph
+acyclic.
+"""
+from __future__ import annotations
+
+from . import errors, protocol
+from .errors import (
+    ProtocolError,
+    RemoteEngineError,
+    TransportClosed,
+    TransportError,
+    TransportTimeout,
+)
+from .protocol import PROTO_VERSION, StreamDecoder
+
+_LAZY = {
+    "SocketTransport": ("transport", "SocketTransport"),
+    "CloudService": ("service", "CloudService"),
+    "build_server": ("service", "build_server"),
+    "run_cluster": ("launcher", "run_cluster"),
+    "spawn_cloud": ("launcher", "spawn_cloud"),
+    "spawn_worker": ("launcher", "spawn_worker"),
+    "device_specs": ("worker", "device_specs"),
+    "run_device_workload": ("worker", "run_device_workload"),
+    "build_client": ("worker", "build_client"),
+}
+
+__all__ = [
+    "errors", "protocol",
+    "ProtocolError", "RemoteEngineError", "TransportClosed",
+    "TransportError", "TransportTimeout",
+    "PROTO_VERSION", "StreamDecoder",
+    *_LAZY,
+]
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    value = getattr(mod, attr)
+    globals()[name] = value
+    return value

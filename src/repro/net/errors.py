@@ -1,0 +1,66 @@
+"""Transport error hierarchy for the device-cloud network path.
+
+Deliberately import-free (no repro dependencies): ``repro.serving.api``
+imports these to give the base :class:`~repro.serving.api.Transport` a
+typed failure surface, and ``repro.net`` re-exports them next to the
+socket implementations — so the hierarchy must sit below both.
+
+All errors subclass :class:`RuntimeError`: historical callers that caught
+``RuntimeError`` on starved downlinks keep working unchanged.
+
+* :class:`TransportError` — base class: the wire failed (connect,
+  send, protocol desync, starved downlink).
+* :class:`TransportTimeout` — a bounded ``recv``/``send`` ran out of
+  time.  Subclasses :class:`TimeoutError` too, so generic timeout
+  handling sees it.
+* :class:`TransportClosed` — the peer hung up (EOF mid-stream or the
+  service shut the session's connection down).
+* :class:`RemoteEngineError` — the *cloud* failed the request and said
+  so over the wire: a typed error frame carrying an error code (e.g.
+  ``ERR_OVERFLOW`` when the engine raised ``EngineOverflowError``),
+  the owning ``req_id`` and the remote message.  Raising it out of
+  ``recv`` releases the waiting session instead of blocking forever.
+"""
+from __future__ import annotations
+
+
+class TransportError(RuntimeError):
+    """Base class for device-cloud transport failures."""
+
+
+class TransportTimeout(TransportError, TimeoutError):
+    """A bounded transport operation exceeded its deadline."""
+
+    def __init__(self, op: str, timeout_s: float, req_id: int | None = None):
+        self.op = op
+        self.timeout_s = timeout_s
+        self.req_id = req_id
+        where = f" for request {req_id}" if req_id is not None else ""
+        super().__init__(f"{op}{where} timed out after {timeout_s:.3g}s")
+
+
+class TransportClosed(TransportError):
+    """The connection ended (EOF / peer shutdown) while traffic was due."""
+
+
+class ProtocolError(TransportError):
+    """The byte stream desynced: bad magic, an oversized message, a
+    version-mismatch hello, or a message type the receiver cannot route.
+    Unrecoverable for the connection — the only safe reaction is to drop
+    it (a length-prefixed stream cannot resynchronize mid-garbage)."""
+
+
+class RemoteEngineError(TransportError):
+    """A typed error frame from the cloud: the engine rejected or dropped
+    the request (slot overflow, failed admission, internal fault).
+
+    ``code`` is a ``repro.net.protocol`` ``ERR_*`` constant; ``req_id`` is
+    the request the error belongs to (0 = connection-wide)."""
+
+    def __init__(self, code: int, req_id: int, message: str):
+        self.code = code
+        self.req_id = req_id
+        self.remote_message = message
+        super().__init__(
+            f"cloud error (code {code}) for request {req_id}: {message}"
+        )

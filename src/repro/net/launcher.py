@@ -1,0 +1,277 @@
+"""Process launcher: 1 cloud + N device processes on localhost.
+
+The three-process (and up) topology the paper actually measures —
+genuinely disaggregated device and cloud — driven from one parent::
+
+    from repro.net.launcher import run_cluster
+    result = run_cluster(arch="internlm2-1.8b", n_devices=2,
+                         requests_per_device=2, workdir="out/")
+
+``run_cluster`` spawns ``python -m repro.net.service`` (ephemeral port,
+parsed from its startup line), waits for it to listen, spawns one
+``python -m repro.net.worker`` per device, collects every worker's result
+JSON, terminates the cloud gracefully (SIGTERM => it dumps its trace),
+and merges the per-process Chrome traces into one file with disjoint
+pids.  Used by ``launch/serve --net tcp``, ``serve_cluster --net``, the
+``bench_engine --net tcp`` benchmark and the CI net-smoke job.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .errors import TransportError
+
+_LISTEN_PREFIX = "NET_SERVE listening on "
+
+
+def _src_env() -> Dict[str, str]:
+    """Child processes must import repro the same way the parent does."""
+    import repro
+
+    # repro is a namespace package (no __init__.py): __file__ is None, the
+    # import root is the parent of the first __path__ entry
+    src = str(Path(list(repro.__path__)[0]).resolve().parent)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _tail(path: Path, n: int = 30) -> str:
+    try:
+        return "\n".join(path.read_text().splitlines()[-n:])
+    except OSError:
+        return "<no log>"
+
+
+class CloudProcess:
+    """Handle on a spawned ``repro.net.service`` process."""
+
+    def __init__(self, proc: subprocess.Popen, host: str, port: int,
+                 log_path: Path, trace_out: Optional[Path]):
+        self.proc = proc
+        self.host = host
+        self.port = port
+        self.log_path = log_path
+        self.trace_out = trace_out
+
+    def terminate(self, timeout_s: float = 30.0) -> int:
+        """SIGTERM (the service dumps its trace on the way down) + wait."""
+        if self.proc.poll() is None:
+            self.proc.send_signal(signal.SIGTERM)
+            try:
+                self.proc.wait(timeout=timeout_s)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait()
+        return self.proc.returncode
+
+
+def spawn_cloud(
+    arch: str,
+    *,
+    workdir: Path,
+    slots: int = 8,
+    max_len: int = 128,
+    max_batch_tokens: int = 256,
+    wire_codec: str = "fp16",
+    seed: int = 0,
+    host: str = "127.0.0.1",
+    port: int = 0,
+    trace: bool = True,
+    startup_timeout_s: float = 240.0,
+) -> CloudProcess:
+    """Start the cloud service; blocks until it prints its listen line
+    (cold JAX import + model build can take a while on CPU)."""
+    workdir.mkdir(parents=True, exist_ok=True)
+    log_path = workdir / "cloud.log"
+    trace_out = workdir / "cloud_trace.json" if trace else None
+    cmd = [
+        sys.executable, "-m", "repro.net.service",
+        "--host", host, "--port", str(port), "--arch", arch,
+        "--slots", str(slots), "--max-len", str(max_len),
+        "--max-batch-tokens", str(max_batch_tokens),
+        "--wire-codec", wire_codec, "--seed", str(seed),
+    ]
+    if trace_out is not None:
+        cmd += ["--trace-out", str(trace_out)]
+    log = open(log_path, "w")
+    proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
+                            env=_src_env())
+    deadline = time.monotonic() + startup_timeout_s
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise TransportError(
+                f"cloud service exited with {proc.returncode} before "
+                f"listening; log tail:\n{_tail(log_path)}"
+            )
+        for line in log_path.read_text().splitlines():
+            if line.startswith(_LISTEN_PREFIX):
+                addr = line[len(_LISTEN_PREFIX):].strip()
+                h, p = addr.rsplit(":", 1)
+                return CloudProcess(proc, h, int(p), log_path, trace_out)
+        time.sleep(0.1)
+    proc.kill()
+    raise TransportError(
+        f"cloud service did not listen within {startup_timeout_s:.0f}s; "
+        f"log tail:\n{_tail(log_path)}"
+    )
+
+
+def spawn_worker(
+    device_index: int,
+    *,
+    host: str,
+    port: int,
+    arch: str,
+    workdir: Path,
+    requests: int = 2,
+    prompt_len: int = 16,
+    new_tokens: int = 4,
+    max_len: int = 128,
+    wire_codec: str = "fp16",
+    draft: bool = False,
+    seed: int = 0,
+    trace: bool = True,
+) -> subprocess.Popen:
+    out = workdir / f"dev{device_index}.json"
+    cmd = [
+        sys.executable, "-m", "repro.net.worker",
+        "--host", host, "--port", str(port), "--arch", arch,
+        "--device-index", str(device_index),
+        "--requests", str(requests), "--prompt-len", str(prompt_len),
+        "--new-tokens", str(new_tokens), "--max-len", str(max_len),
+        "--wire-codec", wire_codec, "--seed", str(seed),
+        "--out", str(out),
+    ]
+    if draft:
+        cmd.append("--draft")
+    if trace:
+        cmd += ["--trace-out", str(workdir / f"dev{device_index}_trace.json")]
+    log = open(workdir / f"dev{device_index}.log", "w")
+    return subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
+                            env=_src_env())
+
+
+def merge_traces(workdir: Path, n_devices: int) -> Optional[Path]:
+    """Merge the cloud + per-device trace dumps into ``merged_trace.json``
+    (disjoint pids per process); returns None when no trace was written."""
+    from ..obs import merge_chrome_traces, validate_chrome_trace
+
+    paths, labels = [], []
+    cloud = workdir / "cloud_trace.json"
+    if cloud.exists():
+        paths.append(cloud)
+        labels.append("cloud")
+    for i in range(n_devices):
+        p = workdir / f"dev{i}_trace.json"
+        if p.exists():
+            paths.append(p)
+            labels.append(f"device{i}")
+    if not paths:
+        return None
+    objs = [json.loads(p.read_text()) for p in paths]
+    merged = merge_chrome_traces(objs, labels)
+    validate_chrome_trace(merged)
+    out = workdir / "merged_trace.json"
+    out.write_text(json.dumps(merged, indent=1))
+    return out
+
+
+def run_cluster(
+    arch: str = "internlm2-1.8b",
+    *,
+    n_devices: int = 2,
+    requests_per_device: int = 2,
+    prompt_len: int = 16,
+    new_tokens: int = 4,
+    slots: int = 8,
+    max_len: int = 128,
+    max_batch_tokens: int = 256,
+    wire_codec: str = "fp16",
+    draft: bool = False,
+    seed: int = 0,
+    workdir: Optional[str] = None,
+    trace: bool = True,
+    worker_timeout_s: float = 600.0,
+) -> dict:
+    """The whole topology, end to end; returns aggregated measurements.
+
+    Raises :class:`TransportError` with the failing process's log tail if
+    the cloud never listens or any worker exits non-zero."""
+    if workdir is None:
+        import tempfile
+
+        workdir = tempfile.mkdtemp(prefix="repro_net_")
+    wd = Path(workdir)
+    wd.mkdir(parents=True, exist_ok=True)
+
+    cloud = spawn_cloud(
+        arch, workdir=wd, slots=slots, max_len=max_len,
+        max_batch_tokens=max_batch_tokens, wire_codec=wire_codec,
+        seed=seed, trace=trace,
+    )
+    workers: List[subprocess.Popen] = []
+    try:
+        for i in range(n_devices):
+            workers.append(spawn_worker(
+                i, host=cloud.host, port=cloud.port, arch=arch, workdir=wd,
+                requests=requests_per_device, prompt_len=prompt_len,
+                new_tokens=new_tokens, max_len=max_len,
+                wire_codec=wire_codec, draft=draft, seed=seed, trace=trace,
+            ))
+        deadline = time.monotonic() + worker_timeout_s
+        for i, w in enumerate(workers):
+            try:
+                w.wait(timeout=max(deadline - time.monotonic(), 1.0))
+            except subprocess.TimeoutExpired:
+                raise TransportError(
+                    f"device worker {i} still running after "
+                    f"{worker_timeout_s:.0f}s; log tail:\n"
+                    f"{_tail(wd / f'dev{i}.log')}"
+                )
+            if w.returncode != 0:
+                raise TransportError(
+                    f"device worker {i} exited with {w.returncode}; log "
+                    f"tail:\n{_tail(wd / f'dev{i}.log')}"
+                )
+    finally:
+        for w in workers:
+            if w.poll() is None:
+                w.kill()
+        cloud_rc = cloud.terminate()
+
+    results = []
+    for i in range(n_devices):
+        with open(wd / f"dev{i}.json") as f:
+            results.append(json.load(f))
+    reqs = [r for res in results for r in res["requests"]]
+    ttfts = np.asarray([r["ttft_s"] for r in reqs if r["ttft_s"] is not None])
+    tbts = np.asarray([r["tbt_s"] for r in reqs if r["tbt_s"] is not None])
+    merged = merge_traces(wd, n_devices) if trace else None
+    return {
+        "workdir": str(wd),
+        "host": cloud.host,
+        "port": cloud.port,
+        "cloud_returncode": cloud_rc,
+        "n_devices": n_devices,
+        "workers": results,
+        "n_requests": len(reqs),
+        "ttft_mean_ms": float(ttfts.mean() * 1e3) if len(ttfts) else None,
+        "ttft_p90_ms": (float(np.percentile(ttfts, 90) * 1e3)
+                        if len(ttfts) else None),
+        "tbt_mean_ms": float(tbts.mean() * 1e3) if len(tbts) else None,
+        "bytes_up": sum(r["bytes_up"] for r in results),
+        "bytes_down": sum(r["bytes_down"] for r in results),
+        "merged_trace": str(merged) if merged else None,
+        "cloud_log": str(cloud.log_path),
+    }

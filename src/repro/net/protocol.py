@@ -1,0 +1,210 @@
+"""Length-prefixed stream protocol for the device-cloud TCP wire.
+
+``repro.wire`` frames are self-delimiting, but a TCP byte stream needs an
+envelope that also carries *control* traffic — session lifecycle, version
+negotiation, SSM snapshot/restore, and typed errors (so an
+``EngineOverflowError`` raised inside the cloud process reaches the device
+as data instead of a hung socket).  Every message on the stream is::
+
+    magic   2s  b"HN"
+    type    B   MSG_* constant
+    length  I   payload byte length (little-endian)
+    payload length bytes
+
+Message types and payloads:
+
+========================  =====================================================
+``MSG_HELLO``             ``<HHI`` proto version, wire-frame version, d_model —
+                          first message on every connection, device -> cloud
+``MSG_HELLO_ACK``         same struct, the cloud's values (negotiation is
+                          exact-match: any mismatch answers ``MSG_ERROR`` +
+                          close instead)
+``MSG_OPEN``              ``<II`` req_id, expected_tokens — open a session
+``MSG_OPEN_OK``           ``<I`` req_id — slot + KV admitted
+``MSG_CLOSE``             ``<I`` req_id — release the session (no reply)
+``MSG_FRAME``             raw ``repro.wire`` frame bytes (uplink chunk frames
+                          device -> cloud, deep-state frames cloud -> device)
+``MSG_SNAPSHOT``          ``<I`` req_id — snapshot the slot's recurrent state
+``MSG_SNAPSHOT_OK``       ``<II`` req_id, snap_id — handle to a cloud-held
+                          snapshot (state never crosses the wire)
+``MSG_RESTORE``           ``<II`` req_id, snap_id
+``MSG_RESTORE_OK``        ``<I`` req_id
+``MSG_ERROR``             ``<HI`` ERR_* code, req_id (0 = connection-wide),
+                          then a utf-8 message
+``MSG_BYE``               empty — graceful device goodbye
+========================  =====================================================
+
+:class:`StreamDecoder` is the receive half: feed it arbitrary byte chunks
+(torn reads, coalesced messages — TCP guarantees neither message
+boundaries nor chunk sizes) and it yields complete ``(type, payload)``
+messages, rejecting bad magic and oversized lengths with
+:class:`~repro.net.errors.ProtocolError` before buffering unbounded data.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Iterator, List, Tuple
+
+from .errors import ProtocolError
+
+PROTO_VERSION = 1
+MAGIC = b"HN"
+
+MSG_HELLO = 1
+MSG_HELLO_ACK = 2
+MSG_OPEN = 3
+MSG_OPEN_OK = 4
+MSG_CLOSE = 5
+MSG_FRAME = 6
+MSG_SNAPSHOT = 7
+MSG_SNAPSHOT_OK = 8
+MSG_RESTORE = 9
+MSG_RESTORE_OK = 10
+MSG_ERROR = 11
+MSG_BYE = 12
+
+MSG_NAMES = {
+    MSG_HELLO: "hello", MSG_HELLO_ACK: "hello_ack",
+    MSG_OPEN: "open", MSG_OPEN_OK: "open_ok", MSG_CLOSE: "close",
+    MSG_FRAME: "frame",
+    MSG_SNAPSHOT: "snapshot", MSG_SNAPSHOT_OK: "snapshot_ok",
+    MSG_RESTORE: "restore", MSG_RESTORE_OK: "restore_ok",
+    MSG_ERROR: "error", MSG_BYE: "bye",
+}
+
+# typed error codes carried by MSG_ERROR
+ERR_VERSION = 1          # hello negotiation failed
+ERR_REJECTED = 2         # open refused: no slot / KV budget
+ERR_OVERFLOW = 3         # EngineOverflowError: job past the slot's max_len
+ERR_PROTOCOL = 4         # malformed message (the connection is dropped)
+ERR_INTERNAL = 5         # unexpected cloud-side failure
+
+ERR_NAMES = {
+    ERR_VERSION: "version", ERR_REJECTED: "rejected",
+    ERR_OVERFLOW: "overflow", ERR_PROTOCOL: "protocol",
+    ERR_INTERNAL: "internal",
+}
+
+_HEADER = struct.Struct("<2sBI")
+HEADER_BYTES = _HEADER.size
+
+_HELLO = struct.Struct("<HHI")           # proto_version, frame_version, d_model
+_U32 = struct.Struct("<I")
+_U32_PAIR = struct.Struct("<II")
+_ERROR = struct.Struct("<HI")            # code, req_id
+
+# Bounds buffering on a desynced or hostile stream.  The largest honest
+# message is a deep-state frame: fp32 x d_model 8192 x a 4096-token chunk
+# is 128 MiB; default well above any real frame, still finite.
+MAX_MESSAGE_BYTES = 256 * 1024 * 1024
+
+
+def encode_msg(mtype: int, payload: bytes = b"") -> bytes:
+    """Wrap one message for the stream."""
+    if mtype not in MSG_NAMES:
+        raise ValueError(f"unknown message type {mtype}")
+    return _HEADER.pack(MAGIC, mtype, len(payload)) + payload
+
+
+def encode_hello(d_model: int, *, proto_version: int = PROTO_VERSION,
+                 frame_version: int | None = None) -> bytes:
+    from ..wire import FRAME_VERSION
+
+    fv = FRAME_VERSION if frame_version is None else frame_version
+    return _HELLO.pack(proto_version, fv, d_model)
+
+
+def decode_hello(payload: bytes) -> Tuple[int, int, int]:
+    """-> (proto_version, frame_version, d_model)."""
+    if len(payload) != _HELLO.size:
+        raise ProtocolError(f"hello payload is {len(payload)} B, "
+                            f"expected {_HELLO.size}")
+    return _HELLO.unpack(payload)
+
+
+def encode_u32(value: int) -> bytes:
+    return _U32.pack(value)
+
+
+def decode_u32(payload: bytes) -> int:
+    if len(payload) != _U32.size:
+        raise ProtocolError(f"expected a u32 payload, got {len(payload)} B")
+    return _U32.unpack(payload)[0]
+
+
+def encode_u32_pair(a: int, b: int) -> bytes:
+    return _U32_PAIR.pack(a, b)
+
+
+def decode_u32_pair(payload: bytes) -> Tuple[int, int]:
+    if len(payload) != _U32_PAIR.size:
+        raise ProtocolError(f"expected a u32 pair payload, got {len(payload)} B")
+    return _U32_PAIR.unpack(payload)
+
+
+def encode_error(code: int, req_id: int, message: str) -> bytes:
+    return _ERROR.pack(code, req_id) + message.encode("utf-8")
+
+
+def decode_error(payload: bytes) -> Tuple[int, int, str]:
+    """-> (code, req_id, message)."""
+    if len(payload) < _ERROR.size:
+        raise ProtocolError("truncated error payload")
+    code, req_id = _ERROR.unpack_from(payload)
+    return code, req_id, payload[_ERROR.size:].decode("utf-8", "replace")
+
+
+class StreamDecoder:
+    """Incremental message decoder over a torn byte stream.
+
+    ``feed(chunk)`` returns every message completed by the chunk, in
+    order; partial tails stay buffered for the next feed.  Header
+    validation happens as soon as the header bytes are available, so a
+    desynced or oversized stream fails fast instead of buffering garbage
+    up to a bogus length prefix."""
+
+    def __init__(self, *, max_message_bytes: int = MAX_MESSAGE_BYTES):
+        self._buf = bytearray()
+        self.max_message_bytes = max_message_bytes
+        self.messages_in = 0
+        self.bytes_in = 0
+
+    def feed(self, chunk: bytes) -> List[Tuple[int, bytes]]:
+        self.bytes_in += len(chunk)
+        self._buf += chunk
+        out: List[Tuple[int, bytes]] = []
+        pos = 0
+        while len(self._buf) - pos >= HEADER_BYTES:
+            magic, mtype, length = _HEADER.unpack_from(self._buf, pos)
+            if magic != MAGIC:
+                raise ProtocolError(
+                    f"stream desync: bad message magic {bytes(magic)!r}"
+                )
+            if mtype not in MSG_NAMES:
+                raise ProtocolError(f"unknown message type {mtype}")
+            if length > self.max_message_bytes:
+                raise ProtocolError(
+                    f"message of {length} B exceeds the "
+                    f"{self.max_message_bytes} B limit"
+                )
+            end = pos + HEADER_BYTES + length
+            if len(self._buf) < end:
+                break                              # torn: wait for more bytes
+            out.append((mtype, bytes(self._buf[pos + HEADER_BYTES:end])))
+            self.messages_in += 1
+            pos = end
+        del self._buf[:pos]
+        return out
+
+    @property
+    def pending_bytes(self) -> int:
+        """Buffered bytes of the (incomplete) next message."""
+        return len(self._buf)
+
+
+def iter_messages(stream: bytes) -> Iterator[Tuple[int, bytes]]:
+    """Decode a complete in-memory stream (tests / trace tooling)."""
+    dec = StreamDecoder()
+    yield from dec.feed(stream)
+    if dec.pending_bytes:
+        raise ProtocolError(f"trailing {dec.pending_bytes} B of partial message")

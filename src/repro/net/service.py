@@ -1,0 +1,432 @@
+"""CloudService: the cloud half of HAT as a real network server.
+
+Wraps a :class:`repro.serving.api.CloudServer` (and its slot-batched
+:class:`~repro.serving.engine.CloudEngine`) behind the
+``repro.net.protocol`` stream so genuinely separate device *processes*
+drive it over TCP:
+
+* one **accept loop** hands each connection to a per-connection **reader
+  thread** that decodes messages and — crucially — does the host-side
+  framing/codec work (``Frame.from_bytes`` + dequantize) *outside* the
+  engine lock, so uplink decode for device B overlaps the engine
+  device-step for device A (the async-dispatch follow-up from the
+  concurrent-runtime PR);
+* one shared **pump loop** thread runs slot-batched engine steps whenever
+  jobs are queued and routes each deep-state result back to the owning
+  connection (downlink re-encode also happens outside the lock);
+* session lifecycle, SSM snapshot/restore (snapshots stay cloud-resident;
+  only an opaque handle crosses the wire) and **typed errors** — an
+  :class:`~repro.serving.engine.EngineOverflowError` raised at submit
+  becomes a ``MSG_ERROR``/``ERR_OVERFLOW`` for the owning request instead
+  of a poisoned in-process exception nobody on the device can see.
+
+Run it as a process::
+
+    PYTHONPATH=src python -m repro.net.service --arch internlm2-1.8b --port 0
+
+It prints ``NET_SERVE listening on HOST:PORT`` once ready (port 0 binds an
+ephemeral port; the launcher parses the line), serves until SIGTERM/SIGINT,
+and dumps its flight-recorder trace (``--trace-out``) on the way down.
+All service spans run on the unix-epoch clock (``time.time()``), the one
+clock device and cloud processes on a host share — merged traces stay
+causally ordered across processes.
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from ..obs import NULL_TRACER, TID_CLOUD, Tracer
+from ..serving.api import CloudServer
+from ..serving.engine import EngineJob, EngineOverflowError
+from ..wire import FRAME_VERSION, Frame, KIND_DEEP, decode_hidden, stamp_t_send
+from . import protocol as P
+from .errors import ProtocolError
+
+_ACCEPT_POLL_S = 0.2
+_PUMP_IDLE_S = 0.05
+
+
+@dataclass
+class _Conn:
+    """One device connection: socket + its protocol state."""
+
+    sock: socket.socket
+    peer: str
+    decoder: P.StreamDecoder
+    send_lock: threading.Lock = field(default_factory=threading.Lock)
+    hello_done: bool = False
+    open_reqs: set = field(default_factory=set)
+    snapshots: Dict[int, object] = field(default_factory=dict)
+    next_snap_id: int = 1
+    alive: bool = True
+
+    def send_msg(self, mtype: int, payload: bytes = b"") -> None:
+        data = P.encode_msg(mtype, payload)
+        try:
+            with self.send_lock:
+                self.sock.sendall(data)
+        except OSError:
+            self.alive = False
+
+
+class CloudService:
+    """TCP server process around a frame-speaking :class:`CloudServer`.
+
+    Thread layout: N reader threads (one per live connection) + 1 pump
+    thread + 1 accept thread.  The engine lock serializes every mutation
+    of engine state (submit, step, session lifecycle, snapshot/restore);
+    codec encode/decode run outside it.  JAX stays effectively
+    single-threaded: only the pump thread ever calls ``engine.step``.
+    """
+
+    def __init__(
+        self,
+        server: CloudServer,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        max_message_bytes: int = P.MAX_MESSAGE_BYTES,
+        tracer: Optional[Tracer] = None,
+    ):
+        self.server = server
+        self.host = host
+        self.port = port
+        self.max_message_bytes = max_message_bytes
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._lock = threading.Lock()            # engine + session state
+        self._work = threading.Condition()       # pump wake-up
+        self._stop = threading.Event()
+        self._conns: list = []
+        self._conn_of: Dict[int, _Conn] = {}     # req_id -> owning connection
+        self._threads: list = []
+        self._listener: Optional[socket.socket] = None
+        self.sessions_served = 0
+        self.frames_in = 0
+        self.frames_out = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> Tuple[str, int]:
+        """Bind + spawn the accept and pump threads; returns (host, port)."""
+        ls = socket.create_server((self.host, self.port))
+        ls.settimeout(_ACCEPT_POLL_S)
+        self._listener = ls
+        self.port = ls.getsockname()[1]
+        for fn in (self._accept_loop, self._pump_loop):
+            t = threading.Thread(target=fn, daemon=True, name=fn.__name__)
+            t.start()
+            self._threads.append(t)
+        return self.host, self.port
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._work:
+            self._work.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        if self._listener is not None:
+            self._listener.close()
+        for conn in list(self._conns):
+            conn.sock.close()
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        self._stop.wait(timeout)
+
+    # ---------------------------------------------------------- accept loop
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sock, addr = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            conn = _Conn(
+                sock=sock, peer=f"{addr[0]}:{addr[1]}",
+                decoder=P.StreamDecoder(max_message_bytes=self.max_message_bytes),
+            )
+            self._conns.append(conn)
+            t = threading.Thread(
+                target=self._reader_loop, args=(conn,), daemon=True,
+                name=f"reader-{conn.peer}",
+            )
+            t.start()
+            self._threads.append(t)
+
+    # ---------------------------------------------------------- reader loop
+    def _reader_loop(self, conn: _Conn) -> None:
+        sock = conn.sock
+        sock.settimeout(_ACCEPT_POLL_S)
+        try:
+            while not self._stop.is_set() and conn.alive:
+                try:
+                    chunk = sock.recv(1 << 20)
+                except socket.timeout:
+                    continue
+                except OSError:
+                    break
+                if not chunk:
+                    break
+                for mtype, payload in conn.decoder.feed(chunk):
+                    if not self._dispatch(conn, mtype, payload):
+                        return
+        except ProtocolError as e:
+            conn.send_msg(P.MSG_ERROR,
+                          P.encode_error(P.ERR_PROTOCOL, 0, str(e)))
+        finally:
+            self._drop_conn(conn)
+
+    def _dispatch(self, conn: _Conn, mtype: int, payload: bytes) -> bool:
+        """Handle one message; returns False to end the connection."""
+        if mtype == P.MSG_HELLO:
+            return self._on_hello(conn, payload)
+        if not conn.hello_done:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_PROTOCOL, 0, "first message must be hello"))
+            return False
+        if mtype == P.MSG_FRAME:
+            self._on_frame(conn, payload)
+        elif mtype == P.MSG_OPEN:
+            self._on_open(conn, payload)
+        elif mtype == P.MSG_CLOSE:
+            self._close_session(conn, P.decode_u32(payload))
+        elif mtype == P.MSG_SNAPSHOT:
+            self._on_snapshot(conn, P.decode_u32(payload))
+        elif mtype == P.MSG_RESTORE:
+            self._on_restore(conn, payload)
+        elif mtype == P.MSG_BYE:
+            return False
+        else:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_PROTOCOL, 0, f"unroutable message type {mtype}"))
+            return False
+        return True
+
+    def _on_hello(self, conn: _Conn, payload: bytes) -> bool:
+        proto, frame_ver, d_model = P.decode_hello(payload)
+        ours = (P.PROTO_VERSION, FRAME_VERSION, self.server.d_model)
+        if (proto, frame_ver, d_model) != ours:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_VERSION, 0,
+                f"device speaks proto v{proto} / frame v{frame_ver} / "
+                f"d_model {d_model}; cloud speaks "
+                f"v{ours[0]}/v{ours[1]}/{ours[2]}"))
+            return False
+        conn.hello_done = True
+        conn.send_msg(P.MSG_HELLO_ACK, P.encode_hello(self.server.d_model))
+        return True
+
+    def _on_open(self, conn: _Conn, payload: bytes) -> None:
+        req_id, expected = P.decode_u32_pair(payload)
+        with self._lock:
+            ok = self.server.open_session(req_id, expected)
+            if ok:
+                self._conn_of[req_id] = conn
+                conn.open_reqs.add(req_id)
+                self.sessions_served += 1
+        if ok:
+            conn.send_msg(P.MSG_OPEN_OK, P.encode_u32(req_id))
+        else:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_REJECTED, req_id,
+                "no free slot / KV budget for the session"))
+
+    def _on_frame(self, conn: _Conn, payload: bytes) -> None:
+        self.frames_in += 1
+        engine = self.server.engine
+        # the expensive half of ingress — header parse + codec dequantize —
+        # runs here in the reader thread, overlapping the pump thread's
+        # engine step; only the queue append needs the lock
+        frame = Frame.from_bytes(payload)
+        if frame.kind == KIND_DEEP:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_PROTOCOL, frame.req_id,
+                "deep frames flow cloud->device"))
+            return
+        hidden = decode_hidden(frame, engine.d_model)
+        engine.wire_bytes_in += frame.nbytes()
+        job = EngineJob(frame.req_id, hidden, frame.offset, frame.kind_name,
+                        want_deep=frame.want_deep, ready_s=frame.t_send)
+        try:
+            with self._lock:
+                if frame.req_id not in self._conn_of:
+                    raise ProtocolError(
+                        f"frame for unopened session {frame.req_id}"
+                    )
+                engine.submit(job)
+            with self._work:
+                self._work.notify()
+        except EngineOverflowError as e:
+            # typed propagation: the device's recv for this req raises
+            # RemoteEngineError instead of waiting forever on a downlink
+            # that will never come (the engine already released the slot)
+            with self._lock:
+                self._conn_of.pop(e.req_id, None)
+                conn.open_reqs.discard(e.req_id)
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_OVERFLOW, e.req_id, str(e)))
+        except ProtocolError as e:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_INTERNAL, frame.req_id, str(e)))
+
+    def _on_snapshot(self, conn: _Conn, req_id: int) -> None:
+        with self._lock:
+            snap = self.server.snapshot_session(req_id)
+            snap_id = conn.next_snap_id
+            conn.next_snap_id += 1
+            conn.snapshots[snap_id] = snap
+        conn.send_msg(P.MSG_SNAPSHOT_OK, P.encode_u32_pair(req_id, snap_id))
+
+    def _on_restore(self, conn: _Conn, payload: bytes) -> None:
+        req_id, snap_id = P.decode_u32_pair(payload)
+        snap = conn.snapshots.get(snap_id)
+        if snap is None:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_INTERNAL, req_id, f"unknown snapshot {snap_id}"))
+            return
+        with self._lock:
+            self.server.restore_session(req_id, snap)
+        conn.send_msg(P.MSG_RESTORE_OK, P.encode_u32(req_id))
+
+    def _close_session(self, conn: _Conn, req_id: int) -> None:
+        with self._lock:
+            self.server.close_session(req_id)
+            self._conn_of.pop(req_id, None)
+            conn.open_reqs.discard(req_id)
+
+    def _drop_conn(self, conn: _Conn) -> None:
+        conn.alive = False
+        for rid in list(conn.open_reqs):
+            self._close_session(conn, rid)
+        conn.snapshots.clear()
+        if conn in self._conns:
+            self._conns.remove(conn)
+        conn.sock.close()
+
+    # ------------------------------------------------------------ pump loop
+    def _pump_loop(self) -> None:
+        engine = self.server.engine
+        while not self._stop.is_set():
+            with self._work:
+                if not engine.queue:
+                    self._work.wait(_PUMP_IDLE_S)
+            if not engine.queue:
+                continue
+            t0 = time.time()
+            with self._lock:
+                if not engine.queue:
+                    continue
+                results = engine.step()
+                info = engine.last_step_info
+                tokens = engine.batched_token_history[-1]
+            t1 = time.time()
+            if self.tracer.enabled:
+                # real wall-clock queue/cloud spans, per request, on the
+                # shared unix-epoch clock (frame t_send stamps are on it
+                # too, so queue_wait = device-send-complete -> step start)
+                self.tracer.add_span(
+                    "cloud_step", t0, t1, tid=TID_CLOUD,
+                    tokens=tokens, jobs=len(info),
+                )
+                for j in info:
+                    if 0.0 < j["ready_s"] <= t0:
+                        self.tracer.add_span(
+                            "queue_wait", j["ready_s"], t0, tid=j["req_id"],
+                            phase="queue", tokens=j["tokens"],
+                        )
+                    self.tracer.add_span(
+                        "cloud_step", t0, t1, tid=j["req_id"],
+                        phase="cloud_step", tokens=j["tokens"],
+                    )
+            for r in results:
+                if r.deep is None:
+                    continue
+                conn = self._conn_of.get(r.req_id)
+                if conn is None or not conn.alive:
+                    continue                       # device went away mid-step
+                data = self.server.engine.encode_result(r)   # outside lock
+                conn.send_msg(P.MSG_FRAME, stamp_t_send(data, time.time()))
+                self.frames_out += 1
+
+
+# ---------------------------------------------------------------------------
+# process entry point
+# ---------------------------------------------------------------------------
+
+
+def build_server(arch: str, *, slots: int, max_len: int,
+                 max_batch_tokens: Optional[int], wire_codec: str,
+                 seed: int = 0, tracer: Optional[Tracer] = None) -> CloudServer:
+    """Deterministic cloud-side model build: device processes that build
+    from the same (arch, seed) hold bit-identical submodel params, which
+    is what makes socket-vs-loopback token parity a meaningful check."""
+    import jax
+
+    from ..configs import get_config
+    from ..core import split_model
+    from ..models import Model
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    split = split_model(cfg, params)
+    return CloudServer(
+        split, n_slots=slots, max_len=max_len,
+        max_batch_tokens=max_batch_tokens, wire_codec=wire_codec,
+        tracer=tracer,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="repro.net cloud service process")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 binds an ephemeral port (printed on stdout)")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-batch-tokens", type=int, default=256)
+    ap.add_argument("--wire-codec", default="fp16")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="dump the service's Chrome trace on shutdown")
+    args = ap.parse_args(argv)
+
+    tracer = Tracer(clock=time.time) if args.trace_out else None
+    server = build_server(
+        args.arch, slots=args.slots, max_len=args.max_len,
+        max_batch_tokens=args.max_batch_tokens, wire_codec=args.wire_codec,
+        seed=args.seed, tracer=tracer,
+    )
+    svc = CloudService(server, host=args.host, port=args.port, tracer=tracer)
+    host, port = svc.start()
+    # the launcher greps for this exact line to learn the ephemeral port
+    print(f"NET_SERVE listening on {host}:{port}", flush=True)
+
+    import signal
+
+    def _term(signum, frame):
+        svc._stop.set()
+
+    signal.signal(signal.SIGTERM, _term)
+    signal.signal(signal.SIGINT, _term)
+    try:
+        while not svc._stop.is_set():
+            svc.wait(0.2)
+    finally:
+        svc.stop()
+        if tracer is not None:
+            tracer.dump(args.trace_out)
+        print(f"NET_SERVE done: {svc.sessions_served} sessions, "
+              f"{svc.frames_in} frames in / {svc.frames_out} out, "
+              f"{server.engine.steps} engine steps", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

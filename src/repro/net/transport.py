@@ -1,0 +1,322 @@
+"""SocketTransport: the device's real TCP handle on a remote cloud.
+
+Implements the :class:`repro.serving.api.Transport` protocol over the
+length-prefixed stream of ``repro.net.protocol``, so a ``DeviceClient``
+built on it is byte-for-byte the same client that runs over loopback —
+only the wire is real: connect retry, a hello/version handshake, bounded
+send/recv with :class:`~repro.net.errors.TransportTimeout`, and typed
+cloud errors surfacing as :class:`~repro.net.errors.RemoteEngineError`.
+
+The transport is single-threaded by design: every blocking wait drains
+the socket inline and demultiplexes what arrives — downlink frames into
+per-request inboxes (sessions interleaved through one connection never
+steal each other's frames), control replies (open/snapshot/restore acks)
+into a separate queue.  The clock is ``time.time()`` — the unix epoch is
+the one clock device and cloud processes on a host share, which is what
+makes cross-process trace merges and queue-delay attribution meaningful.
+"""
+from __future__ import annotations
+
+import socket
+import time
+from collections import deque
+from typing import Deque, Dict, Optional, Tuple
+
+from ..obs import NULL_TRACER, Tracer
+from ..serving.api import Transport
+from ..wire import frame_req_id, frame_t_send, stamp_t_send
+from . import protocol as P
+from .errors import (
+    ProtocolError,
+    RemoteEngineError,
+    TransportClosed,
+    TransportError,
+    TransportTimeout,
+)
+
+_POLL_S = 0.05           # socket timeout granularity while waiting
+
+
+class SocketTransport(Transport):
+    """TCP client transport speaking the ``repro.net`` stream protocol.
+
+    * **Connect retry**: the cloud process may still be binding when the
+      device comes up — ``connect_timeout_s`` bounds how long to keep
+      retrying refused connections.
+    * **Handshake**: first traffic is ``MSG_HELLO`` (protocol version,
+      wire-frame version, d_model); the service answers ``MSG_HELLO_ACK``
+      on exact match or a typed ``MSG_ERROR`` + close.  A d_model or
+      version skew therefore fails in milliseconds, not with a shape
+      error mid-prefill.
+    * **Timeouts**: ``recv_timeout_s``/``send_timeout_s`` default every
+      data-plane wait; per-call ``recv(req_id, timeout=...)`` overrides.
+    * **Typed errors**: a ``MSG_ERROR`` carrying a req_id parks in that
+      request's inbox and raises :class:`RemoteEngineError` out of the
+      waiting ``recv``/control call — the session unwinds cleanly (its
+      ``finally`` still sends ``MSG_CLOSE``) instead of hanging.
+    """
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        *,
+        d_model: int,
+        connect_timeout_s: float = 10.0,
+        retry_interval_s: float = 0.05,
+        send_timeout_s: float = 30.0,
+        recv_timeout_s: float = 60.0,
+        max_message_bytes: int = P.MAX_MESSAGE_BYTES,
+        tracer: Optional[Tracer] = None,
+    ):
+        self.host, self.port = host, port
+        self.d_model = d_model
+        self.send_timeout_s = send_timeout_s
+        self.recv_timeout_s = recv_timeout_s
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self._decoder = P.StreamDecoder(max_message_bytes=max_message_bytes)
+        self._inbox: Dict[int, Deque] = {}       # req_id -> frames / errors
+        self._control: Deque[Tuple[int, bytes]] = deque()
+        self._closed = False
+        self._sock = self._connect(connect_timeout_s, retry_interval_s)
+        self._handshake()
+
+    # ------------------------------------------------------------ connection
+    def _connect(self, timeout_s: float, interval_s: float) -> socket.socket:
+        deadline = time.monotonic() + timeout_s
+        last: Optional[Exception] = None
+        while time.monotonic() < deadline:
+            try:
+                sock = socket.create_connection(
+                    (self.host, self.port), timeout=max(timeout_s, 1.0)
+                )
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                return sock
+            except OSError as e:                  # refused: server still booting
+                last = e
+                time.sleep(interval_s)
+        raise TransportError(
+            f"could not connect to {self.host}:{self.port} within "
+            f"{timeout_s:.1f}s: {last}"
+        )
+
+    def _handshake(self) -> None:
+        self._send_msg(P.MSG_HELLO, P.encode_hello(self.d_model))
+        mtype, payload = self._wait_control(
+            P.MSG_HELLO_ACK, timeout=self.recv_timeout_s, op="hello"
+        )
+        proto, frame_ver, d_model = P.decode_hello(payload)
+        from ..wire import FRAME_VERSION
+
+        if (proto, frame_ver, d_model) != (P.PROTO_VERSION, FRAME_VERSION,
+                                           self.d_model):
+            raise ProtocolError(
+                f"hello mismatch: cloud speaks proto v{proto} / frame "
+                f"v{frame_ver} / d_model {d_model}, device speaks "
+                f"v{P.PROTO_VERSION}/v{FRAME_VERSION}/{self.d_model}"
+            )
+
+    def shutdown(self) -> None:
+        """Graceful goodbye: tell the service, then close the socket."""
+        if self._closed:
+            return
+        try:
+            self._send_msg(P.MSG_BYE)
+        except TransportError:
+            pass
+        self._closed = True
+        self._sock.close()
+
+    # ---------------------------------------------------------------- clock
+    def clock(self) -> float:
+        # unix epoch: the clock all processes on the host share, so frame
+        # t_send stamps and trace spans line up across process boundaries
+        return time.time()
+
+    # ------------------------------------------------------------ low level
+    def _send_msg(self, mtype: int, payload: bytes = b"") -> None:
+        if self._closed:
+            raise TransportClosed("transport already shut down")
+        data = P.encode_msg(mtype, payload)
+        self._sock.settimeout(self.send_timeout_s)
+        try:
+            self._sock.sendall(data)
+        except socket.timeout:
+            raise TransportTimeout("send", self.send_timeout_s) from None
+        except OSError as e:
+            raise TransportClosed(f"send failed: {e}") from e
+
+    def _route(self, mtype: int, payload: bytes) -> None:
+        if mtype == P.MSG_FRAME:
+            rid = frame_req_id(payload)
+            self.bytes_down += len(payload)
+            t_arrive = self.clock()
+            t_send = frame_t_send(payload)
+            if 0.0 < t_send <= t_arrive:
+                # sender stamped its send-complete time on our shared
+                # (unix-epoch) clock: the gap is the real downlink hop
+                self.tracer.add_span(
+                    "downlink", t_send, t_arrive, tid=rid, phase="downlink",
+                    nbytes=len(payload),
+                )
+            self._inbox.setdefault(rid, deque()).append(("frame", payload))
+        elif mtype == P.MSG_ERROR:
+            code, rid, msg = P.decode_error(payload)
+            if code in (P.ERR_VERSION, P.ERR_PROTOCOL) or rid == 0:
+                raise ProtocolError(
+                    f"cloud rejected the connection "
+                    f"({P.ERR_NAMES.get(code, code)}): {msg}"
+                )
+            self._inbox.setdefault(rid, deque()).append(
+                ("error", RemoteEngineError(code, rid, msg))
+            )
+        elif mtype == P.MSG_BYE:
+            self._closed = True
+            raise TransportClosed("cloud said goodbye")
+        else:
+            self._control.append((mtype, payload))
+
+    def _poll(self, timeout_s: float) -> None:
+        """Read once from the socket (bounded) and route what arrived."""
+        if self._closed:
+            raise TransportClosed("transport already shut down")
+        self._sock.settimeout(max(timeout_s, 0.0) or 1e-4)
+        try:
+            chunk = self._sock.recv(1 << 20)
+        except socket.timeout:
+            return
+        except OSError as e:
+            raise TransportClosed(f"recv failed: {e}") from e
+        if not chunk:
+            self._closed = True
+            raise TransportClosed("connection closed by the cloud")
+        for mtype, payload in self._decoder.feed(chunk):
+            self._route(mtype, payload)
+
+    def _wait_control(
+        self, expect: int, *, timeout: float, op: str
+    ) -> Tuple[int, bytes]:
+        deadline = time.monotonic() + timeout
+        while True:
+            for i, (mtype, payload) in enumerate(self._control):
+                if mtype == expect:
+                    del self._control[i]
+                    return mtype, payload
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportTimeout(op, timeout)
+            self._poll(min(remaining, _POLL_S))
+
+    def _raise_if_error(self, req_id: int) -> None:
+        q = self._inbox.get(req_id)
+        if q and q[0][0] == "error":
+            _, exc = q.popleft()
+            self._inbox.pop(req_id, None)
+            raise exc
+
+    # ----------------------------------------------------------- data plane
+    def send(self, data: bytes) -> None:
+        rid = frame_req_id(data)
+        self._raise_if_error(rid)            # fail fast: session already dead
+        t0 = self.clock()
+        self.bytes_up += len(data)
+        self._send_msg(P.MSG_FRAME, stamp_t_send(data, t0))
+        self.tracer.add_span(
+            "uplink", t0, self.clock(), tid=rid, phase="uplink",
+            nbytes=len(data),
+        )
+
+    def has_frame(self, req_id: int) -> bool:
+        """Non-blocking: drain the socket once, then check the inbox."""
+        q = self._inbox.get(req_id)
+        if not q:
+            self._poll(0.0)
+            q = self._inbox.get(req_id)
+        return bool(q) and q[0][0] == "frame"
+
+    def deliver(self, req_id: int) -> Optional[bytes]:
+        """Non-blocking receive (concurrent-scheduler hook)."""
+        self._raise_if_error(req_id)
+        q = self._inbox.get(req_id)
+        if q and q[0][0] == "frame":
+            return q.popleft()[1]
+        return None
+
+    def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
+        timeout = self.recv_timeout_s if timeout is None else timeout
+        deadline = time.monotonic() + timeout
+        t_wait = self.clock()
+        while True:
+            self._raise_if_error(req_id)
+            q = self._inbox.get(req_id)
+            if q and q[0][0] == "frame":
+                data = q.popleft()[1]
+                t_send = frame_t_send(data)
+                if 0.0 < t_send and t_wait < t_send:
+                    # everything between entering recv and the cloud's
+                    # send stamp is cloud residency (queue + step); the
+                    # downlink hop itself was spanned at arrival
+                    self.tracer.add_span(
+                        "cloud_wait", t_wait, t_send, tid=req_id,
+                        phase="cloud_step",
+                    )
+                return data
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportTimeout("recv", timeout, req_id)
+            self._poll(min(remaining, _POLL_S))
+
+    # -------------------------------------------------------- session plane
+    def open(self, req_id: int, expected_tokens: int) -> None:
+        self._send_msg(P.MSG_OPEN, P.encode_u32_pair(req_id, expected_tokens))
+        deadline = time.monotonic() + self.recv_timeout_s
+        while True:
+            self._raise_if_error(req_id)
+            for i, (mtype, payload) in enumerate(self._control):
+                if mtype == P.MSG_OPEN_OK and P.decode_u32(payload) == req_id:
+                    del self._control[i]
+                    return
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportTimeout("open", self.recv_timeout_s, req_id)
+            self._poll(min(remaining, _POLL_S))
+
+    def close(self, req_id: int) -> None:
+        self._inbox.pop(req_id, None)
+        if not self._closed:
+            self._send_msg(P.MSG_CLOSE, P.encode_u32(req_id))
+
+    # -------------------------------------------------------- control plane
+    def snapshot(self, req_id: int):
+        """Ask the cloud to snapshot the slot's recurrent state; returns an
+        opaque handle (the state itself never crosses the wire)."""
+        self._send_msg(P.MSG_SNAPSHOT, P.encode_u32(req_id))
+        deadline = time.monotonic() + self.recv_timeout_s
+        while True:
+            self._raise_if_error(req_id)
+            for i, (mtype, payload) in enumerate(self._control):
+                if mtype == P.MSG_SNAPSHOT_OK:
+                    rid, snap_id = P.decode_u32_pair(payload)
+                    if rid == req_id:
+                        del self._control[i]
+                        return snap_id
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportTimeout("snapshot", self.recv_timeout_s, req_id)
+            self._poll(min(remaining, _POLL_S))
+
+    def restore(self, req_id: int, snap) -> None:
+        self._send_msg(P.MSG_RESTORE, P.encode_u32_pair(req_id, int(snap)))
+        deadline = time.monotonic() + self.recv_timeout_s
+        while True:
+            self._raise_if_error(req_id)
+            for i, (mtype, payload) in enumerate(self._control):
+                if mtype == P.MSG_RESTORE_OK and P.decode_u32(payload) == req_id:
+                    del self._control[i]
+                    return
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportTimeout("restore", self.recv_timeout_s, req_id)
+            self._poll(min(remaining, _POLL_S))

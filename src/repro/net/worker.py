@@ -1,0 +1,183 @@
+"""Device worker: one real device process running DeviceClient over TCP.
+
+The worker builds the same split model as the cloud process (same arch +
+seed => bit-identical params), connects a :class:`SocketTransport`, and
+streams its share of the workload through ``DeviceClient.generate`` —
+every hidden-state hop a codec frame over a real socket.  TTFT/TBT are
+**measured wall clock** (``time.time()`` deltas around really-arriving
+frames), not delay-model output.
+
+    PYTHONPATH=src python -m repro.net.worker --host 127.0.0.1 --port 5555 \
+        --device-index 0 --requests 2 --out dev0.json
+
+Results land in ``--out`` as JSON (per-request token streams + timings) so
+the launcher can aggregate across device processes and assert token parity
+against an in-process loopback run; ``--trace-out`` dumps the device-side
+flight-recorder trace for the cross-process merge.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from ..obs import Tracer
+from ..serving.api import DeviceClient, Transport
+from ..serving.request import Request
+
+
+def device_specs(cfg, device_index: int, *, n_requests: int, prompt_len: int,
+                 new_tokens: int, seed: int = 0) -> List:
+    """The worker's deterministic slice of the workload.
+
+    Prompts derive only from (seed, device_index, request index) — the
+    loopback parity baseline regenerates the identical specs in-process
+    without any cross-process coordination.  req_ids are partitioned per
+    device (device k owns [1000k+1, 1000k+n]) so concurrent devices never
+    collide on the shared engine."""
+    from ..data import RequestSpec
+
+    rng = np.random.default_rng(10_000 * (seed + 1) + device_index)
+    return [
+        RequestSpec(
+            req_id=1000 * device_index + i + 1, device_id=device_index,
+            arrival_s=0.0, prompt_len=prompt_len, max_new_tokens=new_tokens,
+            prompt=rng.integers(3, cfg.vocab_size, prompt_len).astype(np.int32),
+        )
+        for i in range(n_requests)
+    ]
+
+
+def run_device_workload(client: DeviceClient, transport: Transport,
+                        specs) -> List[Request]:
+    """Stream every spec through the client; timestamps come from the
+    transport clock, so the same driver measures real wall time over
+    sockets and zero time over loopback."""
+    out: List[Request] = []
+    for spec in specs:
+        req = Request(
+            req_id=spec.req_id, device_id=spec.device_id,
+            arrival_s=transport.clock(), prompt_len=len(spec.prompt),
+            max_new_tokens=spec.max_new_tokens, prompt=spec.prompt,
+        )
+        for tok in client.generate(spec.prompt,
+                                   max_new_tokens=spec.max_new_tokens,
+                                   req_id=spec.req_id):
+            req.emit_tokens([tok], transport.clock())
+        req.done_s = transport.clock()
+        out.append(req)
+    return out
+
+
+def build_client(arch: str, transport: Transport, *, max_len: int,
+                 wire_codec: str, draft: bool, seed: int = 0,
+                 tracer: Optional[Tracer] = None) -> DeviceClient:
+    """Deterministic device-side build, mirroring the cloud's
+    ``build_server`` (same arch + seed => the same split params)."""
+    import jax
+
+    from ..configs import get_config
+    from ..core import init_adapter, split_model
+    from ..models import Model
+
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    split = split_model(cfg, params)
+    adapter = None
+    if draft:
+        adapter, _ = init_adapter(cfg, jax.random.PRNGKey(7))
+    return DeviceClient(
+        split, transport,
+        adapter_params=adapter, sd="draft" if draft else None,
+        max_len=max_len, wire_codec=wire_codec,
+        fixed_chunk=16, dynamic_chunks=False,
+        tracer=tracer,
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="repro.net device worker process")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--device-index", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--wire-codec", default="fp16")
+    ap.add_argument("--draft", action="store_true",
+                    help="threshold speculative decoding (adapter drafting)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--connect-timeout", type=float, default=60.0)
+    ap.add_argument("--recv-timeout", type=float, default=120.0,
+                    help="per-frame downlink deadline (covers cold-start "
+                         "jit compiles in the cloud process)")
+    ap.add_argument("--out", default=None, help="result JSON path")
+    ap.add_argument("--trace-out", default=None,
+                    help="dump this device's Chrome trace")
+    args = ap.parse_args(argv)
+
+    from ..configs import get_config
+    from .transport import SocketTransport
+
+    cfg = get_config(args.arch).reduced()
+    tracer = Tracer(clock=time.time) if args.trace_out else None
+    transport = SocketTransport(
+        args.host, args.port, d_model=cfg.d_model,
+        connect_timeout_s=args.connect_timeout,
+        recv_timeout_s=args.recv_timeout, tracer=tracer,
+    )
+    client = build_client(
+        args.arch, transport, max_len=args.max_len,
+        wire_codec=args.wire_codec, draft=args.draft, seed=args.seed,
+        tracer=tracer,
+    )
+    specs = device_specs(
+        cfg, args.device_index, n_requests=args.requests,
+        prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+        seed=args.seed,
+    )
+    t0 = time.time()
+    requests = run_device_workload(client, transport, specs)
+    wall_s = time.time() - t0
+    transport.shutdown()
+
+    result = {
+        "device_index": args.device_index,
+        "arch": args.arch,
+        "wire_codec": args.wire_codec,
+        "wall_s": wall_s,
+        "bytes_up": transport.bytes_up,
+        "bytes_down": transport.bytes_down,
+        "requests": [
+            {
+                "req_id": r.req_id,
+                "prompt_len": r.prompt_len,
+                "tokens": list(r.generated),
+                "ttft_s": r.ttft_s,
+                "tbt_s": r.tbt_s,
+                "token_times_s": list(r.token_times_s),
+            }
+            for r in requests
+        ],
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    if tracer is not None:
+        tracer.dump(args.trace_out)
+    ttfts = [r.ttft_s for r in requests if r.ttft_s is not None]
+    print(f"NET_WORKER {args.device_index} done: {len(requests)} requests, "
+          f"mean TTFT {1e3 * float(np.mean(ttfts)):.1f}ms, "
+          f"{transport.bytes_up} B up / {transport.bytes_down} B down",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,9 @@
 from .bridge import StateMonitorBridge, attach_monitor
 from .export import (
+    MERGE_PID_STRIDE,
     PROCESS_NAMES,
     TRACE_SCHEMA_VERSION,
+    merge_chrome_traces,
     to_chrome_trace,
     validate_chrome_trace,
 )
@@ -19,8 +21,8 @@ from .tracer import (
 
 __all__ = [
     "StateMonitorBridge", "attach_monitor",
-    "PROCESS_NAMES", "TRACE_SCHEMA_VERSION", "to_chrome_trace",
-    "validate_chrome_trace",
+    "MERGE_PID_STRIDE", "PROCESS_NAMES", "TRACE_SCHEMA_VERSION",
+    "merge_chrome_traces", "to_chrome_trace", "validate_chrome_trace",
     "NULL_TRACER", "PHASES", "PID_HOST", "PID_VIRTUAL", "TID_CLOUD",
     "Histogram", "NullTracer", "TraceEvent", "Tracer",
 ]

@@ -27,6 +27,11 @@ from .tracer import PID_HOST, PID_VIRTUAL, TID_CLOUD, Tracer
 
 TRACE_SCHEMA_VERSION = 1
 
+# pid spacing used by merge_chrome_traces: input k keeps its internal pid
+# layout shifted by k * stride, so `pid % MERGE_PID_STRIDE` recovers the
+# original pid role (virtual/host) in a merged trace
+MERGE_PID_STRIDE = 10
+
 PROCESS_NAMES = {
     PID_VIRTUAL: "fleet (virtual time)",
     PID_HOST: "engine host (wall time)",
@@ -95,6 +100,54 @@ def to_chrome_trace(tracer: Tracer) -> dict:
             "droppedEvents": tracer.dropped,
             "histograms": {k: h.summary() for k, h in tracer.hists.items()},
         },
+    }
+
+
+def merge_chrome_traces(objs, labels=None) -> dict:
+    """Merge per-process trace dumps into one Chrome trace.
+
+    Real multi-process serving writes one trace per process (cloud service,
+    each device worker), and every process uses the same small pid space
+    (:data:`PID_VIRTUAL`, :data:`PID_HOST`) — concatenating them naively
+    would interleave unrelated processes in one lane.  This remaps each
+    input's pids onto a disjoint range (input k keeps its internal pid
+    layout, shifted to ``k * stride``), prefixes process names with the
+    input's label, namespaces histograms, and sums dropped-event counts.
+
+    Every input must already pass :func:`validate_chrome_trace`; the merged
+    object does too (same ``schemaVersion`` — merging relabels, it does not
+    reshape events)."""
+    objs = list(objs)
+    if labels is None:
+        labels = [f"proc{k}" for k in range(len(objs))]
+    if len(labels) != len(objs):
+        raise ValueError(f"{len(objs)} traces but {len(labels)} labels")
+    stride = MERGE_PID_STRIDE
+    events: List[dict] = []
+    dropped = 0
+    hists: Dict[str, dict] = {}
+    for k, (obj, label) in enumerate(zip(objs, labels)):
+        validate_chrome_trace(obj)
+        base = k * stride
+        for ev in obj["traceEvents"]:
+            if ev["pid"] >= stride:
+                raise ValueError(
+                    f"trace {label!r} uses pid {ev['pid']} >= stride {stride}"
+                )
+            ev = dict(ev)
+            ev["pid"] += base
+            if ev.get("ph") == "M" and ev.get("name") == "process_name":
+                ev["args"] = {"name": f"{label}: {ev['args']['name']}"}
+            events.append(ev)
+        other = obj.get("otherData", {})
+        dropped += other.get("droppedEvents", 0)
+        for name, h in other.get("histograms", {}).items():
+            hists[f"{label}/{name}"] = h
+    return {
+        "schemaVersion": TRACE_SCHEMA_VERSION,
+        "displayTimeUnit": "ms",
+        "traceEvents": events,
+        "otherData": {"droppedEvents": dropped, "histograms": hists},
     }
 
 

@@ -75,6 +75,7 @@ from ..core.speculative import (
     snapshot_states,
 )
 from ..core.split import SplitModels
+from ..net.errors import TransportError, TransportTimeout
 from ..obs import NULL_TRACER, TID_CLOUD, Tracer, attach_monitor
 from ..wire import (
     Frame,
@@ -339,7 +340,13 @@ class Transport:
     def send(self, data: bytes) -> None:
         raise NotImplementedError
 
-    def recv(self, req_id: int) -> bytes:
+    def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
+        """Block until the request's next downlink frame arrives.
+
+        ``timeout`` bounds the wait in transport-clock seconds; on expiry
+        the transport raises :class:`~repro.net.errors.TransportTimeout`
+        (a :class:`~repro.net.errors.TransportError`) rather than hanging
+        the session.  ``None`` means the transport's own default."""
         raise NotImplementedError
 
     def snapshot(self, req_id: int):
@@ -412,13 +419,16 @@ class LoopbackTransport(Transport):
             )
         return data
 
-    def recv(self, req_id: int) -> bytes:
+    def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             data = self.deliver(req_id)
             if data is not None:
                 return data
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TransportTimeout("recv", timeout, req_id)
             if self._pump(req_id) == 0:
-                raise RuntimeError(
+                raise TransportError(
                     f"downlink starved: no frame in flight for request {req_id}"
                 )
 
@@ -1400,7 +1410,7 @@ class EngineRuntime:
         engine = self.server.engine
         if not engine.queue:
             starving = sorted(s.spec.req_id for s in waiting)
-            raise RuntimeError(
+            raise TransportError(
                 f"downlink starved: sessions {starving} wait on frames but "
                 "the engine queue is empty"
             )

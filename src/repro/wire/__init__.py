@@ -22,6 +22,7 @@ from .framing import (
     decode_hidden,
     encode_hidden,
     frame_req_id,
+    frame_t_send,
     iter_frames,
     stamp_t_send,
 )
@@ -31,6 +32,6 @@ __all__ = [
     "codec_by_id", "get_codec", "register_codec",
     "FLAG_WANT_DEEP", "FRAME_VERSION", "HEADER_BYTES", "KIND_DEEP",
     "KIND_IDS", "KIND_NAMES", "KIND_PREFILL", "KIND_VERIFY", "Frame",
-    "decode_hidden", "encode_hidden", "frame_req_id", "iter_frames",
-    "stamp_t_send",
+    "decode_hidden", "encode_hidden", "frame_req_id", "frame_t_send",
+    "iter_frames", "stamp_t_send",
 ]

@@ -144,6 +144,17 @@ def frame_req_id(data: bytes) -> int:
     return _REQ_ID.unpack_from(data, _REQ_ID_OFFSET)[0]
 
 
+def frame_t_send(data: bytes) -> float:
+    """Peek a serialized frame's ``t_send`` stamp without a full parse.
+
+    The socket transport reads the sender's send-complete stamp off
+    arriving downlink frames to draw real wall-clock downlink spans
+    (sender and receiver share the unix-epoch clock on one host)."""
+    if len(data) < HEADER_BYTES or data[:2] != MAGIC:
+        raise ValueError("not a frame")
+    return struct.unpack_from("<d", data, _T_SEND_OFFSET)[0]
+
+
 def iter_frames(stream: bytes) -> Iterator[Frame]:
     """Yield every frame in a concatenated byte stream (linear scan: only
     each frame's own payload is copied out)."""

@@ -1,0 +1,483 @@
+"""repro.net: stream protocol, socket transport, and the cloud service.
+
+Three layers of coverage, cheapest first:
+
+* pure protocol units (StreamDecoder over torn/interleaved/hostile byte
+  streams, message codecs) — no sockets, no JAX;
+* a stdlib *fake* cloud (threaded socketpair/TCP server speaking just the
+  control protocol) for handshake, timeout, and typed-error paths without
+  building a model;
+* one real in-process :class:`~repro.net.service.CloudService` wrapping a
+  reduced-model engine: token parity vs ``LoopbackTransport``, overflow
+  propagation, snapshot/restore over the wire.
+
+Hypothesis property tests for the framing live in ``test_properties.py``
+with the repo's other hypothesis suites (skipped when hypothesis is not
+installed); the deterministic edge cases here always run.
+"""
+import json
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.net import protocol as P
+from repro.net.errors import (
+    ProtocolError,
+    RemoteEngineError,
+    TransportClosed,
+    TransportError,
+    TransportTimeout,
+)
+from repro.net.protocol import StreamDecoder, iter_messages
+
+
+# ---------------------------------------------------------------------------
+# protocol units
+# ---------------------------------------------------------------------------
+
+
+def _sample_messages():
+    return [
+        (P.MSG_HELLO, P.encode_hello(256)),
+        (P.MSG_OPEN, P.encode_u32_pair(7, 40)),
+        (P.MSG_OPEN_OK, P.encode_u32(7)),
+        (P.MSG_FRAME, b"\x00" * 313),          # opaque payload to the envelope
+        (P.MSG_ERROR, P.encode_error(P.ERR_OVERFLOW, 7, "slot overflow")),
+        (P.MSG_BYE, b""),
+    ]
+
+
+def test_roundtrip_single_feed():
+    msgs = _sample_messages()
+    stream = b"".join(P.encode_msg(t, p) for t, p in msgs)
+    assert list(iter_messages(stream)) == msgs
+
+
+def test_roundtrip_every_split_point():
+    """Any torn read must reassemble: split the stream at every boundary."""
+    msgs = _sample_messages()[:3]
+    stream = b"".join(P.encode_msg(t, p) for t, p in msgs)
+    for cut in range(len(stream) + 1):
+        dec = StreamDecoder()
+        got = dec.feed(stream[:cut]) + dec.feed(stream[cut:])
+        assert got == msgs, f"split at {cut} broke reassembly"
+        assert dec.pending_bytes == 0
+
+
+def test_roundtrip_byte_at_a_time_and_coalesced():
+    msgs = _sample_messages()
+    stream = b"".join(P.encode_msg(t, p) for t, p in msgs)
+    dec = StreamDecoder()
+    got = []
+    for i in range(len(stream)):
+        got.extend(dec.feed(stream[i:i + 1]))
+    assert got == msgs
+    # and the same stream twice in one chunk: interleaved completion
+    dec = StreamDecoder()
+    assert dec.feed(stream + stream) == msgs + msgs
+
+
+def test_random_chunking_matches(rng):
+    msgs = _sample_messages() * 5
+    stream = b"".join(P.encode_msg(t, p) for t, p in msgs)
+    for _ in range(25):
+        cuts = np.sort(rng.integers(0, len(stream) + 1, size=9))
+        dec = StreamDecoder()
+        got = []
+        prev = 0
+        for c in list(cuts) + [len(stream)]:
+            got.extend(dec.feed(stream[prev:c]))
+            prev = c
+        assert got == msgs
+        assert dec.pending_bytes == 0
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ProtocolError, match="magic"):
+        StreamDecoder().feed(b"XX" + b"\x00" * 20)
+
+
+def test_unknown_type_rejected():
+    bad = struct.pack("<2sBI", P.MAGIC, 99, 0)
+    with pytest.raises(ProtocolError, match="unknown message type"):
+        StreamDecoder().feed(bad)
+
+
+def test_oversized_length_rejected_before_buffering():
+    dec = StreamDecoder(max_message_bytes=1024)
+    huge = struct.pack("<2sBI", P.MAGIC, P.MSG_FRAME, 1 << 30)
+    with pytest.raises(ProtocolError, match="exceeds"):
+        dec.feed(huge)          # rejected on the header alone, no payload read
+
+
+def test_trailing_partial_is_an_error_for_complete_streams():
+    stream = P.encode_msg(P.MSG_BYE) + b"HN"
+    with pytest.raises(ProtocolError, match="trailing"):
+        list(iter_messages(stream))
+
+
+def test_error_codec_roundtrip():
+    code, rid, msg = P.decode_error(P.encode_error(P.ERR_REJECTED, 41, "no slot"))
+    assert (code, rid, msg) == (P.ERR_REJECTED, 41, "no slot")
+    with pytest.raises(ProtocolError):
+        P.decode_error(b"\x00")
+    with pytest.raises(ProtocolError):
+        P.decode_hello(b"\x00\x01")
+
+
+def test_socketpair_roundtrip():
+    """The decoder against a real kernel byte stream, odd-sized writes."""
+    a, b = socket.socketpair()
+    try:
+        msgs = _sample_messages()
+        stream = b"".join(P.encode_msg(t, p) for t, p in msgs)
+        for i in range(0, len(stream), 13):
+            a.sendall(stream[i:i + 13])
+        a.shutdown(socket.SHUT_WR)
+        dec = StreamDecoder()
+        got = []
+        while True:
+            chunk = b.recv(4096)
+            if not chunk:
+                break
+            got.extend(dec.feed(chunk))
+        assert got == msgs
+        assert dec.pending_bytes == 0
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# fake cloud: handshake / timeout / typed errors, no JAX
+# ---------------------------------------------------------------------------
+
+
+class _FakeCloud:
+    """Minimal control-plane server: acks hello and opens, then follows a
+    script — deliver nothing (timeout tests) or inject typed errors."""
+
+    def __init__(self, *, d_model=64, accept_hello=True, error_after_open=None):
+        self.d_model = d_model
+        self.accept_hello = accept_hello
+        self.error_after_open = error_after_open     # (code, req_id, msg)
+        self._ls = socket.create_server(("127.0.0.1", 0))
+        self.port = self._ls.getsockname()[1]
+        self._t = threading.Thread(target=self._serve, daemon=True)
+        self._t.start()
+
+    def _serve(self):
+        sock, _ = self._ls.accept()
+        dec = StreamDecoder()
+        with sock:
+            while True:
+                try:
+                    chunk = sock.recv(1 << 16)
+                except OSError:
+                    return
+                if not chunk:
+                    return
+                for mtype, payload in dec.feed(chunk):
+                    if mtype == P.MSG_HELLO:
+                        if self.accept_hello:
+                            sock.sendall(P.encode_msg(
+                                P.MSG_HELLO_ACK, P.encode_hello(self.d_model)))
+                        else:
+                            sock.sendall(P.encode_msg(P.MSG_ERROR, P.encode_error(
+                                P.ERR_VERSION, 0, "speak something else")))
+                            return
+                    elif mtype == P.MSG_OPEN:
+                        rid, _ = P.decode_u32_pair(payload)
+                        sock.sendall(P.encode_msg(P.MSG_OPEN_OK, P.encode_u32(rid)))
+                        if self.error_after_open is not None:
+                            code, erid, msg = self.error_after_open
+                            sock.sendall(P.encode_msg(
+                                P.MSG_ERROR, P.encode_error(code, erid, msg)))
+                    elif mtype == P.MSG_BYE:
+                        return
+
+    def close(self):
+        self._ls.close()
+
+
+@pytest.fixture
+def make_transport():
+    from repro.net.transport import SocketTransport
+
+    made = []
+
+    def make(cloud, **kw):
+        kw.setdefault("d_model", cloud.d_model)
+        kw.setdefault("connect_timeout_s", 5.0)
+        t = SocketTransport("127.0.0.1", cloud.port, **kw)
+        made.append((t, cloud))
+        return t
+
+    yield make
+    for t, cloud in made:
+        t.shutdown()
+        cloud.close()
+
+
+def test_handshake_ok_and_open(make_transport):
+    t = make_transport(_FakeCloud())
+    t.open(5, 16)                                    # OPEN_OK consumed
+
+
+def test_hello_version_mismatch_raises(make_transport):
+    cloud = _FakeCloud(accept_hello=False)
+    with pytest.raises(ProtocolError, match="version|speak"):
+        make_transport(cloud)
+    cloud.close()
+
+
+def test_hello_d_model_mismatch_raises(make_transport):
+    cloud = _FakeCloud(d_model=64)
+    with pytest.raises(ProtocolError, match="mismatch"):
+        make_transport(cloud, d_model=128)
+    cloud.close()
+
+
+def test_connect_retry_gives_up():
+    from repro.net.transport import SocketTransport
+
+    # a bound-but-never-accepting port is hard to fake portably; a closed
+    # port exercises the same retry loop
+    ls = socket.create_server(("127.0.0.1", 0))
+    port = ls.getsockname()[1]
+    ls.close()
+    t0 = time.monotonic()
+    with pytest.raises(TransportError, match="could not connect"):
+        SocketTransport("127.0.0.1", port, d_model=8,
+                        connect_timeout_s=0.3, retry_interval_s=0.02)
+    assert time.monotonic() - t0 >= 0.25             # it really retried
+
+
+def test_recv_timeout_raises_transport_timeout(make_transport):
+    """Regression: a cloud that never delivers must raise, not hang."""
+    t = make_transport(_FakeCloud())
+    t.open(5, 16)
+    t0 = time.monotonic()
+    with pytest.raises(TransportTimeout) as ei:
+        t.recv(5, timeout=0.4)
+    assert 0.3 <= time.monotonic() - t0 < 5.0
+    assert ei.value.req_id == 5
+    assert isinstance(ei.value, TransportError)      # one except to rule them
+    assert isinstance(ei.value, TimeoutError)        # and stdlib-idiomatic
+
+
+def test_typed_error_frame_releases_waiting_recv(make_transport):
+    """An ERR_OVERFLOW for our req must surface as RemoteEngineError from
+    the blocking recv immediately — the session unwinds instead of timing
+    out."""
+    t = make_transport(_FakeCloud(
+        error_after_open=(P.ERR_OVERFLOW, 9, "job past max_len; slot released")))
+    t.open(9, 16)
+    with pytest.raises(RemoteEngineError) as ei:
+        t.recv(9, timeout=30.0)                      # returns in ms, not 30 s
+    assert ei.value.code == P.ERR_OVERFLOW
+    assert ei.value.req_id == 9
+    assert "slot released" in ei.value.remote_message
+
+
+def test_error_for_other_req_does_not_poison(make_transport):
+    t = make_transport(_FakeCloud(
+        error_after_open=(P.ERR_OVERFLOW, 777, "someone else")))
+    t.open(5, 16)
+    with pytest.raises(TransportTimeout):            # our req just times out
+        t.recv(5, timeout=0.3)
+    with pytest.raises(RemoteEngineError):           # theirs carries the error
+        t.recv(777, timeout=0.3)
+
+
+# ---------------------------------------------------------------------------
+# real engine behind a real socket (reduced model, in-process service)
+# ---------------------------------------------------------------------------
+
+ARCH = "internlm2-1.8b"
+
+
+@pytest.fixture(scope="module")
+def live_service():
+    from repro.net.service import CloudService
+    from repro.serving import CloudServer
+
+    cfg, _, params = reduced_model(ARCH)
+    from repro.core import split_model
+
+    split = split_model(cfg, params)
+    server = CloudServer(split, n_slots=4, max_len=64, max_batch_tokens=128,
+                         wire_codec="fp16")
+    svc = CloudService(server)
+    host, port = svc.start()
+    yield cfg, split, svc, host, port
+    svc.stop()
+
+
+def _make_client(cfg, split, transport):
+    from repro.serving import DeviceClient
+
+    return DeviceClient(split, transport, sd=None, max_len=64,
+                        wire_codec="fp16", fixed_chunk=16,
+                        dynamic_chunks=False)
+
+
+def test_socket_token_parity_with_loopback(live_service):
+    from repro.net.transport import SocketTransport
+    from repro.serving import CloudServer, DeviceClient, LoopbackTransport
+
+    cfg, split, svc, host, port = live_service
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(3, cfg.vocab_size, n).astype(np.int32)
+               for n in (11, 23)]
+
+    t = SocketTransport(host, port, d_model=cfg.d_model, recv_timeout_s=60.0)
+    client = _make_client(cfg, split, t)
+    over_socket = [list(client.generate(p, max_new_tokens=3, req_id=i + 1))
+                   for i, p in enumerate(prompts)]
+    t.shutdown()
+
+    server2 = CloudServer(split, n_slots=4, max_len=64, max_batch_tokens=128,
+                          wire_codec="fp16")
+    lt = LoopbackTransport(server2)
+    client2 = _make_client(cfg, split, lt)
+    over_loopback = [list(client2.generate(p, max_new_tokens=3, req_id=i + 1))
+                     for i, p in enumerate(prompts)]
+
+    assert over_socket == over_loopback
+    assert all(len(toks) == 3 for toks in over_socket)
+
+
+def test_engine_overflow_crosses_the_wire(live_service):
+    """A frame past the slot's max_len must come back as a typed
+    RemoteEngineError (ERR_OVERFLOW), and the slot must be reusable."""
+    from repro.net.transport import SocketTransport
+    from repro.wire import encode_hidden, get_codec
+
+    cfg, split, svc, host, port = live_service
+    t = SocketTransport(host, port, d_model=cfg.d_model, recv_timeout_s=30.0)
+    t.open(901, 8)
+    bad = encode_hidden(get_codec("fp16"),
+                        np.zeros((8, cfg.d_model), np.float32),
+                        req_id=901, offset=1000, kind="prefill")  # 1000 >> 64
+    t.send(bad)
+    with pytest.raises(RemoteEngineError) as ei:
+        t.recv(901, timeout=30.0)
+    assert ei.value.code == P.ERR_OVERFLOW
+    # the engine released the slot: a fresh session still opens + serves
+    t.open(902, 8)
+    t.close(902)
+    t.shutdown()
+
+
+def test_snapshot_restore_over_wire(live_service):
+    from repro.net.transport import SocketTransport
+    from repro.wire import encode_hidden, get_codec
+
+    cfg, split, svc, host, port = live_service
+    t = SocketTransport(host, port, d_model=cfg.d_model, recv_timeout_s=60.0)
+    t.open(911, 8)
+    frame = encode_hidden(get_codec("fp16"),
+                          np.zeros((4, cfg.d_model), np.float32),
+                          req_id=911, offset=0, kind="prefill")
+    t.send(frame)
+    t.recv(911, timeout=60.0)
+    snap = t.snapshot(911)
+    assert isinstance(snap, int)
+    t.restore(911, snap)                             # RESTORE_OK or raise
+    t.close(911)
+    t.shutdown()
+
+
+def test_loopback_starvation_is_transport_error(live_service):
+    """Regression for the recv error-path satellite: the loopback transport
+    now raises TransportError (still a RuntimeError) on starvation, and
+    honors the new timeout parameter."""
+    from repro.serving import CloudServer, LoopbackTransport
+
+    cfg, split, _, _, _ = live_service
+    server = CloudServer(split, n_slots=2, max_len=64, wire_codec="fp16")
+    lt = LoopbackTransport(server)
+    with pytest.raises(TransportError, match="starved"):
+        lt.recv(1)
+    with pytest.raises(RuntimeError):                # old except clauses hold
+        lt.recv(1)
+    with pytest.raises(TransportTimeout):
+        lt.recv(1, timeout=0.0)                      # deadline beats the pump
+
+
+# ---------------------------------------------------------------------------
+# trace merging (the multi-process observability contract)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trace(offset=0.0):
+    from repro.obs import Tracer, to_chrome_trace
+
+    tr = Tracer()
+    tr.add_span("uplink", offset + 0.0, offset + 0.1, tid=1, phase="uplink")
+    tr.add_span("cloud_step", offset + 0.1, offset + 0.3, tid=1,
+                phase="cloud_step")
+    return to_chrome_trace(tr)
+
+
+def test_merge_chrome_traces_disjoint_pids():
+    from repro.obs import MERGE_PID_STRIDE, merge_chrome_traces, \
+        validate_chrome_trace
+
+    merged = merge_chrome_traces(
+        [_tiny_trace(), _tiny_trace(5.0), _tiny_trace(9.0)],
+        ["cloud", "device0", "device1"],
+    )
+    validate_chrome_trace(merged)
+    pids = {ev["pid"] for ev in merged["traceEvents"]}
+    blocks = {pid // MERGE_PID_STRIDE for pid in pids}
+    assert blocks == {0, 1, 2}                       # one pid block per input
+    names = [ev["args"]["name"] for ev in merged["traceEvents"]
+             if ev.get("ph") == "M" and ev.get("name") == "process_name"]
+    assert any(n.startswith("cloud:") for n in names)
+    assert any(n.startswith("device1:") for n in names)
+
+
+def test_merge_rejects_label_mismatch_and_pid_overflow():
+    from repro.obs import MERGE_PID_STRIDE, merge_chrome_traces
+
+    with pytest.raises(ValueError, match="labels"):
+        merge_chrome_traces([_tiny_trace()], ["a", "b"])
+    big = _tiny_trace()
+    for ev in big["traceEvents"]:
+        ev["pid"] = MERGE_PID_STRIDE + 1
+    with pytest.raises(ValueError, match="stride"):
+        merge_chrome_traces([_tiny_trace(), big], ["ok", "bad"])
+
+
+def test_render_trace_merges_files(tmp_path):
+    import subprocess
+    import sys
+    import os
+
+    paths = []
+    for i, obj in enumerate([_tiny_trace(), _tiny_trace(3.0)]):
+        p = tmp_path / f"t{i}.json"
+        p.write_text(json.dumps(obj))
+        paths.append(str(p))
+    out = tmp_path / "merged.json"
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "render_trace.py"),
+         *paths, "--merge-out", str(out)],
+        capture_output=True, text=True, env=env,
+    )
+    assert res.returncode == 0, res.stderr
+    from repro.obs import validate_chrome_trace
+
+    validate_chrome_trace(json.loads(out.read_text()))
+    assert "phase attribution" in res.stdout

@@ -12,6 +12,7 @@ from repro.core.monitor import Ewma
 from repro.core.speculative import accept_greedy_rows
 from repro.data import BPETokenizer, ByteTokenizer
 from repro.models.layers import attend
+from repro.net.protocol import MSG_NAMES
 
 SETTINGS = dict(max_examples=40, deadline=None)
 
@@ -110,3 +111,58 @@ def test_attend_causality(t, s_extra, window, seed):
     noise = jax.random.normal(ks[3], (B, S, nkv, hd)) * fut[None, :, None, None]
     out2 = attend(q, k + noise, v + 3 * noise, q_pos=q_pos, k_pos=k_pos, window=window)
     assert float(jnp.max(jnp.abs(out - out2))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# repro.net stream framing: any message sequence survives any chunking
+# ---------------------------------------------------------------------------
+
+_NET_MSG = st.tuples(st.sampled_from(sorted(MSG_NAMES)),
+                     st.binary(max_size=200))
+
+
+@given(
+    msgs=st.lists(_NET_MSG, max_size=12),
+    cuts=st.lists(st.integers(0, 10_000), max_size=16),
+)
+@settings(**SETTINGS)
+def test_net_stream_decoder_reassembles_any_chunking(msgs, cuts):
+    from repro.net.protocol import StreamDecoder, encode_msg
+
+    stream = b"".join(encode_msg(t, p) for t, p in msgs)
+    points = sorted(c % (len(stream) + 1) for c in cuts)
+    dec = StreamDecoder()
+    got, prev = [], 0
+    for c in points + [len(stream)]:
+        got.extend(dec.feed(stream[prev:c]))
+        prev = c
+    assert got == msgs
+    assert dec.pending_bytes == 0
+    assert dec.messages_in == len(msgs)
+
+
+@given(prefix=st.binary(min_size=7, max_size=40))
+@settings(**SETTINGS)
+def test_net_stream_decoder_rejects_desync(prefix):
+    from repro.net.protocol import MAGIC, StreamDecoder
+    from repro.net.errors import ProtocolError
+
+    hypothesis.assume(prefix[:2] != MAGIC)
+    with pytest.raises(ProtocolError):
+        StreamDecoder().feed(prefix)
+
+
+@given(length=st.integers(1, (1 << 32) - 1), cap=st.integers(8, 1 << 20))
+@settings(**SETTINGS)
+def test_net_stream_decoder_oversize_rejected_on_header(length, cap):
+    import struct
+
+    from repro.net.protocol import MAGIC, MSG_FRAME, StreamDecoder
+    from repro.net.errors import ProtocolError
+
+    hypothesis.assume(length > cap)
+    dec = StreamDecoder(max_message_bytes=cap)
+    header = struct.pack("<2sBI", MAGIC, MSG_FRAME, length)
+    with pytest.raises(ProtocolError):
+        dec.feed(header)              # no payload bytes ever buffered
+    assert dec.pending_bytes <= len(header)
