@@ -184,11 +184,22 @@ def _net_bench(args) -> None:
     max_len = 128
     codec = "fp16"
 
+    chaos_schedule = None
+    if args.net_chaos_drops:
+        from repro.net import seeded_schedule
+
+        # seeded drops against the first n_devices connections: the run
+        # must still produce loopback-identical tokens, now via resume
+        chaos_schedule = seeded_schedule(
+            args.net_chaos_seed, connections=n_devices,
+            drops_per_conn=args.net_chaos_drops,
+        )
+
     result = run_cluster(
         args.arch, n_devices=n_devices,
         requests_per_device=requests_per_device, prompt_len=prompt_len,
         new_tokens=new_tokens, max_len=max_len, wire_codec=codec,
-        seed=0, workdir=args.net_workdir,
+        seed=0, workdir=args.net_workdir, chaos_schedule=chaos_schedule,
     )
     socket_tokens = {
         r["req_id"]: list(r["tokens"])
@@ -233,6 +244,19 @@ def _net_bench(args) -> None:
     emit("net_tcp_token_parity", 0.0,
          f"{len(socket_tokens)}/{len(socket_tokens)} requests byte-identical "
          f"to loopback;loopback_wall_s={loop_wall_s:.1f}")
+    if chaos_schedule is not None:
+        if result["reconnects"] < 1:
+            raise SystemExit(
+                f"chaos schedule injected {len(result['chaos_faults'])} "
+                f"faults but no device ever reconnected"
+            )
+        emit(
+            "net_tcp_reconnects", float(result["reconnects"]),
+            f"faults={len(result['chaos_faults'])};"
+            f"replayed_frames={result['replayed_frames']};"
+            f"requests_degraded={result['requests_degraded']};"
+            f"parity_held_under_faults=True",
+        )
     with open(args.json, "w") as f:
         json.dump({
             "mode": "net-tcp",
@@ -244,6 +268,10 @@ def _net_bench(args) -> None:
             "bytes_up": result["bytes_up"],
             "bytes_down": result["bytes_down"],
             "token_parity": True,
+            "reconnects": result["reconnects"],
+            "replayed_frames": result["replayed_frames"],
+            "requests_degraded": result["requests_degraded"],
+            "chaos_faults": len(result["chaos_faults"]),
             "merged_trace": result["merged_trace"],
         }, f, indent=1)
 
@@ -261,6 +289,12 @@ def main(argv=None) -> None:
                     help="benchmark the real socket path (1 cloud + 2 "
                          "device processes) against in-process loopback "
                          "with token parity asserted")
+    ap.add_argument("--net-chaos-drops", type=int, default=0,
+                    help="with --net: seeded connection drops per device "
+                         "connection (0 = fault-free); token parity is "
+                         "still asserted — the run must survive via resume")
+    ap.add_argument("--net-chaos-seed", type=int, default=7,
+                    help="seed for the chaos drop schedule")
     ap.add_argument("--net-workdir", default=None,
                     help="with --net: directory for per-process logs and "
                          "the merged Chrome trace")

@@ -41,6 +41,12 @@ def _spans(obj):
             yield ev
 
 
+def _instants(obj):
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "i":
+            yield ev
+
+
 def _is_virtual(pid: int) -> bool:
     # merged traces shift each input's pids by k * MERGE_PID_STRIDE while
     # preserving the pid role within each block
@@ -124,6 +130,15 @@ def main(argv=None) -> int:
                      else f"req {ev['tid']}" if _is_virtual(ev["pid"])
                      else "host")
             print(f"  {ev['dur'] / 1e3:10.2f} ms  {ev['name']:<16s} {where}")
+
+    # fault-tolerance instants: the flight recorder marks every injected
+    # fault, reconnect, resume, busy push-back, detach and grace expiry
+    instants = defaultdict(int)
+    for ev in _instants(obj):
+        instants[ev["name"]] += 1
+    if instants:
+        print("\ninstant events: " + ", ".join(
+            f"{n} x{instants[n]}" for n in sorted(instants)))
 
     hists = other.get("histograms", {})
     for name, h in hists.items():

@@ -6,25 +6,31 @@ stream protocol carrying ``repro.wire`` frames plus typed control
 messages, a :class:`SocketTransport` device endpoint, a
 :class:`CloudService` server process, and a launcher that spawns
 1 cloud + N device processes on localhost.  TTFT/TBT measured through
-this path are wall-clock, not simulated.
+this path are wall-clock, not simulated.  Faults are first-class:
+sessions resume over reconnect (``MSG_RESUME`` watermarks), retry
+behavior is a typed :class:`~repro.net.policy.RetryPolicy` /
+:class:`~repro.net.policy.Deadline`, and :mod:`repro.net.chaos`
+injects deterministic connection drops / frame faults for tests.
 
-Import layout: :mod:`~repro.net.errors` and :mod:`~repro.net.protocol`
-are dependency-free and imported eagerly (``repro.serving.api`` pulls
-the error hierarchy in for its timeout path).  Everything that imports
-``repro.serving`` back — transport, service, worker, launcher — is
-exposed lazily via module ``__getattr__`` to keep the import graph
-acyclic.
+Import layout: :mod:`~repro.net.errors`, :mod:`~repro.net.policy` and
+:mod:`~repro.net.protocol` are dependency-free and imported eagerly
+(``repro.serving.api`` pulls the error hierarchy and policies in).
+Everything that imports ``repro.serving`` back — transport, service,
+chaos, worker, launcher — is exposed lazily via module ``__getattr__``
+to keep the import graph acyclic.
 """
 from __future__ import annotations
 
-from . import errors, protocol
+from . import errors, policy, protocol
 from .errors import (
     ProtocolError,
     RemoteEngineError,
+    SessionLostError,
     TransportClosed,
     TransportError,
     TransportTimeout,
 )
+from .policy import Deadline, RetryPolicy
 from .protocol import PROTO_VERSION, StreamDecoder
 
 _LAZY = {
@@ -37,12 +43,17 @@ _LAZY = {
     "device_specs": ("worker", "device_specs"),
     "run_device_workload": ("worker", "run_device_workload"),
     "build_client": ("worker", "build_client"),
+    "ChaosProxy": ("chaos", "ChaosProxy"),
+    "FaultEvent": ("chaos", "FaultEvent"),
+    "FaultyTransport": ("chaos", "FaultyTransport"),
+    "seeded_schedule": ("chaos", "seeded_schedule"),
 }
 
 __all__ = [
-    "errors", "protocol",
-    "ProtocolError", "RemoteEngineError", "TransportClosed",
-    "TransportError", "TransportTimeout",
+    "errors", "policy", "protocol",
+    "ProtocolError", "RemoteEngineError", "SessionLostError",
+    "TransportClosed", "TransportError", "TransportTimeout",
+    "Deadline", "RetryPolicy",
     "PROTO_VERSION", "StreamDecoder",
     *_LAZY,
 ]

@@ -1,0 +1,362 @@
+"""Deterministic fault injection for the device-cloud network path.
+
+Two layers, both driven by explicit, seedable fault schedules so a
+"flaky network" run is exactly reproducible:
+
+* :class:`ChaosProxy` — a TCP proxy that sits between device processes
+  and a :class:`~repro.net.service.CloudService`.  It speaks the
+  ``repro.net.protocol`` stream (decode → re-encode canonically per
+  message), counts ``MSG_FRAME`` hops per direction per connection, and
+  applies :class:`FaultEvent`\\ s at exact hop indices: **drop** the
+  connection, **delay** a frame, **duplicate** it, or **truncate** it
+  mid-message and kill the link.  Because faults land on message
+  boundaries counted from connection start, the same schedule produces
+  the same failure at the same point in the same request every run.
+* :class:`FaultyTransport` — an in-process wrapper around any
+  :class:`~repro.serving.api.Transport` that raises
+  :class:`~repro.net.errors.TransportClosed` / sleeps at exact
+  ``send``/``recv`` call counts, for unit tests that don't want sockets.
+
+Every applied fault is appended to ``.faults`` (and emitted as a
+``fault`` instant through the tracer), so tests can assert the schedule
+actually fired — a chaos test that silently injects nothing is worse
+than no test.
+
+Standalone (the CI chaos-smoke job uses this through the launcher)::
+
+    python -m repro.net.chaos --upstream 127.0.0.1:5555 --port 0 \\
+        --seed 7 --drops 2
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import socket
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..obs import NULL_TRACER, Tracer
+from . import protocol as P
+from .errors import TransportClosed
+
+_ACCEPT_POLL_S = 0.2
+
+KIND_DROP = "drop"
+KIND_DELAY = "delay"
+KIND_DUP = "dup"
+KIND_TRUNCATE = "truncate"
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fires on the ``at_hop``-th ``MSG_FRAME``
+    (0-based) flowing in ``direction`` ("up" = device→cloud)."""
+
+    kind: str                    # drop | delay | dup | truncate
+    at_hop: int
+    direction: str = "up"
+    delay_s: float = 0.0
+
+
+def seeded_schedule(
+    seed: int,
+    *,
+    connections: int = 1,
+    drops_per_conn: int = 1,
+    max_hop: int = 3,
+    direction: str = "up",
+) -> Dict[int, List[FaultEvent]]:
+    """Deterministic drop schedule: for each *initial* connection index,
+    ``drops_per_conn`` connection drops at seeded hops in [0, max_hop].
+
+    Only the first ``connections`` connection indices get faults —
+    reconnects land on later indices and pass clean, so a finite retry
+    policy always converges."""
+    rng = random.Random(seed)
+    schedule: Dict[int, List[FaultEvent]] = {}
+    for conn in range(connections):
+        hops = sorted(rng.randint(0, max_hop) for _ in range(drops_per_conn))
+        # a dropped connection restarts hop counting on reconnect; only
+        # the first scheduled drop per connection index can ever fire,
+        # so spread multi-drop schedules across the reconnect indices
+        events = [FaultEvent(KIND_DROP, at_hop=h, direction=direction)
+                  for h in hops[:1]]
+        for extra, h in enumerate(hops[1:]):
+            idx = conn + connections * (extra + 1)
+            schedule.setdefault(idx, []).append(
+                FaultEvent(KIND_DROP, at_hop=h, direction=direction))
+        schedule.setdefault(conn, []).extend(events)
+    return schedule
+
+
+class _Pair:
+    """A proxied connection: client socket + upstream socket + state."""
+
+    def __init__(self, index: int, client: socket.socket,
+                 upstream: socket.socket, events: List[FaultEvent]):
+        self.index = index
+        self.client = client
+        self.upstream = upstream
+        self.events = list(events)
+        self.lock = threading.Lock()
+        self.closed = False
+
+    def kill(self) -> None:
+        with self.lock:
+            if self.closed:
+                return
+            self.closed = True
+        for sock in (self.client, self.upstream):
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+
+class ChaosProxy:
+    """Fault-injecting TCP proxy in front of a ``CloudService``.
+
+    ``schedule`` maps *connection index* (0-based, in accept order) to
+    the fault events for that connection.  Reconnects get fresh indices,
+    so a schedule like ``{0: [drop@hop 1]}`` drops the first connection
+    once and lets the resumed connection run clean."""
+
+    def __init__(
+        self,
+        upstream_host: str,
+        upstream_port: int,
+        *,
+        schedule: Optional[Dict[int, List[FaultEvent]]] = None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        tracer: Optional[Tracer] = None,
+    ):
+        self.upstream_host = upstream_host
+        self.upstream_port = upstream_port
+        self.schedule = {k: list(v) for k, v in (schedule or {}).items()}
+        self.host = host
+        self.port = port
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.faults: List[dict] = []     # applied events, in firing order
+        self.connections = 0
+        self._listener: Optional[socket.socket] = None
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._pairs: List[_Pair] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> Tuple[str, int]:
+        ls = socket.create_server((self.host, self.port))
+        ls.settimeout(_ACCEPT_POLL_S)
+        self._listener = ls
+        self.port = ls.getsockname()[1]
+        t = threading.Thread(target=self._accept_loop, daemon=True,
+                             name="chaos-accept")
+        t.start()
+        self._threads.append(t)
+        return self.host, self.port
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._listener is not None:
+            self._listener.close()
+        for pair in list(self._pairs):
+            pair.kill()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    # ----------------------------------------------------------- forwarding
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                client, _addr = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            index = self.connections
+            self.connections += 1
+            try:
+                upstream = socket.create_connection(
+                    (self.upstream_host, self.upstream_port), timeout=10.0
+                )
+            except OSError:
+                client.close()
+                continue
+            for sock in (client, upstream):
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            pair = _Pair(index, client, upstream,
+                         self.schedule.get(index, []))
+            with self._lock:
+                self._pairs.append(pair)
+            for direction, src, dst in (("up", client, upstream),
+                                        ("down", upstream, client)):
+                t = threading.Thread(
+                    target=self._forward, args=(pair, direction, src, dst),
+                    daemon=True, name=f"chaos-{index}-{direction}",
+                )
+                t.start()
+                self._threads.append(t)
+
+    def _forward(self, pair: _Pair, direction: str,
+                 src: socket.socket, dst: socket.socket) -> None:
+        decoder = P.StreamDecoder()
+        hop = 0
+        src.settimeout(_ACCEPT_POLL_S)
+        try:
+            while not self._stop.is_set() and not pair.closed:
+                try:
+                    chunk = src.recv(1 << 20)
+                except socket.timeout:
+                    continue
+                except OSError:
+                    break
+                if not chunk:
+                    break
+                for mtype, payload in decoder.feed(chunk):
+                    data = P.encode_msg(mtype, payload)
+                    if mtype != P.MSG_FRAME:
+                        dst.sendall(data)
+                        continue
+                    event = self._pop_event(pair, direction, hop)
+                    hop += 1
+                    if event is None:
+                        dst.sendall(data)
+                    elif event.kind == KIND_DELAY:
+                        time.sleep(event.delay_s)
+                        dst.sendall(data)
+                    elif event.kind == KIND_DUP:
+                        dst.sendall(data)
+                        dst.sendall(data)
+                    elif event.kind == KIND_TRUNCATE:
+                        dst.sendall(data[: max(len(data) // 2, 1)])
+                        pair.kill()
+                        return
+                    elif event.kind == KIND_DROP:
+                        pair.kill()
+                        return
+                    else:
+                        dst.sendall(data)
+        except OSError:
+            pass
+        finally:
+            pair.kill()
+
+    def _pop_event(self, pair: _Pair, direction: str,
+                   hop: int) -> Optional[FaultEvent]:
+        with pair.lock:
+            for i, ev in enumerate(pair.events):
+                if ev.direction == direction and ev.at_hop == hop:
+                    del pair.events[i]
+                    break
+            else:
+                return None
+        record = {"conn": pair.index, "direction": direction,
+                  "hop": hop, "kind": ev.kind}
+        self.faults.append(record)
+        self.tracer.instant(
+            "fault", time.time(), tid=0,
+            kind=ev.kind, conn=pair.index, hop=hop, direction=direction,
+        )
+        return ev
+
+
+class FaultyTransport:
+    """In-process fault wrapper around any Transport: raises
+    :class:`TransportClosed` / sleeps at exact ``send``/``recv`` call
+    indices (0-based), delegating everything else to the wrapped
+    transport.  For unit tests that want deterministic faults without
+    sockets."""
+
+    def __init__(
+        self,
+        inner,
+        *,
+        fail_sends: Tuple[int, ...] = (),
+        fail_recvs: Tuple[int, ...] = (),
+        delay_sends: Optional[Dict[int, float]] = None,
+        delay_recvs: Optional[Dict[int, float]] = None,
+    ):
+        self.inner = inner
+        self.fail_sends = set(fail_sends)
+        self.fail_recvs = set(fail_recvs)
+        self.delay_sends = dict(delay_sends or {})
+        self.delay_recvs = dict(delay_recvs or {})
+        self.sends = 0
+        self.recvs = 0
+        self.faults: List[dict] = []
+
+    def send(self, data: bytes) -> None:
+        idx = self.sends
+        self.sends += 1
+        if idx in self.delay_sends:
+            time.sleep(self.delay_sends[idx])
+        if idx in self.fail_sends:
+            self.faults.append({"op": "send", "index": idx, "kind": KIND_DROP})
+            raise TransportClosed(f"injected fault at send #{idx}")
+        self.inner.send(data)
+
+    def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
+        idx = self.recvs
+        self.recvs += 1
+        if idx in self.delay_recvs:
+            time.sleep(self.delay_recvs[idx])
+        if idx in self.fail_recvs:
+            self.faults.append({"op": "recv", "index": idx, "kind": KIND_DROP})
+            raise TransportClosed(f"injected fault at recv #{idx}")
+        return self.inner.recv(req_id, timeout)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+# ---------------------------------------------------------------------------
+# process entry point (standalone proxy)
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fault-injecting TCP proxy for repro.net")
+    ap.add_argument("--upstream", required=True, help="HOST:PORT of the cloud")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--connections", type=int, default=1,
+                    help="how many initial connections get faults")
+    ap.add_argument("--drops", type=int, default=1,
+                    help="connection drops per faulted connection")
+    ap.add_argument("--max-hop", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    up_host, up_port = args.upstream.rsplit(":", 1)
+    schedule = seeded_schedule(
+        args.seed, connections=args.connections,
+        drops_per_conn=args.drops, max_hop=args.max_hop,
+    )
+    proxy = ChaosProxy(up_host, int(up_port), schedule=schedule,
+                       host=args.host, port=args.port)
+    host, port = proxy.start()
+    # same grep-able shape as the service's listen line
+    print(f"NET_CHAOS listening on {host}:{port}", flush=True)
+    try:
+        while True:
+            time.sleep(0.5)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        proxy.stop()
+        print(f"NET_CHAOS done: {len(proxy.faults)} faults over "
+              f"{proxy.connections} connections", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

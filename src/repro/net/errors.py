@@ -20,6 +20,11 @@ All errors subclass :class:`RuntimeError`: historical callers that caught
   ``ERR_OVERFLOW`` when the engine raised ``EngineOverflowError``),
   the owning ``req_id`` and the remote message.  Raising it out of
   ``recv`` releases the waiting session instead of blocking forever.
+* :class:`SessionLostError` — recovery gave up on a *session* (resume
+  after the cloud's grace period expired, retries exhausted, or a
+  watermark the cloud could no longer honor): the request surfaces a
+  typed error carrying the tokens generated so far instead of hanging
+  or silently truncating.
 """
 from __future__ import annotations
 
@@ -64,3 +69,18 @@ class RemoteEngineError(TransportError):
         super().__init__(
             f"cloud error (code {code}) for request {req_id}: {message}"
         )
+
+
+class SessionLostError(TransportError):
+    """The session could not be recovered: resume was refused (grace
+    expired, epoch mismatch, unreplayable watermark) or reconnects ran
+    out.  Graceful degradation: ``partial_tokens`` carries whatever the
+    request had already generated, so callers get a truncated-but-typed
+    result instead of a hang."""
+
+    def __init__(self, req_id: int, reason: str,
+                 partial_tokens: "list | None" = None):
+        self.req_id = req_id
+        self.reason = reason
+        self.partial_tokens = list(partial_tokens) if partial_tokens else []
+        super().__init__(f"session {req_id} lost: {reason}")

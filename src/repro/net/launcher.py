@@ -187,6 +187,43 @@ def merge_traces(workdir: Path, n_devices: int) -> Optional[Path]:
     return out
 
 
+def _wait_workers(workers: List[subprocess.Popen], cloud: CloudProcess,
+                  timeout_s: float, wd: Path,
+                  poll_s: float = 0.2) -> None:
+    """Wait for every worker, polling the cloud the whole time.
+
+    A dead cloud used to mean every worker blocked until its own recv
+    timeout while ``run_cluster`` sat in ``wait()`` — now it raises
+    immediately (the caller's ``finally`` kills the orphans)."""
+    deadline = time.monotonic() + timeout_s
+    pending = set(range(len(workers)))
+    while pending:
+        if cloud.proc.poll() is not None:
+            raise TransportError(
+                f"cloud service exited with {cloud.proc.returncode} while "
+                f"{len(pending)} device worker(s) were still running; "
+                f"log tail:\n{_tail(cloud.log_path)}"
+            )
+        for i in sorted(pending):
+            rc = workers[i].poll()
+            if rc is None:
+                continue
+            pending.discard(i)
+            if rc != 0:
+                raise TransportError(
+                    f"device worker {i} exited with {rc}; log "
+                    f"tail:\n{_tail(wd / f'dev{i}.log')}"
+                )
+        if pending and time.monotonic() > deadline:
+            raise TransportError(
+                f"device worker(s) {sorted(pending)} still running after "
+                f"{timeout_s:.0f}s; log tail:\n"
+                f"{_tail(wd / f'dev{sorted(pending)[0]}.log')}"
+            )
+        if pending:
+            time.sleep(poll_s)
+
+
 def run_cluster(
     arch: str = "internlm2-1.8b",
     *,
@@ -203,11 +240,17 @@ def run_cluster(
     workdir: Optional[str] = None,
     trace: bool = True,
     worker_timeout_s: float = 600.0,
+    chaos_schedule: Optional[dict] = None,
 ) -> dict:
     """The whole topology, end to end; returns aggregated measurements.
 
     Raises :class:`TransportError` with the failing process's log tail if
-    the cloud never listens or any worker exits non-zero."""
+    the cloud never listens, dies mid-run (workers are then killed, not
+    orphaned), or any worker exits non-zero.
+
+    ``chaos_schedule`` (connection index -> ``[FaultEvent, ...]``, see
+    :mod:`repro.net.chaos`) interposes a fault-injecting proxy between
+    the workers and the cloud; the result gains ``chaos_faults``."""
     if workdir is None:
         import tempfile
 
@@ -220,34 +263,29 @@ def run_cluster(
         max_batch_tokens=max_batch_tokens, wire_codec=wire_codec,
         seed=seed, trace=trace,
     )
+    proxy = None
+    connect_host, connect_port = cloud.host, cloud.port
+    if chaos_schedule is not None:
+        from .chaos import ChaosProxy
+
+        proxy = ChaosProxy(cloud.host, cloud.port, schedule=chaos_schedule)
+        connect_host, connect_port = proxy.start()
     workers: List[subprocess.Popen] = []
     try:
         for i in range(n_devices):
             workers.append(spawn_worker(
-                i, host=cloud.host, port=cloud.port, arch=arch, workdir=wd,
-                requests=requests_per_device, prompt_len=prompt_len,
-                new_tokens=new_tokens, max_len=max_len,
+                i, host=connect_host, port=connect_port, arch=arch,
+                workdir=wd, requests=requests_per_device,
+                prompt_len=prompt_len, new_tokens=new_tokens, max_len=max_len,
                 wire_codec=wire_codec, draft=draft, seed=seed, trace=trace,
             ))
-        deadline = time.monotonic() + worker_timeout_s
-        for i, w in enumerate(workers):
-            try:
-                w.wait(timeout=max(deadline - time.monotonic(), 1.0))
-            except subprocess.TimeoutExpired:
-                raise TransportError(
-                    f"device worker {i} still running after "
-                    f"{worker_timeout_s:.0f}s; log tail:\n"
-                    f"{_tail(wd / f'dev{i}.log')}"
-                )
-            if w.returncode != 0:
-                raise TransportError(
-                    f"device worker {i} exited with {w.returncode}; log "
-                    f"tail:\n{_tail(wd / f'dev{i}.log')}"
-                )
+        _wait_workers(workers, cloud, worker_timeout_s, wd)
     finally:
         for w in workers:
             if w.poll() is None:
                 w.kill()
+        if proxy is not None:
+            proxy.stop()
         cloud_rc = cloud.terminate()
 
     results = []
@@ -272,6 +310,11 @@ def run_cluster(
         "tbt_mean_ms": float(tbts.mean() * 1e3) if len(tbts) else None,
         "bytes_up": sum(r["bytes_up"] for r in results),
         "bytes_down": sum(r["bytes_down"] for r in results),
+        "reconnects": sum(r.get("reconnects", 0) for r in results),
+        "replayed_frames": sum(r.get("replayed_frames", 0) for r in results),
+        "requests_degraded": sum(r.get("requests_degraded", 0)
+                                 for r in results),
+        "chaos_faults": list(proxy.faults) if proxy is not None else [],
         "merged_trace": str(merged) if merged else None,
         "cloud_log": str(cloud.log_path),
     }

@@ -1,0 +1,98 @@
+"""Typed retry/deadline policies for the device-cloud network path.
+
+Deliberately import-free (stdlib only), like :mod:`repro.net.errors`:
+``repro.serving.api`` embeds these in :class:`ServeConfig` and the socket
+transport consumes them, so the module must sit below both.
+
+* :class:`RetryPolicy` — how hard to fight a dead connection: capped
+  exponential backoff with deterministic, seedable jitter.  Attempt 0
+  waits ``base_s``; each further attempt multiplies by ``multiplier``
+  up to ``max_backoff_s``; ±``jitter`` fraction of the wait is drawn
+  from the policy's own :class:`random.Random` so two runs with the
+  same seed reconnect on the same schedule (the chaos tests rely on
+  this).
+* :class:`Deadline` — how long an operation may take *end to end*.
+  ``op_timeout_s`` bounds one data-plane wait (a single ``recv`` /
+  control round trip) **inclusive of any reconnects it absorbs**: the
+  per-attempt transport timeout no longer resets the clock, it composes
+  with the deadline.  ``total_s`` (optional) bounds a whole session.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff + jitter for connection recovery.
+
+    ``max_attempts`` bounds reconnect attempts per disconnect event; a
+    value of 0 disables recovery entirely (the first drop is fatal, the
+    pre-fault behavior)."""
+
+    max_attempts: int = 6
+    base_s: float = 0.05
+    multiplier: float = 2.0
+    max_backoff_s: float = 2.0
+    jitter: float = 0.1            # fraction of the backoff, drawn ±
+    seed: int = 0
+
+    def rng(self) -> random.Random:
+        return random.Random(self.seed)
+
+    def backoff_s(self, attempt: int, rng: Optional[random.Random] = None) -> float:
+        """Wait before reconnect ``attempt`` (0-based), jitter applied."""
+        base = min(self.base_s * (self.multiplier ** attempt), self.max_backoff_s)
+        if self.jitter <= 0.0:
+            return base
+        r = rng if rng is not None else self.rng()
+        return max(base + base * self.jitter * (2.0 * r.random() - 1.0), 0.0)
+
+    def delays(self, rng: Optional[random.Random] = None) -> Iterator[float]:
+        """The full backoff schedule, one delay per allowed attempt."""
+        r = rng if rng is not None else self.rng()
+        for attempt in range(self.max_attempts):
+            yield self.backoff_s(attempt, r)
+
+
+@dataclass(frozen=True)
+class Deadline:
+    """End-to-end time budgets that compose with transport timeouts.
+
+    ``op_timeout_s`` is the default bound on one blocking wait (recv /
+    open / snapshot / restore), measured across reconnects; ``total_s``
+    optionally bounds a whole session's wall clock.  ``None`` means
+    unbounded."""
+
+    op_timeout_s: Optional[float] = 60.0
+    total_s: Optional[float] = None
+
+    def start(self) -> "DeadlineClock":
+        return DeadlineClock(self)
+
+    def op_deadline(self, now: float, timeout: Optional[float] = None) -> float:
+        """Absolute monotonic deadline for one op starting at ``now``.
+
+        ``timeout`` (a per-call override) wins over ``op_timeout_s``;
+        both ``None`` means effectively unbounded."""
+        t = timeout if timeout is not None else self.op_timeout_s
+        return now + (t if t is not None else float("inf"))
+
+
+class DeadlineClock:
+    """A started :class:`Deadline`: tracks the session's total budget."""
+
+    def __init__(self, deadline: Deadline):
+        self.deadline = deadline
+        self.started_at = time.monotonic()
+
+    def total_remaining_s(self) -> float:
+        if self.deadline.total_s is None:
+            return float("inf")
+        return self.deadline.total_s - (time.monotonic() - self.started_at)
+
+    def expired(self) -> bool:
+        return self.total_remaining_s() <= 0.0

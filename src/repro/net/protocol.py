@@ -14,16 +14,32 @@ as data instead of a hung socket).  Every message on the stream is::
 Message types and payloads:
 
 ========================  =====================================================
-``MSG_HELLO``             ``<HHI`` proto version, wire-frame version, d_model —
+``MSG_HELLO``             ``<HHII`` proto version, wire-frame version, d_model,
+                          epoch (0 from the device; ignored by the cloud) —
                           first message on every connection, device -> cloud
-``MSG_HELLO_ACK``         same struct, the cloud's values (negotiation is
-                          exact-match: any mismatch answers ``MSG_ERROR`` +
+``MSG_HELLO_ACK``         same struct, the cloud's values; the epoch field
+                          carries the *connection epoch* the cloud just
+                          assigned (negotiation is exact-match on the first
+                          three fields: any mismatch answers ``MSG_ERROR`` +
                           close instead)
+``MSG_RESUME``            ``<II`` prev_epoch, n, then n x ``<III`` (req_id,
+                          up_sent, down_recv) — sent right after the hello on
+                          a *re*connect: re-attach the listed sessions,
+                          presenting the epoch they were last owned under and
+                          each session's frame-sequence watermarks
+``MSG_RESUME_OK``         ``<I`` n, then n x ``<II`` (req_id, up_recv) — the
+                          sessions that survived (cloud-side uplink watermark
+                          tells the device which frames to replay); sessions
+                          missing from the reply are lost
 ``MSG_OPEN``              ``<II`` req_id, expected_tokens — open a session
 ``MSG_OPEN_OK``           ``<I`` req_id — slot + KV admitted
 ``MSG_CLOSE``             ``<I`` req_id — release the session (no reply)
-``MSG_FRAME``             raw ``repro.wire`` frame bytes (uplink chunk frames
-                          device -> cloud, deep-state frames cloud -> device)
+``MSG_FRAME``             ``<I`` session-scoped frame sequence number, then
+                          raw ``repro.wire`` frame bytes (uplink chunk frames
+                          device -> cloud, deep-state frames cloud -> device).
+                          The receiver drops seqs below its watermark
+                          (replay/duplication-safe) and treats gaps as
+                          protocol errors
 ``MSG_SNAPSHOT``          ``<I`` req_id — snapshot the slot's recurrent state
 ``MSG_SNAPSHOT_OK``       ``<II`` req_id, snap_id — handle to a cloud-held
                           snapshot (state never crosses the wire)
@@ -32,6 +48,11 @@ Message types and payloads:
 ``MSG_ERROR``             ``<HI`` ERR_* code, req_id (0 = connection-wide),
                           then a utf-8 message
 ``MSG_BYE``               empty — graceful device goodbye
+``MSG_PING``              empty — liveness probe (either direction)
+``MSG_PONG``              empty — probe answer
+``MSG_BUSY``              ``<I`` inflight count — connection-level push-back:
+                          the cloud's reader stopped draining this connection
+``MSG_READY``             empty — push-back released
 ========================  =====================================================
 
 :class:`StreamDecoder` is the receive half: feed it arbitrary byte chunks
@@ -47,7 +68,9 @@ from typing import Iterator, List, Tuple
 
 from .errors import ProtocolError
 
-PROTO_VERSION = 1
+# v2: resume handshake (epoch in hello, MSG_RESUME/-OK), per-session frame
+# sequence numbers on MSG_FRAME, liveness probes, connection push-back
+PROTO_VERSION = 2
 MAGIC = b"HN"
 
 MSG_HELLO = 1
@@ -62,6 +85,12 @@ MSG_RESTORE = 9
 MSG_RESTORE_OK = 10
 MSG_ERROR = 11
 MSG_BYE = 12
+MSG_RESUME = 13
+MSG_RESUME_OK = 14
+MSG_PING = 15
+MSG_PONG = 16
+MSG_BUSY = 17
+MSG_READY = 18
 
 MSG_NAMES = {
     MSG_HELLO: "hello", MSG_HELLO_ACK: "hello_ack",
@@ -70,6 +99,9 @@ MSG_NAMES = {
     MSG_SNAPSHOT: "snapshot", MSG_SNAPSHOT_OK: "snapshot_ok",
     MSG_RESTORE: "restore", MSG_RESTORE_OK: "restore_ok",
     MSG_ERROR: "error", MSG_BYE: "bye",
+    MSG_RESUME: "resume", MSG_RESUME_OK: "resume_ok",
+    MSG_PING: "ping", MSG_PONG: "pong",
+    MSG_BUSY: "busy", MSG_READY: "ready",
 }
 
 # typed error codes carried by MSG_ERROR
@@ -78,20 +110,25 @@ ERR_REJECTED = 2         # open refused: no slot / KV budget
 ERR_OVERFLOW = 3         # EngineOverflowError: job past the slot's max_len
 ERR_PROTOCOL = 4         # malformed message (the connection is dropped)
 ERR_INTERNAL = 5         # unexpected cloud-side failure
+ERR_BUSY = 6             # connection storm: accept cap reached, try later
 
 ERR_NAMES = {
     ERR_VERSION: "version", ERR_REJECTED: "rejected",
     ERR_OVERFLOW: "overflow", ERR_PROTOCOL: "protocol",
-    ERR_INTERNAL: "internal",
+    ERR_INTERNAL: "internal", ERR_BUSY: "busy",
 }
 
 _HEADER = struct.Struct("<2sBI")
 HEADER_BYTES = _HEADER.size
 
-_HELLO = struct.Struct("<HHI")           # proto_version, frame_version, d_model
+# proto_version, frame_version, d_model, connection epoch
+_HELLO = struct.Struct("<HHII")
 _U32 = struct.Struct("<I")
 _U32_PAIR = struct.Struct("<II")
 _ERROR = struct.Struct("<HI")            # code, req_id
+_RESUME_HDR = struct.Struct("<II")       # prev_epoch, n_sessions
+_RESUME_SESS = struct.Struct("<III")     # req_id, up_sent, down_recv
+_RESUME_OK_SESS = struct.Struct("<II")   # req_id, up_recv
 
 # Bounds buffering on a desynced or hostile stream.  The largest honest
 # message is a deep-state frame: fp32 x d_model 8192 x a 4096-token chunk
@@ -107,15 +144,15 @@ def encode_msg(mtype: int, payload: bytes = b"") -> bytes:
 
 
 def encode_hello(d_model: int, *, proto_version: int = PROTO_VERSION,
-                 frame_version: int | None = None) -> bytes:
+                 frame_version: int | None = None, epoch: int = 0) -> bytes:
     from ..wire import FRAME_VERSION
 
     fv = FRAME_VERSION if frame_version is None else frame_version
-    return _HELLO.pack(proto_version, fv, d_model)
+    return _HELLO.pack(proto_version, fv, d_model, epoch)
 
 
-def decode_hello(payload: bytes) -> Tuple[int, int, int]:
-    """-> (proto_version, frame_version, d_model)."""
+def decode_hello(payload: bytes) -> Tuple[int, int, int, int]:
+    """-> (proto_version, frame_version, d_model, epoch)."""
     if len(payload) != _HELLO.size:
         raise ProtocolError(f"hello payload is {len(payload)} B, "
                             f"expected {_HELLO.size}")
@@ -152,6 +189,72 @@ def decode_error(payload: bytes) -> Tuple[int, int, str]:
         raise ProtocolError("truncated error payload")
     code, req_id = _ERROR.unpack_from(payload)
     return code, req_id, payload[_ERROR.size:].decode("utf-8", "replace")
+
+
+# --------------------------------------------------------------- resume / seq
+
+
+def encode_resume(prev_epoch: int,
+                  sessions: List[Tuple[int, int, int]]) -> bytes:
+    """``MSG_RESUME``: sessions is [(req_id, up_sent, down_recv), ...] —
+    the device's per-session frame-sequence watermarks."""
+    out = _RESUME_HDR.pack(prev_epoch, len(sessions))
+    for rid, up_sent, down_recv in sessions:
+        out += _RESUME_SESS.pack(rid, up_sent, down_recv)
+    return out
+
+
+def decode_resume(payload: bytes) -> Tuple[int, List[Tuple[int, int, int]]]:
+    """-> (prev_epoch, [(req_id, up_sent, down_recv), ...])."""
+    if len(payload) < _RESUME_HDR.size:
+        raise ProtocolError("truncated resume payload")
+    prev_epoch, n = _RESUME_HDR.unpack_from(payload)
+    want = _RESUME_HDR.size + n * _RESUME_SESS.size
+    if len(payload) != want:
+        raise ProtocolError(
+            f"resume payload is {len(payload)} B, expected {want} for "
+            f"{n} sessions")
+    sessions = [
+        _RESUME_SESS.unpack_from(payload, _RESUME_HDR.size + i * _RESUME_SESS.size)
+        for i in range(n)
+    ]
+    return prev_epoch, sessions
+
+
+def encode_resume_ok(sessions: List[Tuple[int, int]]) -> bytes:
+    """``MSG_RESUME_OK``: sessions is [(req_id, up_recv), ...] — the
+    cloud's uplink watermark per surviving session."""
+    out = _U32.pack(len(sessions))
+    for rid, up_recv in sessions:
+        out += _RESUME_OK_SESS.pack(rid, up_recv)
+    return out
+
+
+def decode_resume_ok(payload: bytes) -> List[Tuple[int, int]]:
+    if len(payload) < _U32.size:
+        raise ProtocolError("truncated resume_ok payload")
+    n = _U32.unpack_from(payload)[0]
+    want = _U32.size + n * _RESUME_OK_SESS.size
+    if len(payload) != want:
+        raise ProtocolError(
+            f"resume_ok payload is {len(payload)} B, expected {want} for "
+            f"{n} sessions")
+    return [
+        _RESUME_OK_SESS.unpack_from(payload, _U32.size + i * _RESUME_OK_SESS.size)
+        for i in range(n)
+    ]
+
+
+def encode_seq_frame(seq: int, frame_bytes: bytes) -> bytes:
+    """``MSG_FRAME`` payload: session-scoped sequence number + frame."""
+    return _U32.pack(seq) + frame_bytes
+
+
+def decode_seq_frame(payload: bytes) -> Tuple[int, bytes]:
+    """-> (seq, frame_bytes)."""
+    if len(payload) < _U32.size:
+        raise ProtocolError("truncated frame payload (missing seq)")
+    return _U32.unpack_from(payload)[0], payload[_U32.size:]
 
 
 class StreamDecoder:

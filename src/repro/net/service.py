@@ -20,6 +20,32 @@ drive it over TCP:
   becomes a ``MSG_ERROR``/``ERR_OVERFLOW`` for the owning request instead
   of a poisoned in-process exception nobody on the device can see.
 
+Fault tolerance (protocol v2)
+-----------------------------
+Sessions now outlive connections.  Each accepted connection gets a
+monotonic **epoch** (returned in the hello ack); each session records the
+epoch of the connection that owns it.  When a connection dies *without* a
+``MSG_BYE``, its sessions **detach** instead of closing: the engine slot
+— KV cache, SSM state, cloud-resident snapshots — stays alive for
+``grace_s`` seconds.  A reconnecting device presents its previous epoch
+and per-session watermarks in ``MSG_RESUME``; the service re-attaches
+every session no other live connection owns, answers with its own
+``up_expected`` watermark per session (so the device replays exactly the
+uplink frames the service never processed), and re-sends any buffered
+downlink frames past the device's watermark.  Sequence numbers on every
+``MSG_FRAME`` make replays idempotent: a duplicate uplink is dropped by
+watermark before it can double-step the engine.  Sessions that stay
+detached past the grace period are closed; a later resume simply omits
+them, which the device surfaces as ``SessionLostError``.
+
+Backpressure: each connection has a bounded in-flight frame window
+(``max_inflight_frames``).  At the bound the reader sends ``MSG_BUSY``
+and *stops draining its socket* — TCP flow control pushes back to the
+device — until the pump works the window down and sends ``MSG_READY``.
+The accept path is bounded too (``max_connections``): excess connections
+get a typed ``ERR_BUSY`` and an immediate close, so a connection storm
+cannot exhaust reader threads.
+
 Run it as a process::
 
     PYTHONPATH=src python -m repro.net.service --arch internlm2-1.8b --port 0
@@ -37,8 +63,9 @@ import argparse
 import socket
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 from ..obs import NULL_TRACER, TID_CLOUD, Tracer
 from ..serving.api import CloudServer
@@ -49,6 +76,7 @@ from .errors import ProtocolError
 
 _ACCEPT_POLL_S = 0.2
 _PUMP_IDLE_S = 0.05
+_DOWN_BUFFER_FRAMES = 4      # strict request/response: >1 outstanding is rare
 
 
 @dataclass
@@ -60,9 +88,11 @@ class _Conn:
     decoder: P.StreamDecoder
     send_lock: threading.Lock = field(default_factory=threading.Lock)
     hello_done: bool = False
+    epoch: int = 0
     open_reqs: set = field(default_factory=set)
-    snapshots: Dict[int, object] = field(default_factory=dict)
-    next_snap_id: int = 1
+    inflight: int = 0            # frames submitted, not yet stepped
+    busy_sent: bool = False
+    said_bye: bool = False
     alive: bool = True
 
     def send_msg(self, mtype: int, payload: bytes = b"") -> None:
@@ -74,6 +104,23 @@ class _Conn:
             self.alive = False
 
 
+@dataclass
+class _NetSession:
+    """Cloud-side wire state for one session; outlives its connection."""
+
+    req_id: int
+    epoch: int                               # epoch of the owning connection
+    conn: Optional[_Conn]
+    up_expected: int = 0                     # next uplink seq to process
+    down_seq: int = 0                        # next downlink seq to assign
+    down_buffer: Deque[Tuple[int, bytes]] = field(
+        default_factory=lambda: deque(maxlen=_DOWN_BUFFER_FRAMES)
+    )
+    snapshots: Dict[int, object] = field(default_factory=dict)
+    next_snap_id: int = 1
+    detached_at: Optional[float] = None      # monotonic; None while attached
+
+
 class CloudService:
     """TCP server process around a frame-speaking :class:`CloudServer`.
 
@@ -82,6 +129,11 @@ class CloudService:
     of engine state (submit, step, session lifecycle, snapshot/restore);
     codec encode/decode run outside it.  JAX stays effectively
     single-threaded: only the pump thread ever calls ``engine.step``.
+
+    ``grace_s`` bounds how long a detached session keeps its slot;
+    ``max_inflight_frames`` bounds each connection's in-flight window
+    (0 disables backpressure); ``max_connections`` caps the accept path
+    (0 = unbounded).
     """
 
     def __init__(
@@ -90,24 +142,36 @@ class CloudService:
         *,
         host: str = "127.0.0.1",
         port: int = 0,
+        grace_s: float = 30.0,
+        max_inflight_frames: int = 32,
+        max_connections: int = 64,
         max_message_bytes: int = P.MAX_MESSAGE_BYTES,
         tracer: Optional[Tracer] = None,
     ):
         self.server = server
         self.host = host
         self.port = port
+        self.grace_s = grace_s
+        self.max_inflight_frames = max_inflight_frames
+        self.max_connections = max_connections
         self.max_message_bytes = max_message_bytes
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._lock = threading.Lock()            # engine + session state
-        self._work = threading.Condition()       # pump wake-up
+        self._work = threading.Condition()       # pump + backpressure wake-up
         self._stop = threading.Event()
         self._conns: list = []
-        self._conn_of: Dict[int, _Conn] = {}     # req_id -> owning connection
+        self._sessions: Dict[int, _NetSession] = {}
+        self._next_epoch = 1
         self._threads: list = []
         self._listener: Optional[socket.socket] = None
         self.sessions_served = 0
         self.frames_in = 0
         self.frames_out = 0
+        self.resumes_served = 0
+        self.frames_replayed = 0
+        self.dup_frames_dropped = 0
+        self.conns_rejected = 0
+        self.detaches = 0
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> Tuple[str, int]:
@@ -145,6 +209,13 @@ class CloudService:
                 continue
             except OSError:
                 break
+            if self.max_connections and len(self._conns) >= self.max_connections:
+                # typed rejection: the device sees a connection-wide
+                # ERR_BUSY instead of a silent close mid-handshake
+                self.conns_rejected += 1
+                threading.Thread(target=self._reject_conn, args=(sock,),
+                                 daemon=True).start()
+                continue
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             conn = _Conn(
                 sock=sock, peer=f"{addr[0]}:{addr[1]}",
@@ -157,6 +228,23 @@ class CloudService:
             )
             t.start()
             self._threads.append(t)
+
+    def _reject_conn(self, sock: socket.socket) -> None:
+        """Send the typed rejection, then linger-drain before closing so
+        the error reaches the device instead of being flushed by an RST
+        (the device's hello is usually still in flight)."""
+        try:
+            sock.sendall(P.encode_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_BUSY, 0,
+                f"connection limit ({self.max_connections}) reached")))
+            sock.shutdown(socket.SHUT_WR)
+            sock.settimeout(1.0)
+            while sock.recv(1 << 12):
+                pass
+        except OSError:
+            pass
+        finally:
+            sock.close()
 
     # ---------------------------------------------------------- reader loop
     def _reader_loop(self, conn: _Conn) -> None:
@@ -179,7 +267,10 @@ class CloudService:
             conn.send_msg(P.MSG_ERROR,
                           P.encode_error(P.ERR_PROTOCOL, 0, str(e)))
         finally:
-            self._drop_conn(conn)
+            # BYE is the device saying "done": close its sessions.  Any
+            # other exit (EOF, reset, protocol garbage from a faulty link)
+            # detaches them instead — the device may be about to resume.
+            self._drop_conn(conn, graceful=conn.said_bye)
 
     def _dispatch(self, conn: _Conn, mtype: int, payload: bytes) -> bool:
         """Handle one message; returns False to end the connection."""
@@ -195,11 +286,16 @@ class CloudService:
             self._on_open(conn, payload)
         elif mtype == P.MSG_CLOSE:
             self._close_session(conn, P.decode_u32(payload))
+        elif mtype == P.MSG_RESUME:
+            self._on_resume(conn, payload)
+        elif mtype == P.MSG_PING:
+            conn.send_msg(P.MSG_PONG)
         elif mtype == P.MSG_SNAPSHOT:
             self._on_snapshot(conn, P.decode_u32(payload))
         elif mtype == P.MSG_RESTORE:
             self._on_restore(conn, payload)
         elif mtype == P.MSG_BYE:
+            conn.said_bye = True
             return False
         else:
             conn.send_msg(P.MSG_ERROR, P.encode_error(
@@ -208,7 +304,7 @@ class CloudService:
         return True
 
     def _on_hello(self, conn: _Conn, payload: bytes) -> bool:
-        proto, frame_ver, d_model = P.decode_hello(payload)
+        proto, frame_ver, d_model, _epoch = P.decode_hello(payload)
         ours = (P.PROTO_VERSION, FRAME_VERSION, self.server.d_model)
         if (proto, frame_ver, d_model) != ours:
             conn.send_msg(P.MSG_ERROR, P.encode_error(
@@ -217,18 +313,42 @@ class CloudService:
                 f"d_model {d_model}; cloud speaks "
                 f"v{ours[0]}/v{ours[1]}/{ours[2]}"))
             return False
+        with self._lock:
+            conn.epoch = self._next_epoch
+            self._next_epoch += 1
         conn.hello_done = True
-        conn.send_msg(P.MSG_HELLO_ACK, P.encode_hello(self.server.d_model))
+        conn.send_msg(P.MSG_HELLO_ACK,
+                      P.encode_hello(self.server.d_model, epoch=conn.epoch))
         return True
 
     def _on_open(self, conn: _Conn, payload: bytes) -> None:
         req_id, expected = P.decode_u32_pair(payload)
         with self._lock:
-            ok = self.server.open_session(req_id, expected)
-            if ok:
-                self._conn_of[req_id] = conn
+            sess = self._sessions.get(req_id)
+            if sess is not None:
+                owner = sess.conn
+                if owner is not None and owner.alive and owner is not conn:
+                    conn.send_msg(P.MSG_ERROR, P.encode_error(
+                        P.ERR_REJECTED, req_id,
+                        "session owned by another live connection"))
+                    return
+                # idempotent re-open: a duplicate OPEN after a reconnect
+                # (the OPEN_OK was lost) adopts the existing session
+                if owner is not None and owner is not conn:
+                    owner.open_reqs.discard(req_id)
+                sess.conn = conn
+                sess.epoch = conn.epoch
+                sess.detached_at = None
                 conn.open_reqs.add(req_id)
-                self.sessions_served += 1
+                ok = True
+            else:
+                ok = self.server.open_session(req_id, expected)
+                if ok:
+                    self._sessions[req_id] = _NetSession(
+                        req_id=req_id, epoch=conn.epoch, conn=conn,
+                    )
+                    conn.open_reqs.add(req_id)
+                    self.sessions_served += 1
         if ok:
             conn.send_msg(P.MSG_OPEN_OK, P.encode_u32(req_id))
         else:
@@ -236,29 +356,91 @@ class CloudService:
                 P.ERR_REJECTED, req_id,
                 "no free slot / KV budget for the session"))
 
+    def _on_resume(self, conn: _Conn, payload: bytes) -> None:
+        """Re-attach the sessions a reconnecting device presents.
+
+        Each accepted session is answered with the service's own
+        ``up_expected`` watermark; buffered downlink frames past the
+        device's watermark are re-sent (re-stamped, so downlink spans
+        stay honest).  Sessions that are gone (grace expired) or owned
+        by another live connection are simply omitted — the device turns
+        that into ``SessionLostError``."""
+        prev_epoch, entries = P.decode_resume(payload)
+        accepted: List[Tuple[int, int]] = []
+        replays: List[Tuple[int, List[Tuple[int, bytes]]]] = []
+        with self._lock:
+            for req_id, _up_sent, down_recv in entries:
+                sess = self._sessions.get(req_id)
+                if sess is None:
+                    continue                     # closed / grace expired
+                owner = sess.conn
+                if owner is not None and owner.alive and owner is not conn:
+                    continue                     # actively owned elsewhere
+                if sess.epoch != prev_epoch and owner is not None and owner.alive:
+                    continue                     # stale resume for a live conn
+                if owner is not None:
+                    owner.open_reqs.discard(req_id)
+                sess.conn = conn
+                sess.epoch = conn.epoch
+                sess.detached_at = None
+                conn.open_reqs.add(req_id)
+                accepted.append((req_id, sess.up_expected))
+                pending = [(s, d) for s, d in sess.down_buffer
+                           if s >= down_recv]
+                if pending:
+                    replays.append((req_id, pending))
+            self.resumes_served += len(accepted)
+        conn.send_msg(P.MSG_RESUME_OK, P.encode_resume_ok(accepted))
+        for req_id, pending in replays:
+            for seq, data in pending:
+                conn.send_msg(P.MSG_FRAME, P.encode_seq_frame(
+                    seq, stamp_t_send(data, time.time())))
+                self.frames_replayed += 1
+                self.frames_out += 1
+        self.tracer.instant(
+            "resume", time.time(), tid=TID_CLOUD,
+            sessions=len(accepted), refused=len(entries) - len(accepted),
+        )
+
     def _on_frame(self, conn: _Conn, payload: bytes) -> None:
-        self.frames_in += 1
+        seq, raw = P.decode_seq_frame(payload)
         engine = self.server.engine
         # the expensive half of ingress — header parse + codec dequantize —
         # runs here in the reader thread, overlapping the pump thread's
         # engine step; only the queue append needs the lock
-        frame = Frame.from_bytes(payload)
+        frame = Frame.from_bytes(raw)
         if frame.kind == KIND_DEEP:
             conn.send_msg(P.MSG_ERROR, P.encode_error(
                 P.ERR_PROTOCOL, frame.req_id,
                 "deep frames flow cloud->device"))
             return
+        sess = self._sessions.get(frame.req_id)
+        if sess is not None and seq < sess.up_expected:
+            # replayed / duplicated uplink the engine already consumed:
+            # watermark dedupe keeps the step exactly-once
+            self.dup_frames_dropped += 1
+            return
+        self.frames_in += 1
+        self._apply_backpressure(conn)
         hidden = decode_hidden(frame, engine.d_model)
         engine.wire_bytes_in += frame.nbytes()
         job = EngineJob(frame.req_id, hidden, frame.offset, frame.kind_name,
                         want_deep=frame.want_deep, ready_s=frame.t_send)
         try:
             with self._lock:
-                if frame.req_id not in self._conn_of:
+                sess = self._sessions.get(frame.req_id)
+                if sess is None:
                     raise ProtocolError(
                         f"frame for unopened session {frame.req_id}"
                     )
+                if seq != sess.up_expected:
+                    raise ProtocolError(
+                        f"uplink gap for request {frame.req_id}: got seq "
+                        f"{seq}, expected {sess.up_expected}"
+                    )
                 engine.submit(job)
+                sess.up_expected = seq + 1
+                conn.inflight += 1
             with self._work:
                 self._work.notify()
         except EngineOverflowError as e:
@@ -266,7 +448,7 @@ class CloudService:
             # RemoteEngineError instead of waiting forever on a downlink
             # that will never come (the engine already released the slot)
             with self._lock:
-                self._conn_of.pop(e.req_id, None)
+                self._sessions.pop(e.req_id, None)
                 conn.open_reqs.discard(e.req_id)
             conn.send_msg(P.MSG_ERROR, P.encode_error(
                 P.ERR_OVERFLOW, e.req_id, str(e)))
@@ -274,39 +456,100 @@ class CloudService:
             conn.send_msg(P.MSG_ERROR, P.encode_error(
                 P.ERR_INTERNAL, frame.req_id, str(e)))
 
+    def _apply_backpressure(self, conn: _Conn) -> None:
+        """Hold this reader while the connection's in-flight window is
+        full: send ``MSG_BUSY`` once, then stop draining — TCP flow
+        control propagates the stall to the device — until the pump
+        works the window down and ``MSG_READY`` goes out."""
+        if self.max_inflight_frames <= 0:
+            return
+        if conn.inflight < self.max_inflight_frames:
+            return
+        if not conn.busy_sent:
+            conn.busy_sent = True
+            conn.send_msg(P.MSG_BUSY, P.encode_u32(conn.inflight))
+            self.tracer.instant(
+                "busy", time.time(), tid=TID_CLOUD, inflight=conn.inflight,
+            )
+        with self._work:
+            while (conn.inflight >= self.max_inflight_frames
+                   and conn.alive and not self._stop.is_set()):
+                self._work.wait(_PUMP_IDLE_S)
+
     def _on_snapshot(self, conn: _Conn, req_id: int) -> None:
         with self._lock:
-            snap = self.server.snapshot_session(req_id)
-            snap_id = conn.next_snap_id
-            conn.next_snap_id += 1
-            conn.snapshots[snap_id] = snap
+            sess = self._sessions.get(req_id)
+            if sess is None:
+                snap_id = None
+            else:
+                snap = self.server.snapshot_session(req_id)
+                snap_id = sess.next_snap_id
+                sess.next_snap_id += 1
+                sess.snapshots[snap_id] = snap
+        if snap_id is None:
+            conn.send_msg(P.MSG_ERROR, P.encode_error(
+                P.ERR_INTERNAL, req_id, f"unknown session {req_id}"))
+            return
         conn.send_msg(P.MSG_SNAPSHOT_OK, P.encode_u32_pair(req_id, snap_id))
 
     def _on_restore(self, conn: _Conn, payload: bytes) -> None:
         req_id, snap_id = P.decode_u32_pair(payload)
-        snap = conn.snapshots.get(snap_id)
+        with self._lock:
+            sess = self._sessions.get(req_id)
+            snap = sess.snapshots.get(snap_id) if sess is not None else None
+            if snap is not None:
+                self.server.restore_session(req_id, snap)
         if snap is None:
             conn.send_msg(P.MSG_ERROR, P.encode_error(
                 P.ERR_INTERNAL, req_id, f"unknown snapshot {snap_id}"))
             return
-        with self._lock:
-            self.server.restore_session(req_id, snap)
         conn.send_msg(P.MSG_RESTORE_OK, P.encode_u32(req_id))
 
-    def _close_session(self, conn: _Conn, req_id: int) -> None:
+    def _close_session(self, conn: Optional[_Conn], req_id: int) -> None:
         with self._lock:
             self.server.close_session(req_id)
-            self._conn_of.pop(req_id, None)
-            conn.open_reqs.discard(req_id)
+            self._sessions.pop(req_id, None)
+            if conn is not None:
+                conn.open_reqs.discard(req_id)
 
-    def _drop_conn(self, conn: _Conn) -> None:
+    def _drop_conn(self, conn: _Conn, graceful: bool = True) -> None:
         conn.alive = False
-        for rid in list(conn.open_reqs):
-            self._close_session(conn, rid)
-        conn.snapshots.clear()
+        if graceful:
+            for rid in list(conn.open_reqs):
+                self._close_session(conn, rid)
+        else:
+            # keep the slots warm: the device gets grace_s to resume
+            now = time.monotonic()
+            with self._lock:
+                for rid in list(conn.open_reqs):
+                    sess = self._sessions.get(rid)
+                    if sess is not None and sess.conn is conn:
+                        sess.conn = None
+                        sess.detached_at = now
+                        self.detaches += 1
+                        self.tracer.instant("detach", time.time(), tid=rid)
+                conn.open_reqs.clear()
         if conn in self._conns:
             self._conns.remove(conn)
         conn.sock.close()
+        with self._work:
+            self._work.notify_all()      # release any backpressure waiters
+
+    def _sweep_grace(self) -> None:
+        """Close sessions whose device never came back within grace_s."""
+        if self.grace_s is None:
+            return
+        now = time.monotonic()
+        expired = []
+        with self._lock:
+            for rid, sess in list(self._sessions.items()):
+                if (sess.conn is None and sess.detached_at is not None
+                        and now - sess.detached_at > self.grace_s):
+                    self.server.close_session(rid)
+                    del self._sessions[rid]
+                    expired.append(rid)
+        for rid in expired:
+            self.tracer.instant("grace_expired", time.time(), tid=rid)
 
     # ------------------------------------------------------------ pump loop
     def _pump_loop(self) -> None:
@@ -315,6 +558,7 @@ class CloudService:
             with self._work:
                 if not engine.queue:
                     self._work.wait(_PUMP_IDLE_S)
+            self._sweep_grace()
             if not engine.queue:
                 continue
             t0 = time.time()
@@ -324,6 +568,18 @@ class CloudService:
                 results = engine.step()
                 info = engine.last_step_info
                 tokens = engine.batched_token_history[-1]
+                for j in info:
+                    sess = self._sessions.get(j["req_id"])
+                    c = sess.conn if sess is not None else None
+                    if c is not None and c.inflight > 0:
+                        c.inflight -= 1
+            with self._work:
+                self._work.notify_all()  # wake backpressure waiters
+            for c in list(self._conns):
+                if (c.busy_sent and c.alive
+                        and c.inflight <= self.max_inflight_frames // 2):
+                    c.busy_sent = False
+                    c.send_msg(P.MSG_READY)
             t1 = time.time()
             if self.tracer.enabled:
                 # real wall-clock queue/cloud spans, per request, on the
@@ -346,12 +602,25 @@ class CloudService:
             for r in results:
                 if r.deep is None:
                     continue
-                conn = self._conn_of.get(r.req_id)
-                if conn is None or not conn.alive:
-                    continue                       # device went away mid-step
+                with self._lock:
+                    sess = self._sessions.get(r.req_id)
+                if sess is None:
+                    continue                       # closed mid-step
                 data = self.server.engine.encode_result(r)   # outside lock
-                conn.send_msg(P.MSG_FRAME, stamp_t_send(data, time.time()))
-                self.frames_out += 1
+                self._send_downlink(sess, data)
+
+    def _send_downlink(self, sess: _NetSession, data: bytes) -> None:
+        """Sequence, buffer and (when the device is attached) send one
+        downlink frame.  Buffering first means a frame produced while the
+        session is detached is not lost — resume replays it."""
+        seq = sess.down_seq
+        sess.down_seq += 1
+        sess.down_buffer.append((seq, data))
+        conn = sess.conn
+        if conn is not None and conn.alive:
+            conn.send_msg(P.MSG_FRAME, P.encode_seq_frame(
+                seq, stamp_t_send(data, time.time())))
+            self.frames_out += 1
 
 
 # ---------------------------------------------------------------------------
@@ -393,6 +662,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch-tokens", type=int, default=256)
     ap.add_argument("--wire-codec", default="fp16")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grace-s", type=float, default=30.0,
+                    help="how long a detached session keeps its slot")
+    ap.add_argument("--max-inflight-frames", type=int, default=32,
+                    help="per-connection in-flight window (0 = unbounded)")
+    ap.add_argument("--max-connections", type=int, default=64,
+                    help="accept-path cap (0 = unbounded)")
     ap.add_argument("--trace-out", default=None,
                     help="dump the service's Chrome trace on shutdown")
     args = ap.parse_args(argv)
@@ -403,7 +678,11 @@ def main(argv=None) -> int:
         max_batch_tokens=args.max_batch_tokens, wire_codec=args.wire_codec,
         seed=args.seed, tracer=tracer,
     )
-    svc = CloudService(server, host=args.host, port=args.port, tracer=tracer)
+    svc = CloudService(
+        server, host=args.host, port=args.port, grace_s=args.grace_s,
+        max_inflight_frames=args.max_inflight_frames,
+        max_connections=args.max_connections, tracer=tracer,
+    )
     host, port = svc.start()
     # the launcher greps for this exact line to learn the ephemeral port
     print(f"NET_SERVE listening on {host}:{port}", flush=True)
@@ -424,6 +703,8 @@ def main(argv=None) -> int:
             tracer.dump(args.trace_out)
         print(f"NET_SERVE done: {svc.sessions_served} sessions, "
               f"{svc.frames_in} frames in / {svc.frames_out} out, "
+              f"{svc.resumes_served} resumes, "
+              f"{svc.frames_replayed} frames replayed, "
               f"{server.engine.steps} engine steps", flush=True)
     return 0
 

@@ -14,13 +14,42 @@ steal each other's frames), control replies (open/snapshot/restore acks)
 into a separate queue.  The clock is ``time.time()`` — the unix epoch is
 the one clock device and cloud processes on a host share, which is what
 makes cross-process trace merges and queue-delay attribution meaningful.
+
+Fault tolerance (protocol v2)
+-----------------------------
+A dropped connection is no longer fatal.  Every blocking wait catches
+:class:`TransportClosed` and runs **recovery**: reconnect under the
+:class:`~repro.net.policy.RetryPolicy` backoff schedule, re-handshake
+(the ``MSG_HELLO_ACK`` carries the *new* connection epoch), then a
+``MSG_RESUME`` presenting the previous epoch and each live session's
+watermarks — ``up_sent`` (frames sent) and ``down_recv`` (frames seen).
+The cloud answers ``MSG_RESUME_OK`` with, per surviving session, its own
+``up_recv`` watermark; the device then replays exactly the uplink frames
+the cloud never processed (``seq >= up_recv``) from a small replay
+buffer.  Because every ``MSG_FRAME`` carries a session-scoped sequence
+number, duplicates created by replay (or by a chaos proxy) are dropped
+by watermark on both ends — the engine never double-steps.
+
+Sessions the cloud *doesn't* list in ``MSG_RESUME_OK`` (grace period
+expired, unknown epoch) are **lost**: every further operation on them
+raises :class:`~repro.net.errors.SessionLostError`, which the client
+surfaces with the tokens generated so far instead of hanging.
+
+Half-open connections are caught by heartbeats: if nothing has arrived
+for ``heartbeat_s`` while a wait is blocked, the device sends
+``MSG_PING``; silence past ``heartbeat_timeout_s`` forces recovery.
+``MSG_BUSY``/``MSG_READY`` from the cloud gate ``send`` (connection
+backpressure).  Per-op timeouts compose with the transport's
+:class:`~repro.net.policy.Deadline` — a reconnect spends the *same*
+budget as the wait it interrupted, so a deadline means what it says.
 """
 from __future__ import annotations
 
 import socket
 import time
 from collections import deque
-from typing import Deque, Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from ..obs import NULL_TRACER, Tracer
 from ..serving.api import Transport
@@ -29,12 +58,25 @@ from . import protocol as P
 from .errors import (
     ProtocolError,
     RemoteEngineError,
+    SessionLostError,
     TransportClosed,
     TransportError,
     TransportTimeout,
 )
+from .policy import Deadline, RetryPolicy
 
 _POLL_S = 0.05           # socket timeout granularity while waiting
+
+
+@dataclass
+class _SessionState:
+    """Device-side wire state for one open session."""
+
+    up_seq: int = 0                 # next uplink sequence number to assign
+    down_expected: int = 0          # next downlink sequence number expected
+    established: bool = False       # OPEN_OK seen (resumable)
+    expected_tokens: int = 0
+    replay: List[Tuple[int, bytes]] = field(default_factory=list)
 
 
 class SocketTransport(Transport):
@@ -49,11 +91,14 @@ class SocketTransport(Transport):
       version skew therefore fails in milliseconds, not with a shape
       error mid-prefill.
     * **Timeouts**: ``recv_timeout_s``/``send_timeout_s`` default every
-      data-plane wait; per-call ``recv(req_id, timeout=...)`` overrides.
+      data-plane wait; per-call ``recv(req_id, timeout=...)`` overrides;
+      ``deadline.op_timeout_s`` caps both, *including* reconnect time.
     * **Typed errors**: a ``MSG_ERROR`` carrying a req_id parks in that
       request's inbox and raises :class:`RemoteEngineError` out of the
       waiting ``recv``/control call — the session unwinds cleanly (its
       ``finally`` still sends ``MSG_CLOSE``) instead of hanging.
+    * **Recovery**: see the module docstring; ``retry=RetryPolicy(
+      max_attempts=0)`` restores the pre-v2 first-drop-is-fatal behavior.
     """
 
     def __init__(
@@ -66,20 +111,46 @@ class SocketTransport(Transport):
         retry_interval_s: float = 0.05,
         send_timeout_s: float = 30.0,
         recv_timeout_s: float = 60.0,
+        retry: Optional[RetryPolicy] = None,
+        deadline: Optional[Deadline] = None,
+        heartbeat_s: float = 5.0,
+        heartbeat_timeout_s: float = 20.0,
         max_message_bytes: int = P.MAX_MESSAGE_BYTES,
         tracer: Optional[Tracer] = None,
     ):
         self.host, self.port = host, port
         self.d_model = d_model
+        self.connect_timeout_s = connect_timeout_s
+        self.retry_interval_s = retry_interval_s
         self.send_timeout_s = send_timeout_s
         self.recv_timeout_s = recv_timeout_s
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.deadline = deadline if deadline is not None else Deadline()
+        self.heartbeat_s = heartbeat_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.bytes_up = 0
         self.bytes_down = 0
+        # fault-tolerance counters (read by worker result JSON / metrics)
+        self.reconnects = 0
+        self.replayed_frames = 0
+        self.dup_frames_dropped = 0
+        self.busy_signals = 0
+        self.pings_sent = 0
+        self._max_message_bytes = max_message_bytes
         self._decoder = P.StreamDecoder(max_message_bytes=max_message_bytes)
         self._inbox: Dict[int, Deque] = {}       # req_id -> frames / errors
         self._control: Deque[Tuple[int, bytes]] = deque()
+        self._sessions: Dict[int, _SessionState] = {}
+        self._lost: Dict[int, SessionLostError] = {}
+        self._retry_rng = self.retry.rng()
+        self._deadline_clock = self.deadline.start()
+        self._epoch = 0
+        self._busy = False
         self._closed = False
+        self._in_recovery = False
+        self._last_rx = time.monotonic()
+        self._last_ping = 0.0
         self._sock = self._connect(connect_timeout_s, retry_interval_s)
         self._handshake()
 
@@ -107,7 +178,7 @@ class SocketTransport(Transport):
         mtype, payload = self._wait_control(
             P.MSG_HELLO_ACK, timeout=self.recv_timeout_s, op="hello"
         )
-        proto, frame_ver, d_model = P.decode_hello(payload)
+        proto, frame_ver, d_model, epoch = P.decode_hello(payload)
         from ..wire import FRAME_VERSION
 
         if (proto, frame_ver, d_model) != (P.PROTO_VERSION, FRAME_VERSION,
@@ -117,6 +188,100 @@ class SocketTransport(Transport):
                 f"v{frame_ver} / d_model {d_model}, device speaks "
                 f"v{P.PROTO_VERSION}/v{FRAME_VERSION}/{self.d_model}"
             )
+        self._epoch = epoch
+        self._last_rx = time.monotonic()
+
+    def _resume(self, prev_epoch: int) -> None:
+        """Re-attach surviving sessions after a reconnect + re-handshake.
+
+        Presents the previous connection epoch plus each established
+        session's watermarks; sessions missing from the cloud's answer
+        are marked lost; surviving sessions get their unacknowledged
+        uplink frames replayed (cloud-side watermark dedupe makes the
+        replay exactly-once)."""
+        listed = {
+            rid: st for rid, st in self._sessions.items() if st.established
+        }
+        if not listed:
+            return
+        self._send_msg(P.MSG_RESUME, P.encode_resume(
+            prev_epoch,
+            [(rid, st.up_seq, st.down_expected) for rid, st in listed.items()],
+        ))
+        _, payload = self._wait_control(
+            P.MSG_RESUME_OK, timeout=self.recv_timeout_s, op="resume"
+        )
+        survivors = dict(P.decode_resume_ok(payload))
+        for rid, st in listed.items():
+            if rid not in survivors:
+                self._lost[rid] = SessionLostError(
+                    rid, "cloud refused resume (grace expired or unknown "
+                    "session)"
+                )
+                self._sessions.pop(rid, None)
+                self._inbox.pop(rid, None)
+                continue
+            up_recv = survivors[rid]
+            for seq, stamped in st.replay:
+                if seq < up_recv:
+                    continue         # cloud already processed this frame
+                self._send_msg(P.MSG_FRAME, P.encode_seq_frame(seq, stamped))
+                self.replayed_frames += 1
+        self.tracer.instant(
+            "resume", self.clock(), tid=0,
+            sessions=len(survivors), lost=len(listed) - len(survivors),
+        )
+
+    def _recover(self, cause: Exception) -> None:
+        """Reconnect + re-handshake + resume under the retry policy.
+
+        Raises the ``cause`` unchanged when recovery is disabled (policy
+        allows zero attempts, transport shut down, or the failure struck
+        *inside* a recovery attempt)."""
+        if self._closed or self._in_recovery or self.retry.max_attempts <= 0:
+            raise cause
+        self._in_recovery = True
+        try:
+            prev_epoch = self._epoch
+            self.tracer.instant(
+                "fault", self.clock(), tid=0, kind=type(cause).__name__,
+            )
+            last: Exception = cause
+            for attempt in range(self.retry.max_attempts):
+                time.sleep(self.retry.backoff_s(attempt, self._retry_rng))
+                try:
+                    try:
+                        self._sock.close()
+                    except OSError:
+                        pass
+                    # a new connection is a new stream: any torn message
+                    # and stale control replies die with the old one
+                    self._decoder = P.StreamDecoder(
+                        max_message_bytes=self._max_message_bytes
+                    )
+                    self._control.clear()
+                    self._busy = False
+                    self._sock = self._connect(
+                        self.connect_timeout_s, self.retry_interval_s
+                    )
+                    self._handshake()
+                    self._resume(prev_epoch)
+                except ProtocolError:
+                    raise              # version skew etc.: retrying won't help
+                except (TransportError, OSError) as e:
+                    last = e
+                    continue
+                self.reconnects += 1
+                self.tracer.instant(
+                    "reconnect", self.clock(), tid=0, attempt=attempt,
+                )
+                return
+            raise TransportError(
+                f"connection recovery failed after "
+                f"{self.retry.max_attempts} attempts: {last}"
+            ) from cause
+        finally:
+            self._in_recovery = False
 
     def shutdown(self) -> None:
         """Graceful goodbye: tell the service, then close the socket."""
@@ -150,18 +315,34 @@ class SocketTransport(Transport):
 
     def _route(self, mtype: int, payload: bytes) -> None:
         if mtype == P.MSG_FRAME:
-            rid = frame_req_id(payload)
-            self.bytes_down += len(payload)
+            seq, data = P.decode_seq_frame(payload)
+            rid = frame_req_id(data)
+            st = self._sessions.get(rid)
+            if st is None:
+                return                       # frame for a closed session
+            if seq < st.down_expected:
+                self.dup_frames_dropped += 1  # replay / chaos duplicate
+                return
+            if seq > st.down_expected:
+                raise ProtocolError(
+                    f"downlink gap for request {rid}: got seq {seq}, "
+                    f"expected {st.down_expected}"
+                )
+            st.down_expected += 1
+            # strict request/response per session: a downlink implies the
+            # cloud processed every uplink before it — drop the replay log
+            st.replay.clear()
+            self.bytes_down += len(data)
             t_arrive = self.clock()
-            t_send = frame_t_send(payload)
+            t_send = frame_t_send(data)
             if 0.0 < t_send <= t_arrive:
                 # sender stamped its send-complete time on our shared
                 # (unix-epoch) clock: the gap is the real downlink hop
                 self.tracer.add_span(
                     "downlink", t_send, t_arrive, tid=rid, phase="downlink",
-                    nbytes=len(payload),
+                    nbytes=len(data),
                 )
-            self._inbox.setdefault(rid, deque()).append(("frame", payload))
+            self._inbox.setdefault(rid, deque()).append(("frame", data))
         elif mtype == P.MSG_ERROR:
             code, rid, msg = P.decode_error(payload)
             if code in (P.ERR_VERSION, P.ERR_PROTOCOL) or rid == 0:
@@ -175,6 +356,15 @@ class SocketTransport(Transport):
         elif mtype == P.MSG_BYE:
             self._closed = True
             raise TransportClosed("cloud said goodbye")
+        elif mtype == P.MSG_PONG:
+            pass                             # _last_rx already advanced
+        elif mtype == P.MSG_BUSY:
+            if not self._busy:
+                self._busy = True
+                self.busy_signals += 1
+                self.tracer.instant("busy", self.clock(), tid=0)
+        elif mtype == P.MSG_READY:
+            self._busy = False
         else:
             self._control.append((mtype, payload))
 
@@ -190,10 +380,41 @@ class SocketTransport(Transport):
         except OSError as e:
             raise TransportClosed(f"recv failed: {e}") from e
         if not chunk:
-            self._closed = True
             raise TransportClosed("connection closed by the cloud")
+        self._last_rx = time.monotonic()
         for mtype, payload in self._decoder.feed(chunk):
             self._route(mtype, payload)
+
+    def _check_liveness(self) -> None:
+        """Probe a silent connection; force recovery on a half-open one."""
+        now = time.monotonic()
+        idle = now - self._last_rx
+        if idle > self.heartbeat_timeout_s:
+            self._recover(TransportClosed(
+                f"liveness: no traffic for {idle:.1f}s"
+            ))
+        elif idle > self.heartbeat_s and now - self._last_ping > self.heartbeat_s:
+            self._last_ping = now
+            try:
+                self._send_msg(P.MSG_PING)
+                self.pings_sent += 1
+            except TransportClosed as e:
+                self._recover(e)
+
+    def _op_deadline(self, timeout: Optional[float],
+                     default: float) -> Tuple[float, float]:
+        """Absolute monotonic deadline for one op + the effective bound.
+
+        The per-call ``timeout`` (or the transport default) composes with
+        ``deadline.op_timeout_s`` — whichever is tighter wins — and the
+        clock keeps running through reconnects."""
+        t = default if timeout is None else timeout
+        cap = self.deadline.op_timeout_s
+        if cap is not None:
+            t = min(t, cap)
+        total = self._deadline_clock.total_remaining_s()
+        t = min(t, max(total, 0.0))
+        return time.monotonic() + t, t
 
     def _wait_control(
         self, expect: int, *, timeout: float, op: str
@@ -209,6 +430,51 @@ class SocketTransport(Transport):
                 raise TransportTimeout(op, timeout)
             self._poll(min(remaining, _POLL_S))
 
+    def _control_roundtrip(
+        self,
+        mtype: int,
+        payload: bytes,
+        *,
+        match: Callable[[int, bytes], Optional[tuple]],
+        op: str,
+        req_id: Optional[int] = None,
+        timeout: Optional[float] = None,
+    ):
+        """Send a control message and wait for its matching reply,
+        re-sending after any reconnect (the service handles the repeats
+        idempotently).  ``match`` returns ``None`` for non-matches and a
+        tuple ``(value,)`` on match."""
+        end, bound = self._op_deadline(timeout, self.recv_timeout_s)
+        while True:
+            try:
+                self._send_msg(mtype, payload)
+            except TransportClosed as e:
+                self._recover(e)
+                if req_id is not None:
+                    self._raise_if_lost(req_id)
+                continue
+            resend = False
+            while not resend:
+                if req_id is not None:
+                    self._raise_if_lost(req_id)
+                    self._raise_if_error(req_id)
+                for i, (mt, pl) in enumerate(self._control):
+                    hit = match(mt, pl)
+                    if hit is not None:
+                        del self._control[i]
+                        return hit[0]
+                remaining = end - time.monotonic()
+                if remaining <= 0:
+                    raise TransportTimeout(op, bound, req_id)
+                self._check_liveness()
+                try:
+                    self._poll(min(remaining, _POLL_S))
+                except TransportClosed as e:
+                    self._recover(e)
+                    if req_id is not None:
+                        self._raise_if_lost(req_id)
+                    resend = True    # new connection: repeat the request
+
     def _raise_if_error(self, req_id: int) -> None:
         q = self._inbox.get(req_id)
         if q and q[0][0] == "error":
@@ -216,28 +482,61 @@ class SocketTransport(Transport):
             self._inbox.pop(req_id, None)
             raise exc
 
+    def _raise_if_lost(self, req_id: int) -> None:
+        exc = self._lost.get(req_id)
+        if exc is not None:
+            raise exc
+
     # ----------------------------------------------------------- data plane
     def send(self, data: bytes) -> None:
         rid = frame_req_id(data)
+        self._raise_if_lost(rid)
         self._raise_if_error(rid)            # fail fast: session already dead
+        st = self._sessions.setdefault(rid, _SessionState())
+        self._wait_ready()
         t0 = self.clock()
+        stamped = stamp_t_send(data, t0)
+        seq = st.up_seq
+        st.up_seq += 1
+        st.replay.append((seq, stamped))
         self.bytes_up += len(data)
-        self._send_msg(P.MSG_FRAME, stamp_t_send(data, t0))
+        try:
+            self._send_msg(P.MSG_FRAME, P.encode_seq_frame(seq, stamped))
+        except TransportClosed as e:
+            self._recover(e)                 # resume replays this frame
+            self._raise_if_lost(rid)
         self.tracer.add_span(
             "uplink", t0, self.clock(), tid=rid, phase="uplink",
             nbytes=len(data),
         )
 
+    def _wait_ready(self) -> None:
+        """Honor cloud backpressure: hold sends while MSG_BUSY is in
+        force, up to the send timeout (then send anyway — the cloud's
+        reader has stopped draining, so TCP flow control bounds us)."""
+        if not self._busy:
+            return
+        end = time.monotonic() + self.send_timeout_s
+        while self._busy and time.monotonic() < end:
+            try:
+                self._poll(_POLL_S)
+            except TransportClosed as e:
+                self._recover(e)
+
     def has_frame(self, req_id: int) -> bool:
         """Non-blocking: drain the socket once, then check the inbox."""
         q = self._inbox.get(req_id)
         if not q:
-            self._poll(0.0)
+            try:
+                self._poll(0.0)
+            except TransportClosed as e:
+                self._recover(e)
             q = self._inbox.get(req_id)
         return bool(q) and q[0][0] == "frame"
 
     def deliver(self, req_id: int) -> Optional[bytes]:
         """Non-blocking receive (concurrent-scheduler hook)."""
+        self._raise_if_lost(req_id)
         self._raise_if_error(req_id)
         q = self._inbox.get(req_id)
         if q and q[0][0] == "frame":
@@ -245,10 +544,10 @@ class SocketTransport(Transport):
         return None
 
     def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
-        timeout = self.recv_timeout_s if timeout is None else timeout
-        deadline = time.monotonic() + timeout
+        end, bound = self._op_deadline(timeout, self.recv_timeout_s)
         t_wait = self.clock()
         while True:
+            self._raise_if_lost(req_id)
             self._raise_if_error(req_id)
             q = self._inbox.get(req_id)
             if q and q[0][0] == "frame":
@@ -263,60 +562,72 @@ class SocketTransport(Transport):
                         phase="cloud_step",
                     )
                 return data
-            remaining = deadline - time.monotonic()
+            remaining = end - time.monotonic()
             if remaining <= 0:
-                raise TransportTimeout("recv", timeout, req_id)
-            self._poll(min(remaining, _POLL_S))
+                raise TransportTimeout("recv", bound, req_id)
+            self._check_liveness()
+            try:
+                self._poll(min(remaining, _POLL_S))
+            except TransportClosed as e:
+                self._recover(e)
 
     # -------------------------------------------------------- session plane
     def open(self, req_id: int, expected_tokens: int) -> None:
-        self._send_msg(P.MSG_OPEN, P.encode_u32_pair(req_id, expected_tokens))
-        deadline = time.monotonic() + self.recv_timeout_s
-        while True:
-            self._raise_if_error(req_id)
-            for i, (mtype, payload) in enumerate(self._control):
-                if mtype == P.MSG_OPEN_OK and P.decode_u32(payload) == req_id:
-                    del self._control[i]
-                    return
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                raise TransportTimeout("open", self.recv_timeout_s, req_id)
-            self._poll(min(remaining, _POLL_S))
+        self._raise_if_lost(req_id)
+        st = self._sessions.setdefault(req_id, _SessionState())
+        st.expected_tokens = expected_tokens
+
+        def _match(mtype: int, payload: bytes):
+            if mtype == P.MSG_OPEN_OK and P.decode_u32(payload) == req_id:
+                return (None,)
+            return None
+
+        self._control_roundtrip(
+            P.MSG_OPEN, P.encode_u32_pair(req_id, expected_tokens),
+            match=_match, op="open", req_id=req_id,
+        )
+        st.established = True
 
     def close(self, req_id: int) -> None:
         self._inbox.pop(req_id, None)
-        if not self._closed:
+        lost = self._lost.pop(req_id, None)
+        self._sessions.pop(req_id, None)
+        if self._closed or lost is not None:
+            return
+        try:
             self._send_msg(P.MSG_CLOSE, P.encode_u32(req_id))
+        except TransportClosed:
+            # connection is down; the cloud's grace sweep reaps the slot
+            # (the session is gone here, so no future resume re-attaches it)
+            pass
 
     # -------------------------------------------------------- control plane
     def snapshot(self, req_id: int):
         """Ask the cloud to snapshot the slot's recurrent state; returns an
         opaque handle (the state itself never crosses the wire)."""
-        self._send_msg(P.MSG_SNAPSHOT, P.encode_u32(req_id))
-        deadline = time.monotonic() + self.recv_timeout_s
-        while True:
-            self._raise_if_error(req_id)
-            for i, (mtype, payload) in enumerate(self._control):
-                if mtype == P.MSG_SNAPSHOT_OK:
-                    rid, snap_id = P.decode_u32_pair(payload)
-                    if rid == req_id:
-                        del self._control[i]
-                        return snap_id
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                raise TransportTimeout("snapshot", self.recv_timeout_s, req_id)
-            self._poll(min(remaining, _POLL_S))
+        self._raise_if_lost(req_id)
+
+        def _match(mtype: int, payload: bytes):
+            if mtype == P.MSG_SNAPSHOT_OK:
+                rid, snap_id = P.decode_u32_pair(payload)
+                if rid == req_id:
+                    return (snap_id,)
+            return None
+
+        return self._control_roundtrip(
+            P.MSG_SNAPSHOT, P.encode_u32(req_id),
+            match=_match, op="snapshot", req_id=req_id,
+        )
 
     def restore(self, req_id: int, snap) -> None:
-        self._send_msg(P.MSG_RESTORE, P.encode_u32_pair(req_id, int(snap)))
-        deadline = time.monotonic() + self.recv_timeout_s
-        while True:
-            self._raise_if_error(req_id)
-            for i, (mtype, payload) in enumerate(self._control):
-                if mtype == P.MSG_RESTORE_OK and P.decode_u32(payload) == req_id:
-                    del self._control[i]
-                    return
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                raise TransportTimeout("restore", self.recv_timeout_s, req_id)
-            self._poll(min(remaining, _POLL_S))
+        self._raise_if_lost(req_id)
+
+        def _match(mtype: int, payload: bytes):
+            if mtype == P.MSG_RESTORE_OK and P.decode_u32(payload) == req_id:
+                return (None,)
+            return None
+
+        self._control_roundtrip(
+            P.MSG_RESTORE, P.encode_u32_pair(req_id, int(snap)),
+            match=_match, op="restore", req_id=req_id,
+        )

@@ -27,6 +27,7 @@ import numpy as np
 from ..obs import Tracer
 from ..serving.api import DeviceClient, Transport
 from ..serving.request import Request
+from .errors import SessionLostError
 
 
 def device_specs(cfg, device_index: int, *, n_requests: int, prompt_len: int,
@@ -63,10 +64,18 @@ def run_device_workload(client: DeviceClient, transport: Transport,
             arrival_s=transport.clock(), prompt_len=len(spec.prompt),
             max_new_tokens=spec.max_new_tokens, prompt=spec.prompt,
         )
-        for tok in client.generate(spec.prompt,
-                                   max_new_tokens=spec.max_new_tokens,
-                                   req_id=spec.req_id):
-            req.emit_tokens([tok], transport.clock())
+        try:
+            for tok in client.generate(spec.prompt,
+                                       max_new_tokens=spec.max_new_tokens,
+                                       req_id=spec.req_id):
+                req.emit_tokens([tok], transport.clock())
+        except SessionLostError as e:
+            # graceful degradation: keep the tokens the session produced
+            # before the cloud gave up on it and move on to the next spec
+            req.degraded = True
+            extra = e.partial_tokens[len(req.generated):]
+            if extra:
+                req.emit_tokens(extra, transport.clock())
         req.done_s = transport.clock()
         out.append(req)
     return out
@@ -117,12 +126,20 @@ def main(argv=None) -> int:
     ap.add_argument("--recv-timeout", type=float, default=120.0,
                     help="per-frame downlink deadline (covers cold-start "
                          "jit compiles in the cloud process)")
+    ap.add_argument("--retry-attempts", type=int, default=6,
+                    help="reconnect attempts per disconnect (0 = first "
+                         "drop is fatal)")
+    ap.add_argument("--retry-base-s", type=float, default=0.05,
+                    help="base backoff before the first reconnect attempt")
+    ap.add_argument("--retry-seed", type=int, default=0,
+                    help="jitter seed (same seed => same backoff schedule)")
     ap.add_argument("--out", default=None, help="result JSON path")
     ap.add_argument("--trace-out", default=None,
                     help="dump this device's Chrome trace")
     args = ap.parse_args(argv)
 
     from ..configs import get_config
+    from .policy import Deadline, RetryPolicy
     from .transport import SocketTransport
 
     cfg = get_config(args.arch).reduced()
@@ -130,7 +147,11 @@ def main(argv=None) -> int:
     transport = SocketTransport(
         args.host, args.port, d_model=cfg.d_model,
         connect_timeout_s=args.connect_timeout,
-        recv_timeout_s=args.recv_timeout, tracer=tracer,
+        recv_timeout_s=args.recv_timeout,
+        retry=RetryPolicy(max_attempts=args.retry_attempts,
+                          base_s=args.retry_base_s, seed=args.retry_seed),
+        deadline=Deadline(op_timeout_s=args.recv_timeout),
+        tracer=tracer,
     )
     client = build_client(
         args.arch, transport, max_len=args.max_len,
@@ -154,6 +175,11 @@ def main(argv=None) -> int:
         "wall_s": wall_s,
         "bytes_up": transport.bytes_up,
         "bytes_down": transport.bytes_down,
+        "reconnects": transport.reconnects,
+        "replayed_frames": transport.replayed_frames,
+        "dup_frames_dropped": transport.dup_frames_dropped,
+        "busy_signals": transport.busy_signals,
+        "requests_degraded": sum(1 for r in requests if r.degraded),
         "requests": [
             {
                 "req_id": r.req_id,
@@ -162,6 +188,7 @@ def main(argv=None) -> int:
                 "ttft_s": r.ttft_s,
                 "tbt_s": r.tbt_s,
                 "token_times_s": list(r.token_times_s),
+                "degraded": r.degraded,
             }
             for r in requests
         ],
@@ -174,7 +201,9 @@ def main(argv=None) -> int:
     ttfts = [r.ttft_s for r in requests if r.ttft_s is not None]
     print(f"NET_WORKER {args.device_index} done: {len(requests)} requests, "
           f"mean TTFT {1e3 * float(np.mean(ttfts)):.1f}ms, "
-          f"{transport.bytes_up} B up / {transport.bytes_down} B down",
+          f"{transport.bytes_up} B up / {transport.bytes_down} B down, "
+          f"{transport.reconnects} reconnects / "
+          f"{transport.replayed_frames} replayed frames",
           flush=True)
     return 0
 

@@ -75,7 +75,8 @@ from ..core.speculative import (
     snapshot_states,
 )
 from ..core.split import SplitModels
-from ..net.errors import TransportError, TransportTimeout
+from ..net.errors import SessionLostError, TransportError, TransportTimeout
+from ..net.policy import Deadline, RetryPolicy
 from ..obs import NULL_TRACER, TID_CLOUD, Tracer, attach_monitor
 from ..wire import (
     Frame,
@@ -132,6 +133,13 @@ class ServeConfig:
     # --- cloud -------------------------------------------------------------
     max_batch_tokens: Optional[int] = 512
     pipeline_len: int = 4
+    # --- robustness --------------------------------------------------------
+    # how hard a transport fights a dead connection, and how long one
+    # blocking operation may take end to end (reconnects included) —
+    # consumed by SocketTransport; loopback/delay-model transports have
+    # no connection to lose and ignore them
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    deadline: Deadline = field(default_factory=Deadline)
     # --- fleet -------------------------------------------------------------
     n_devices: int = 30
     max_sim_s: float = 3600.0
@@ -1032,6 +1040,13 @@ class DeviceClient:
             while i < len(out):
                 yield out[i]
                 i += 1
+        except SessionLostError as e:
+            # graceful degradation: the transport gave up on the session
+            # (grace expired / retries exhausted) — hand the caller every
+            # token generated so far instead of losing the request
+            if not e.partial_tokens:
+                e.partial_tokens = list(out)
+            raise
         finally:
             coro.close()
 

@@ -48,6 +48,11 @@ class Request:
     drafted: int = 0
     accepted: int = 0
 
+    # --- fault tolerance ----------------------------------------------------
+    # the session was lost mid-stream (SessionLostError): `generated` holds
+    # the partial token stream the device salvaged before giving up
+    degraded: bool = False
+
     @property
     def ttft_s(self) -> Optional[float]:
         if self.first_token_s is None:
@@ -91,9 +96,19 @@ class FleetMetrics:
     # step history) + the engine's jit compile count (0 for the simulator)
     cloud_batch_tokens: List[int] = field(default_factory=list)
     engine_jit_compiles: int = 0
+    # fault tolerance: connection recoveries observed by the transport(s)
+    # that served these requests (0 on loopback / fault-free runs)
+    reconnects: int = 0
+    replayed_frames: int = 0
 
     def add(self, r: Request) -> None:
         self.requests.append(r)
+
+    def record_transport(self, transport) -> None:
+        """Fold a transport's fault counters in (no-op for transports
+        without them, e.g. loopback)."""
+        self.reconnects += int(getattr(transport, "reconnects", 0))
+        self.replayed_frames += int(getattr(transport, "replayed_frames", 0))
 
     def ttft(self) -> np.ndarray:
         return np.asarray([r.ttft_s for r in self.requests if r.ttft_s is not None])
@@ -157,6 +172,10 @@ class FleetMetrics:
             float(np.mean(bt)) if bt else 0.0
         )
         out["engine_jit_compiles"] = int(self.engine_jit_compiles)
+        # fault tolerance: always present (all zero on a fault-free run)
+        out["reconnects"] = int(self.reconnects)
+        out["replayed_frames"] = int(self.replayed_frames)
+        out["requests_degraded"] = sum(1 for r in self.requests if r.degraded)
         # per-phase TTFT attribution: mean over traced requests, in ms,
         # keyed in pipeline order (only present when a flight recorder ran)
         traced = [r.phase_ttft_s for r in self.requests

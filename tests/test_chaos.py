@@ -1,0 +1,542 @@
+"""Fault tolerance: session resume, retry/deadline policies, backpressure
+and the deterministic chaos harness of :mod:`repro.net`.
+
+Layered like ``test_net.py``, cheapest first:
+
+* pure policy units (RetryPolicy backoff determinism, Deadline
+  composition) and the :class:`FaultyTransport` wrapper — no sockets;
+* launcher supervision units against fake processes — no JAX;
+* a real in-process :class:`~repro.net.service.CloudService` behind a
+  :class:`~repro.net.chaos.ChaosProxy` injecting seeded connection drops
+  mid-prefill, mid-verify (SSM arch) and on the downlink: the device must
+  reconnect, resume via watermarks, and produce a token stream
+  byte-identical to the fault-free loopback run — or, past the grace
+  period, surface :class:`~repro.net.errors.SessionLostError` with the
+  partial tokens instead of hanging.
+"""
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.net import protocol as P
+from repro.net.chaos import ChaosProxy, FaultEvent, FaultyTransport, seeded_schedule
+from repro.net.errors import (
+    ProtocolError,
+    SessionLostError,
+    TransportClosed,
+    TransportError,
+    TransportTimeout,
+)
+from repro.net.policy import Deadline, RetryPolicy
+
+ARCH = "internlm2-1.8b"
+SSM_ARCH = "xlstm-350m"
+
+
+# ---------------------------------------------------------------------------
+# policy units: deterministic backoff, deadline composition
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_same_seed_same_schedule():
+    p = RetryPolicy(max_attempts=5, seed=42)
+    a = list(p.delays())
+    assert a == list(p.delays())                     # fresh rng, same seed
+    assert len(a) == p.max_attempts
+    for attempt, d in enumerate(a):
+        base = min(p.base_s * p.multiplier ** attempt, p.max_backoff_s)
+        assert abs(d - base) <= base * p.jitter + 1e-9
+    # the cap really caps: far attempts stop growing
+    late = RetryPolicy(max_attempts=20, jitter=0.0).backoff_s(19)
+    assert late == RetryPolicy().max_backoff_s
+
+
+def test_retry_policy_zero_attempts_means_no_schedule():
+    assert list(RetryPolicy(max_attempts=0).delays()) == []
+
+
+def test_deadline_composition_and_expiry():
+    d = Deadline(op_timeout_s=5.0, total_s=0.05)
+    clock = d.start()
+    assert not clock.expired()
+    assert clock.total_remaining_s() <= 0.05
+    time.sleep(0.08)
+    assert clock.expired()
+    # per-call override beats op_timeout_s; None means unbounded
+    assert d.op_deadline(100.0) == 105.0
+    assert d.op_deadline(100.0, timeout=1.0) == 101.0
+    assert Deadline(op_timeout_s=None).op_deadline(0.0) == float("inf")
+
+
+def test_transport_total_deadline_caps_recv(make_transport):
+    """A session-wide total_s budget bounds a recv even when both the
+    per-call timeout and op_timeout_s are far larger (the migration
+    contract: transport timeouts compose with deadlines, tightest wins)."""
+    from test_net import _FakeCloud
+
+    t = make_transport(_FakeCloud(),
+                       deadline=Deadline(op_timeout_s=60.0, total_s=0.4))
+    t.open(5, 16)
+    t0 = time.monotonic()
+    with pytest.raises(TransportTimeout):
+        t.recv(5, timeout=30.0)                      # returns in ~0.4s, not 30
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_heartbeat_pings_a_silent_connection(make_transport):
+    """A blocked recv on a silent (but live) connection probes it with
+    MSG_PING instead of waiting blind."""
+    from test_net import _FakeCloud
+
+    t = make_transport(_FakeCloud(), heartbeat_s=0.1,
+                       heartbeat_timeout_s=30.0)
+    t.open(5, 16)
+    with pytest.raises(TransportTimeout):
+        t.recv(5, timeout=0.6)
+    assert t.pings_sent >= 1
+
+
+@pytest.fixture
+def make_transport():
+    from repro.net.transport import SocketTransport
+
+    made = []
+
+    def make(cloud, **kw):
+        kw.setdefault("d_model", cloud.d_model)
+        kw.setdefault("connect_timeout_s", 5.0)
+        t = SocketTransport("127.0.0.1", cloud.port, **kw)
+        made.append((t, cloud))
+        return t
+
+    yield make
+    for t, cloud in made:
+        t.shutdown()
+        cloud.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos primitives: seeded schedules, FaultyTransport
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_schedule_is_deterministic():
+    a = seeded_schedule(7, connections=2, drops_per_conn=2, max_hop=3)
+    assert a == seeded_schedule(7, connections=2, drops_per_conn=2, max_hop=3)
+    events = [ev for evs in a.values() for ev in evs]
+    assert len(events) == 4                          # 2 conns x 2 drops
+    assert all(ev.kind == "drop" for ev in events)
+    assert all(0 <= ev.at_hop <= 3 for ev in events)
+    # multi-drop schedules spread across reconnect indices: at most one
+    # drop per connection index, so finite retries always converge
+    assert all(len(evs) == 1 for evs in a.values())
+
+
+def test_faulty_transport_injects_at_exact_call_indices():
+    class _Inner:
+        def __init__(self):
+            self.sent = []
+
+        def send(self, data):
+            self.sent.append(data)
+
+        def recv(self, req_id, timeout=None):
+            return b"frame"
+
+        def clock(self):
+            return 0.0
+
+    inner = _Inner()
+    ft = FaultyTransport(inner, fail_sends=(1,), fail_recvs=(0,))
+    ft.send(b"a")                                    # send #0 passes through
+    with pytest.raises(TransportClosed):
+        ft.send(b"b")                                # send #1 injected
+    ft.send(b"c")
+    with pytest.raises(TransportClosed):
+        ft.recv(1)                                   # recv #0 injected
+    assert ft.recv(1) == b"frame"
+    assert inner.sent == [b"a", b"c"]
+    assert [f["op"] for f in ft.faults] == ["send", "recv"]
+    assert ft.clock() == 0.0                         # delegation
+
+
+# ---------------------------------------------------------------------------
+# launcher supervision: no orphaned workers
+# ---------------------------------------------------------------------------
+
+
+class _FakeProc:
+    """poll() pops scripted return codes; the last one is sticky."""
+
+    def __init__(self, *rcs):
+        self._rcs = list(rcs)
+        self.returncode = None
+
+    def poll(self):
+        self.returncode = (self._rcs.pop(0) if len(self._rcs) > 1
+                           else self._rcs[0])
+        return self.returncode
+
+
+def test_wait_workers_raises_when_cloud_dies(tmp_path):
+    from repro.net.launcher import _wait_workers
+
+    cloud = SimpleNamespace(proc=_FakeProc(None, 1),
+                            log_path=tmp_path / "cloud.log")
+    workers = [_FakeProc(None), _FakeProc(None)]     # both still running
+    with pytest.raises(TransportError, match="cloud service exited"):
+        _wait_workers(workers, cloud, timeout_s=5.0, wd=tmp_path,
+                      poll_s=0.01)
+
+
+def test_wait_workers_raises_on_worker_failure(tmp_path):
+    from repro.net.launcher import _wait_workers
+
+    cloud = SimpleNamespace(proc=_FakeProc(None),
+                            log_path=tmp_path / "cloud.log")
+    workers = [_FakeProc(0), _FakeProc(None, 3)]
+    with pytest.raises(TransportError, match="worker 1 exited with 3"):
+        _wait_workers(workers, cloud, timeout_s=5.0, wd=tmp_path,
+                      poll_s=0.01)
+
+
+def test_wait_workers_times_out(tmp_path):
+    from repro.net.launcher import _wait_workers
+
+    cloud = SimpleNamespace(proc=_FakeProc(None),
+                            log_path=tmp_path / "cloud.log")
+    with pytest.raises(TransportError, match="still running after"):
+        _wait_workers([_FakeProc(None)], cloud, timeout_s=0.05, wd=tmp_path,
+                      poll_s=0.01)
+
+
+# ---------------------------------------------------------------------------
+# real engine behind a chaos proxy (reduced model, in-process service)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def dense_service():
+    from repro.core import split_model
+    from repro.net.service import CloudService
+    from repro.serving import CloudServer
+
+    cfg, _, params = reduced_model(ARCH)
+    split = split_model(cfg, params)
+    server = CloudServer(split, n_slots=4, max_len=64, max_batch_tokens=128,
+                         wire_codec="fp16")
+    svc = CloudService(server)
+    host, port = svc.start()
+    yield cfg, split, svc, host, port
+    svc.stop()
+
+
+def _make_client(split, transport, *, adapter=None, max_len=64,
+                 wire_codec="fp16"):
+    from repro.serving import DeviceClient
+
+    return DeviceClient(split, transport, adapter_params=adapter,
+                        sd="draft" if adapter is not None else None,
+                        max_len=max_len, wire_codec=wire_codec,
+                        fixed_chunk=16, dynamic_chunks=False)
+
+
+def _loopback_tokens(split, prompt, n, *, req_id, adapter=None, max_len=64,
+                     wire_codec="fp16", n_slots=4):
+    """The fault-free reference run, entirely in-process."""
+    from repro.serving import CloudServer, LoopbackTransport
+
+    server = CloudServer(split, n_slots=n_slots, max_len=max_len,
+                         max_batch_tokens=128, wire_codec=wire_codec)
+    client = _make_client(split, LoopbackTransport(server), adapter=adapter,
+                          max_len=max_len, wire_codec=wire_codec)
+    return list(client.generate(prompt, max_new_tokens=n, req_id=req_id))
+
+
+def _through_proxy(cfg, host, port, schedule, **kw):
+    from repro.net.transport import SocketTransport
+
+    proxy = ChaosProxy(host, port, schedule=schedule)
+    phost, pport = proxy.start()
+    kw.setdefault("retry", RetryPolicy(max_attempts=6, base_s=0.02, seed=1))
+    t = SocketTransport(phost, pport, d_model=cfg.d_model,
+                        recv_timeout_s=60.0, **kw)
+    return proxy, t
+
+
+def test_drop_during_prefill_resumes_with_token_parity(dense_service):
+    """Connection dies on the 2nd prefill chunk: the device must
+    reconnect, resume via watermark, replay only the unprocessed uplink,
+    and the token stream must match the fault-free run exactly."""
+    cfg, split, svc, host, port = dense_service
+    prompt = np.random.default_rng(0).integers(
+        3, cfg.vocab_size, 24).astype(np.int32)      # 2 chunks of 16 + 8
+    proxy, t = _through_proxy(
+        cfg, host, port, {0: [FaultEvent("drop", at_hop=1, direction="up")]})
+    try:
+        client = _make_client(split, t)
+        got = list(client.generate(prompt, max_new_tokens=3, req_id=101))
+        t.shutdown()
+    finally:
+        proxy.stop()
+    assert t.reconnects == 1
+    assert t.replayed_frames >= 1
+    assert [f["kind"] for f in proxy.faults] == ["drop"]
+    assert got == _loopback_tokens(split, prompt, 3, req_id=101)
+    assert len(got) == 3
+
+
+def test_drop_on_downlink_replays_buffered_frame(dense_service):
+    """Connection dies while the deep result is in flight cloud->device:
+    the resume re-sends the buffered downlink frame — no token is lost,
+    none is double-counted."""
+    cfg, split, svc, host, port = dense_service
+    prompt = np.random.default_rng(1).integers(
+        3, cfg.vocab_size, 16).astype(np.int32)
+    before = svc.frames_replayed
+    proxy, t = _through_proxy(
+        cfg, host, port, {0: [FaultEvent("drop", at_hop=0, direction="down")]})
+    try:
+        client = _make_client(split, t)
+        got = list(client.generate(prompt, max_new_tokens=3, req_id=102))
+        t.shutdown()
+    finally:
+        proxy.stop()
+    assert t.reconnects == 1
+    assert svc.frames_replayed > before              # cloud-side replay
+    assert got == _loopback_tokens(split, prompt, 3, req_id=102)
+
+
+def test_dup_and_delay_are_absorbed(dense_service):
+    """Duplicated frames (both directions) and a delayed frame must be
+    invisible to the token stream: watermark dedupe, not a double-step."""
+    cfg, split, svc, host, port = dense_service
+    prompt = np.random.default_rng(2).integers(
+        3, cfg.vocab_size, 16).astype(np.int32)
+    dup_before = svc.dup_frames_dropped
+    proxy, t = _through_proxy(cfg, host, port, {0: [
+        FaultEvent("dup", at_hop=0, direction="up"),
+        FaultEvent("dup", at_hop=0, direction="down"),
+        FaultEvent("delay", at_hop=1, direction="up", delay_s=0.05),
+    ]})
+    try:
+        client = _make_client(split, t)
+        got = list(client.generate(prompt, max_new_tokens=3, req_id=103))
+        t.shutdown()
+    finally:
+        proxy.stop()
+    assert t.reconnects == 0                         # nothing dropped
+    assert svc.dup_frames_dropped > dup_before       # uplink dup eaten
+    assert t.dup_frames_dropped >= 1                 # downlink dup eaten
+    assert len(proxy.faults) == 3
+    assert got == _loopback_tokens(split, prompt, 3, req_id=103)
+
+
+def test_drop_during_verify_strip_ssm_arch():
+    """Mid-decode drop on an SSM arch with adapter drafting: the verify
+    strip is replayed against the slot's surviving recurrent state (the
+    SSM state never crossed the wire), so tokens stay byte-identical."""
+    import jax
+
+    from repro.core import init_adapter, split_model
+    from repro.net.service import CloudService
+    from repro.serving import CloudServer
+
+    cfg, _, params = reduced_model(SSM_ARCH)
+    split = split_model(cfg, params)
+    adapter, _ = init_adapter(cfg, jax.random.PRNGKey(3))
+    prompt = np.random.default_rng(3).integers(
+        3, cfg.vocab_size, 16).astype(np.int32)      # 1 prefill chunk
+
+    server = CloudServer(split, n_slots=2, max_len=128, max_batch_tokens=128,
+                         wire_codec="fp32")
+    svc = CloudService(server)
+    host, port = svc.start()
+    # up hop 0 is the prefill chunk; hop 1 is the first verify strip
+    proxy, t = _through_proxy(
+        cfg, host, port, {0: [FaultEvent("drop", at_hop=1, direction="up")]})
+    try:
+        client = _make_client(split, t, adapter=adapter, max_len=128,
+                              wire_codec="fp32")
+        got = list(client.generate(prompt, max_new_tokens=8, req_id=104))
+        t.shutdown()
+    finally:
+        proxy.stop()
+        svc.stop()
+    assert t.reconnects == 1
+    assert [f["kind"] for f in proxy.faults] == ["drop"]
+    assert got == _loopback_tokens(split, prompt, 8, req_id=104,
+                                   adapter=adapter, max_len=128,
+                                   wire_codec="fp32", n_slots=2)
+    assert len(got) == 8
+
+
+def test_retry_disabled_first_drop_is_fatal(dense_service):
+    """max_attempts=0 restores the pre-v2 contract: the drop surfaces as
+    a TransportError instead of a silent reconnect."""
+    cfg, split, svc, host, port = dense_service
+    prompt = np.random.default_rng(4).integers(
+        3, cfg.vocab_size, 16).astype(np.int32)
+    proxy, t = _through_proxy(
+        cfg, host, port, {0: [FaultEvent("drop", at_hop=0, direction="up")]},
+        retry=RetryPolicy(max_attempts=0))
+    try:
+        client = _make_client(split, t)
+        with pytest.raises(TransportError):
+            list(client.generate(prompt, max_new_tokens=3, req_id=105))
+    finally:
+        proxy.stop()
+    assert t.reconnects == 0
+
+
+def test_grace_expiry_surfaces_session_lost_with_partial_tokens():
+    """If the device stays away past grace_s the cloud reaps the slot; the
+    resume omits the session and the device gets SessionLostError carrying
+    every token generated before the drop — not a hang, not a crash."""
+    from repro.core import split_model
+    from repro.net.service import CloudService
+    from repro.serving import CloudServer
+
+    cfg, _, params = reduced_model(ARCH)
+    split = split_model(cfg, params)
+    server = CloudServer(split, n_slots=2, max_len=64, max_batch_tokens=128,
+                         wire_codec="fp16")
+    svc = CloudService(server, grace_s=0.05)
+    host, port = svc.start()
+    prompt = np.random.default_rng(5).integers(
+        3, cfg.vocab_size, 16).astype(np.int32)
+    # backoff (~0.4s) far exceeds grace_s: the session is gone on resume.
+    # Up hop 0 = prefill -> 1 token out; hop 2 = 3rd round, so >= 2 tokens
+    # have been emitted when the link dies.
+    proxy, t = _through_proxy(
+        cfg, host, port, {0: [FaultEvent("drop", at_hop=2, direction="up")]},
+        retry=RetryPolicy(max_attempts=3, base_s=0.4, seed=0))
+    got = []
+    try:
+        client = _make_client(split, t)
+        with pytest.raises(SessionLostError) as ei:
+            for tok in client.generate(prompt, max_new_tokens=6, req_id=106):
+                got.append(tok)
+        t.shutdown()
+    finally:
+        proxy.stop()
+        svc.stop()
+    assert ei.value.req_id == 106
+    assert t.reconnects == 1                         # reconnect succeeded...
+    assert ei.value.partial_tokens == got            # ...the session did not
+    assert len(got) >= 2
+    # the partial stream is a prefix of the fault-free one
+    assert got == _loopback_tokens(split, prompt, 6, req_id=106)[:len(got)]
+
+
+def test_fleet_metrics_reconnects_match_fault_schedule(dense_service):
+    """FleetMetrics.summary must report reconnects/replayed_frames
+    consistent with the injected (seeded) fault schedule."""
+    from repro.serving.request import FleetMetrics, Request
+
+    cfg, split, svc, host, port = dense_service
+    prompt = np.random.default_rng(6).integers(
+        3, cfg.vocab_size, 24).astype(np.int32)
+    schedule = seeded_schedule(7, connections=1, drops_per_conn=2, max_hop=1)
+    n_drops = sum(len(v) for v in schedule.values())
+    assert n_drops == 2
+    proxy, t = _through_proxy(cfg, host, port, schedule)
+    try:
+        client = _make_client(split, t)
+        req = Request(req_id=107, device_id=0, arrival_s=t.clock(),
+                      prompt_len=len(prompt), max_new_tokens=3, prompt=prompt)
+        for tok in client.generate(prompt, max_new_tokens=3, req_id=107):
+            req.emit_tokens([tok], t.clock())
+        t.shutdown()
+    finally:
+        proxy.stop()
+    assert len(proxy.faults) == n_drops              # every drop fired
+    # a drop can strike while a recovery replays, folding two drops into
+    # one recovery cycle — reconnects is within [1, n_drops], never more
+    assert 1 <= t.reconnects <= n_drops
+    assert t.replayed_frames >= 1
+
+    m = FleetMetrics()
+    m.add(req)
+    m.record_transport(t)
+    s = m.summary()
+    assert s["reconnects"] == t.reconnects
+    assert s["replayed_frames"] == t.replayed_frames
+    assert s["requests_degraded"] == 0
+    assert req.generated == _loopback_tokens(split, prompt, 3, req_id=107)
+
+
+def test_backpressure_sends_busy_at_inflight_cap():
+    """With a 1-frame in-flight window and a slow step, the 2nd uplink
+    must trigger MSG_BUSY; both frames are still served in order."""
+    from repro.core import split_model
+    from repro.net.service import CloudService
+    from repro.net.transport import SocketTransport
+    from repro.serving import CloudServer
+    from repro.wire import encode_hidden, get_codec
+
+    cfg, _, params = reduced_model(ARCH)
+    split = split_model(cfg, params)
+    server = CloudServer(split, n_slots=4, max_len=64, max_batch_tokens=128,
+                         wire_codec="fp16")
+    svc = CloudService(server, max_inflight_frames=1)
+    # slow the engine step down so the 2nd frame reliably arrives while
+    # the 1st is still in flight (the window fills deterministically)
+    real_step = server.engine.step
+
+    def slow_step():
+        time.sleep(0.3)
+        return real_step()
+
+    server.engine.step = slow_step
+    host, port = svc.start()
+    t = SocketTransport(host, port, d_model=cfg.d_model, recv_timeout_s=60.0)
+    try:
+        codec = get_codec("fp16")
+        for rid in (108, 109):
+            t.open(rid, 8)
+        # both frames back to back: the 2nd hits the reader while the 1st
+        # is still inside the slowed step, so the window is full
+        for rid in (108, 109):
+            t.send(encode_hidden(
+                codec, np.zeros((4, cfg.d_model), np.float32),
+                req_id=rid, offset=0, kind="prefill"))
+        assert t.recv(108, timeout=60.0)             # both still served
+        assert t.recv(109, timeout=60.0)
+        assert t.busy_signals >= 1                   # the cloud pushed back
+        t.close(108)
+        t.close(109)
+        t.shutdown()
+    finally:
+        svc.stop()
+
+
+def test_connection_cap_rejects_with_typed_busy():
+    """Connections past max_connections get a typed ERR_BUSY + close, not
+    a reader thread."""
+    from repro.core import split_model
+    from repro.net.service import CloudService
+    from repro.net.transport import SocketTransport
+    from repro.serving import CloudServer
+
+    cfg, _, params = reduced_model(ARCH)
+    split = split_model(cfg, params)
+    server = CloudServer(split, n_slots=2, max_len=64, max_batch_tokens=128,
+                         wire_codec="fp16")
+    svc = CloudService(server, max_connections=1)
+    host, port = svc.start()
+    t1 = None
+    try:
+        t1 = SocketTransport(host, port, d_model=cfg.d_model)
+        with pytest.raises(ProtocolError, match="connection limit"):
+            SocketTransport(host, port, d_model=cfg.d_model,
+                            recv_timeout_s=5.0)
+        assert svc.conns_rejected == 1
+    finally:
+        if t1 is not None:
+            t1.shutdown()
+        svc.stop()

@@ -166,3 +166,68 @@ def test_net_stream_decoder_oversize_rejected_on_header(length, cap):
     with pytest.raises(ProtocolError):
         dec.feed(header)              # no payload bytes ever buffered
     assert dec.pending_bytes <= len(header)
+
+
+@given(
+    msgs=st.lists(_NET_MSG, min_size=1, max_size=8),
+    cut_frac=st.floats(0.0, 1.0, allow_nan=False),
+)
+@settings(**SETTINGS)
+def test_net_stream_decoder_truncation_never_buffers_unbounded(msgs, cut_frac):
+    """A stream torn mid-header or mid-payload parks bounded bytes (at
+    most one incomplete message) and raises nothing; feeding the rest
+    completes every message."""
+    from repro.net.protocol import HEADER_BYTES, StreamDecoder, encode_msg
+
+    stream = b"".join(encode_msg(t, p) for t, p in msgs)
+    cut = int(cut_frac * len(stream))
+    dec = StreamDecoder(max_message_bytes=1 << 20)
+    got = dec.feed(stream[:cut])                     # truncated: no error
+    assert dec.pending_bytes <= HEADER_BYTES + max(
+        len(p) for _, p in msgs)                     # bounded buffering
+    got += dec.feed(stream[cut:])
+    assert got == msgs
+    assert dec.pending_bytes == 0
+
+
+@given(
+    prev_epoch=st.integers(0, (1 << 32) - 1),
+    sessions=st.lists(
+        st.tuples(st.integers(0, (1 << 32) - 1),
+                  st.integers(0, (1 << 32) - 1),
+                  st.integers(0, (1 << 32) - 1)),
+        max_size=12,
+    ),
+)
+@settings(**SETTINGS)
+def test_net_resume_codec_roundtrip_and_truncation(prev_epoch, sessions):
+    """The v2 resume codecs roundtrip any watermark set, and every torn
+    payload raises a typed ProtocolError (never a struct.error)."""
+    from repro.net.errors import ProtocolError
+    from repro.net.protocol import (
+        decode_resume,
+        decode_resume_ok,
+        encode_resume,
+        encode_resume_ok,
+    )
+
+    payload = encode_resume(prev_epoch, sessions)
+    assert decode_resume(payload) == (prev_epoch, sessions)
+    ok = encode_resume_ok([(r, u) for r, u, _ in sessions])
+    assert decode_resume_ok(ok) == [(r, u) for r, u, _ in sessions]
+    for torn in (payload[:-1], ok[:-1] if ok else b"", b"\x00"):
+        if torn in (payload, ok):
+            continue
+        with pytest.raises(ProtocolError):
+            decode_resume(torn)
+
+
+@given(seq=st.integers(0, (1 << 32) - 1), frame=st.binary(max_size=256))
+@settings(**SETTINGS)
+def test_net_seq_frame_codec_roundtrip(seq, frame):
+    from repro.net.errors import ProtocolError
+    from repro.net.protocol import decode_seq_frame, encode_seq_frame
+
+    assert decode_seq_frame(encode_seq_frame(seq, frame)) == (seq, frame)
+    with pytest.raises(ProtocolError):
+        decode_seq_frame(b"\x00\x01")                # shorter than the seq
