@@ -28,7 +28,10 @@ N device processes on localhost (``repro.net``), measures wall-clock
 TTFT/TBT through actual sockets, replays the identical workload through an
 in-process ``LoopbackTransport``, and asserts the two token streams match
 per request — the measured numbers are only meaningful because the
-computation is provably the same.
+computation is provably the same.  It then sweeps the pipelined uplink
+window (``net_tcp_pipelined_d{depth}`` rows, ``--net-pipeline-depths``):
+long-prompt TTFT per depth, token parity across depths, and — fault-free —
+the bar that some depth>1 beats the sequential (depth 1) baseline.
 
     PYTHONPATH=src python benchmarks/bench_engine.py            # full sweep
     PYTHONPATH=src python benchmarks/bench_engine.py --smoke    # CI smoke
@@ -257,6 +260,8 @@ def _net_bench(args) -> None:
             f"requests_degraded={result['requests_degraded']};"
             f"parity_held_under_faults=True",
         )
+    pipelined_rows = _net_pipelined_bench(args)
+
     with open(args.json, "w") as f:
         json.dump({
             "mode": "net-tcp",
@@ -273,7 +278,114 @@ def _net_bench(args) -> None:
             "requests_degraded": result["requests_degraded"],
             "chaos_faults": len(result["chaos_faults"]),
             "merged_trace": result["merged_trace"],
+            "pipelined": pipelined_rows,
         }, f, indent=1)
+
+
+def _net_pipelined_bench(args) -> list:
+    """TTFT vs uplink window depth on long prompts over real sockets.
+
+    One cluster run per depth in ``--net-pipeline-depths``; depth 1 is the
+    strictly-sequential baseline (one chunk in flight, ack-gated), deeper
+    windows overlap uploads with cloud processing.  The chaos proxy shapes
+    the uplink with a constant per-frame propagation delay
+    (``--net-link-delay``): localhost transfer is microseconds, so without
+    real link latency there is nothing for the window to hide — and the
+    delay must exceed the per-chunk shallow compute time (~0.4 s un-jitted
+    on CPU), which overlaps the link even at depth 1.  The comparison metric is **warm**
+    TTFT — each worker's first request pays the cloud's one-time jit
+    compiles and is excluded.  Token streams must be identical across
+    depths — the windows reorder *waiting*, never computation — and with
+    ``--net-chaos-drops`` each run must also survive seeded connection
+    drops with parity intact.  Drop-free runs enforce the tentpole bar:
+    best depth>1 warm TTFT < depth-1 warm TTFT."""
+    from repro.net import run_cluster
+
+    depths = [int(d) for d in args.net_pipeline_depths.split(",") if d.strip()]
+    if not depths:
+        return []
+    prompt_len = 64 if args.smoke else 128   # long prompts: 4 / 8 chunks
+    new_tokens = 3
+    rows, tokens_by_depth, warm_by_depth = [], {}, {}
+    for depth in depths:
+        chaos_schedule = None
+        if args.net_chaos_drops:
+            from repro.net import seeded_schedule
+
+            chaos_schedule = seeded_schedule(
+                args.net_chaos_seed, connections=1,
+                drops_per_conn=args.net_chaos_drops,
+            )
+        result = run_cluster(
+            args.arch, n_devices=1, requests_per_device=3,
+            prompt_len=prompt_len, new_tokens=new_tokens, max_len=256,
+            wire_codec="fp16", seed=0, pipeline_depth=depth,
+            link_delay_s=args.net_link_delay,
+            chaos_schedule=chaos_schedule, trace=False,
+        )
+        toks = {
+            r["req_id"]: list(r["tokens"])
+            for w in result["workers"] for r in w["requests"]
+        }
+        tokens_by_depth[depth] = toks
+        # warm TTFT: drop each worker's first request (one-time compiles)
+        warm = [
+            r["ttft_s"] for w in result["workers"]
+            for r in w["requests"][1:] if r["ttft_s"] is not None
+        ]
+        warm_ms = float(np.mean(warm)) * 1e3 if warm else float("nan")
+        warm_by_depth[depth] = warm_ms
+        rows.append({
+            "depth": depth,
+            "prompt_len": prompt_len,
+            "link_delay_s": args.net_link_delay,
+            "ttft_warm_ms": warm_ms,
+            "ttft_mean_ms": result["ttft_mean_ms"],
+            "ttft_p90_ms": result["ttft_p90_ms"],
+            "tbt_mean_ms": result["tbt_mean_ms"],
+            "reconnects": result["reconnects"],
+            "replayed_frames": result["replayed_frames"],
+            "requests_degraded": result["requests_degraded"],
+            "chaos_faults": len(result["chaos_faults"]),
+        })
+        emit(
+            f"net_tcp_pipelined_d{depth}", warm_ms * 1e3,  # us
+            f"ttft_warm_ms={warm_ms:.1f};ttft_mean_ms="
+            f"{result['ttft_mean_ms']:.1f};prompt_len={prompt_len};"
+            f"link_delay_s={args.net_link_delay};"
+            f"reconnects={result['reconnects']};"
+            f"faults={len(result['chaos_faults'])}",
+        )
+        if chaos_schedule is not None and result["reconnects"] < 1:
+            raise SystemExit(
+                f"pipelined depth {depth}: chaos schedule injected "
+                f"{len(result['chaos_faults'])} faults but no reconnect"
+            )
+
+    base = tokens_by_depth[depths[0]]
+    for depth in depths[1:]:
+        if tokens_by_depth[depth] != base:
+            raise SystemExit(
+                f"pipelined token parity broken: depth {depth} streams "
+                f"diverge from depth {depths[0]}"
+            )
+    deeper = [d for d in depths if d > 1]
+    if 1 in depths and deeper and not args.net_chaos_drops:
+        best = min(warm_by_depth[d] for d in deeper)
+        if not (best < warm_by_depth[1]):
+            raise SystemExit(
+                f"pipelined uplink did not beat sequential: best depth>1 "
+                f"warm TTFT {best:.1f}ms >= depth-1 warm TTFT "
+                f"{warm_by_depth[1]:.1f}ms"
+            )
+        emit("net_tcp_pipelined_speedup", 0.0,
+             f"{warm_by_depth[1] / best:.2f}x warm TTFT over sequential "
+             f"(depth 1) on {prompt_len}-token prompts at "
+             f"{args.net_link_delay * 1e3:.0f}ms/frame uplink")
+    emit("net_tcp_pipelined_parity", 0.0,
+         f"{len(base)} requests byte-identical across depths {depths}"
+         + (";under_chaos=True" if args.net_chaos_drops else ""))
+    return rows
 
 
 def main(argv=None) -> None:
@@ -295,6 +407,17 @@ def main(argv=None) -> None:
                          "still asserted — the run must survive via resume")
     ap.add_argument("--net-chaos-seed", type=int, default=7,
                     help="seed for the chaos drop schedule")
+    ap.add_argument("--net-pipeline-depths", default="1,2,4",
+                    help="with --net: comma list of uplink window depths "
+                         "for the pipelined-prefill rows (depth 1 = "
+                         "sequential baseline; empty string skips)")
+    ap.add_argument("--net-link-delay", type=float, default=0.6,
+                    help="with --net: per-uplink-frame propagation delay "
+                         "(s) the chaos proxy shapes into the pipelined "
+                         "rows — localhost needs real latency for the "
+                         "window to hide, and it must exceed the ~0.4s "
+                         "per-chunk shallow compute that overlaps the "
+                         "link even at depth 1")
     ap.add_argument("--net-workdir", default=None,
                     help="with --net: directory for per-process logs and "
                          "the merged Chrome trace")

@@ -5,6 +5,10 @@ paper-scale request counts; the default sizes finish on one CPU core.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig67 table4
+  PYTHONPATH=src python -m benchmarks.run --list     # what exists & why
+
+See docs/BENCHMARKS.md for the catalogue, the JSON anchor schema and
+which of these run in CI.
 """
 from __future__ import annotations
 
@@ -15,26 +19,57 @@ import traceback
 
 sys.path.insert(0, os.path.dirname(__file__))
 
+# (key, module, paper anchor, one-line description)
 MODULES = [
-    ("fig1", "bench_fig1_preliminary"),
-    ("fig67", "bench_fig67_rates"),
-    ("fig8", "bench_fig8_stability"),
-    ("fig910", "bench_fig910_sla"),
-    ("table4", "bench_table4_sd"),
-    ("table5", "bench_table5_ablation"),
-    ("fig1112", "bench_fig1112_pipeline"),
-    ("wire", "bench_wire"),
-    ("engine", "bench_engine"),
-    ("kernels", "bench_kernels"),
-    ("roofline", "bench_roofline"),
+    ("fig1", "bench_fig1_preliminary", "Fig. 1",
+     "preliminary: delay decomposition, U-shaped TTFT vs prompt length, "
+     "chunking trade-off"),
+    ("fig67", "bench_fig67_rates", "Figs. 6-7",
+     "fleet TTFT/TBT vs request rate, 4 frameworks, 30 devices"),
+    ("fig8", "bench_fig8_stability", "Fig. 8",
+     "per-pipeline-stage compute delay mean±std (chunking stability)"),
+    ("fig910", "bench_fig910_sla", "Figs. 9-10",
+     "prefill/decode SLA compliance rates"),
+    ("table4", "bench_table4_sd", "Table 4",
+     "speculative decoding with REAL trained models (adapter Λ + Medusa)"),
+    ("table5", "bench_table5_ablation", "Table 5",
+     "SD / PC / PD strategy ablation grid"),
+    ("fig1112", "bench_fig1112_pipeline", "Figs. 11-12",
+     "effect of cloud pipeline length (1/2/4/8)"),
+    ("wire", "bench_wire", "§3.3 wire",
+     "codec × uplink-rate sweep; int8 ≥25% TTFT cut anchor"),
+    ("engine", "bench_engine", "§4 serving",
+     "CloudEngine vs simulator; --net tcp adds measured-socket + "
+     "pipelined-uplink rows"),
+    ("kernels", "bench_kernels", "impl",
+     "Pallas(interpret) vs jnp-oracle timings + allclose deltas"),
+    ("roofline", "bench_roofline", "deliverable g",
+     "roofline terms per arch×shape×mesh from reports/dryrun/*.json"),
 ]
 
 
+def list_modules() -> None:
+    """Print the catalogue: key, paper figure/table, what it measures."""
+    wk = max(len(k) for k, *_ in MODULES)
+    wp = max(len(p) for _, _, p, _ in MODULES)
+    for key, modname, paper, desc in MODULES:
+        print(f"{key:<{wk}}  {paper:<{wp}}  {desc}  [{modname}]")
+
+
 def main() -> None:
-    want = set(sys.argv[1:])
+    argv = sys.argv[1:]
+    if "--list" in argv or "-l" in argv:
+        list_modules()
+        return
+    want = set(argv)
+    unknown = want - {k for k, *_ in MODULES}
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark key(s) {sorted(unknown)}; "
+            f"run with --list to see what exists")
     print("name,us_per_call,derived")
     failures = []
-    for key, modname in MODULES:
+    for key, modname, _paper, _desc in MODULES:
         if want and key not in want:
             continue
         t0 = time.time()

@@ -65,6 +65,83 @@ def optimal_chunk_size(
     return max(align, (x // align) * align)
 
 
+def pipelined_prefill_time(
+    chunks: List[int],
+    *,
+    up_time: Callable[[int], float],
+    step_time: Callable[[int], float],
+    pipeline_depth: int = 0,
+) -> float:
+    """Completion time (seconds) of a chunk plan under uplink/compute
+    overlap — the §4.2 delay model *with* transmission/processing
+    parallelism instead of the bubble-free fixed point.
+
+    Chunk ``i`` uploads as soon as the link is free (sends serialize) and,
+    with ``pipeline_depth`` > 0, no earlier than chunk ``i-depth``'s
+    processing finishes (the sender's bounded window); the cloud processes
+    chunks in order, each starting at ``max(upload done, previous chunk
+    done)``.  ``pipeline_depth=0`` models the unbounded streaming window.
+    Returns the last chunk's processing-finish time; downlink + head are
+    plan-independent constants and excluded."""
+    finish = 0.0                      # cloud finish time of the previous chunk
+    finishes: List[float] = []
+    link_free = 0.0
+    for i, c in enumerate(chunks):
+        send_at = link_free
+        if pipeline_depth > 0 and i >= pipeline_depth:
+            send_at = max(send_at, finishes[i - pipeline_depth])
+        uploaded = send_at + up_time(c)
+        finish = max(uploaded, finish) + step_time(c)
+        finishes.append(finish)
+        link_free = uploaded
+    return finish
+
+
+def optimal_chunk_size_pipelined(
+    *,
+    prompt_len: int,
+    hidden_bytes_per_token: float,
+    beta_up: float,
+    g: Callable[[float], float],
+    mu: float,
+    pipeline_len: int = 1,
+    pipeline_depth: int = 1,
+    min_chunk: int = 32,
+    max_chunk: int = 4096,
+    align: int = 8,
+    cold_start_chunk: int = 128,
+) -> int:
+    """Pick the chunk size minimizing :func:`pipelined_prefill_time`.
+
+    Eq. (3)'s fixed point balances *one* chunk's upload against its
+    compute; with a bounded in-flight window the right objective is the
+    whole plan's overlapped completion time, which this minimizes by
+    direct search over aligned candidate sizes (the candidate set is tiny
+    — O(max_chunk / align) — and each evaluation is O(n_chunks)).  Ties
+    prefer the larger size: fewer frames, same finish time."""
+    if g(1) <= 0.0:
+        return min(cold_start_chunk, max(prompt_len, min_chunk))
+    A, P = hidden_bytes_per_token, max(pipeline_len, 1)
+
+    def up(x: int) -> float:
+        return x * A / max(beta_up, 1e-9)
+
+    def step(x: int) -> float:
+        return (g(mu) + g(mu + x)) / P
+
+    hi = min(max_chunk, max(prompt_len, min_chunk))
+    lo = max(align, (min_chunk // align) * align)
+    best_x, best_t = hi, float("inf")
+    for x in range(lo, hi + 1, align):
+        t = pipelined_prefill_time(
+            chunk_prompt(prompt_len, x),
+            up_time=up, step_time=step, pipeline_depth=pipeline_depth,
+        )
+        if t < best_t - 1e-12 or (abs(t - best_t) <= 1e-12 and x > best_x):
+            best_x, best_t = x, t
+    return max(align, min(best_x, max(prompt_len, align)))
+
+
 def plan_chunks(
     prompt_len: int,
     *,
@@ -76,13 +153,16 @@ def plan_chunks(
     g: "Callable[[float], float] | None" = None,
     mu: float = 64.0,
     pipeline_len: int = 1,
+    pipeline_depth: int = 0,
 ) -> List[int]:
     """Framework-aware chunk plan for one prompt (shared by the simulator
     and the session-API DeviceClient so both speak the same Eq. 3).
 
     * ``pc="device"`` + ``dynamic_chunks``: HAT — solve Eq. (3) with the
       monitored link/workload state (falls back to ``fixed_chunk`` before
-      any workload observations exist, i.e. ``g`` is None or cold).
+      any workload observations exist, i.e. ``g`` is None or cold).  With
+      ``pipeline_depth`` > 0 the solver switches to the windowed-overlap
+      objective (:func:`optimal_chunk_size_pipelined`).
     * ``pc="device"`` or ``pc="server"`` without dynamics: Sarathi-style
       fixed chunks.
     * ``pc=None``: one bulk chunk (plain U-shape).
@@ -90,12 +170,21 @@ def plan_chunks(
     if pc is None:
         return [prompt_len]
     if pc == "device" and dynamic_chunks and g is not None:
-        x = optimal_chunk_size(
-            prompt_len=prompt_len,
-            hidden_bytes_per_token=hidden_bytes_per_token,
-            beta_up=beta_up, g=g, mu=mu, pipeline_len=pipeline_len,
-            cold_start_chunk=fixed_chunk,
-        )
+        if pipeline_depth > 0:
+            x = optimal_chunk_size_pipelined(
+                prompt_len=prompt_len,
+                hidden_bytes_per_token=hidden_bytes_per_token,
+                beta_up=beta_up, g=g, mu=mu, pipeline_len=pipeline_len,
+                pipeline_depth=pipeline_depth,
+                cold_start_chunk=fixed_chunk,
+            )
+        else:
+            x = optimal_chunk_size(
+                prompt_len=prompt_len,
+                hidden_bytes_per_token=hidden_bytes_per_token,
+                beta_up=beta_up, g=g, mu=mu, pipeline_len=pipeline_len,
+                cold_start_chunk=fixed_chunk,
+            )
     else:
         x = fixed_chunk
     return chunk_prompt(prompt_len, x)

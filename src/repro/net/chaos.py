@@ -30,6 +30,7 @@ Standalone (the CI chaos-smoke job uses this through the launcher)::
 from __future__ import annotations
 
 import argparse
+import queue
 import random
 import socket
 import threading
@@ -119,6 +120,49 @@ class _Pair:
                 pass
 
 
+class _DelayedSender:
+    """Order-preserving delayed delivery for one proxied direction.
+
+    Each queued message is sent no earlier than its deadline; deadlines
+    are forced monotonic so the byte order of the TCP stream is
+    preserved.  Because the forwarding thread keeps parsing while
+    earlier messages wait here, many frames can be "in flight" at once —
+    propagation delay, not serialization."""
+
+    def __init__(self, pair: _Pair, dst: socket.socket):
+        self.pair = pair
+        self.dst = dst
+        self._q: "queue.Queue" = queue.Queue()
+        self._last_deadline = 0.0
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name="chaos-delay-send")
+        self.thread.start()
+
+    def put(self, data: bytes, delay_s: float) -> None:
+        deadline = time.monotonic() + delay_s
+        self._last_deadline = max(self._last_deadline, deadline)
+        self._q.put((self._last_deadline, data))
+
+    def kill_after_drain(self) -> None:
+        """Deliver everything queued so far, then kill the pair."""
+        self._q.put((self._last_deadline, None))
+
+    def _run(self) -> None:
+        while True:
+            deadline, data = self._q.get()
+            if data is None:
+                self.pair.kill()
+                return
+            wait = deadline - time.monotonic()
+            if wait > 0:
+                time.sleep(wait)
+            try:
+                self.dst.sendall(data)
+            except OSError:
+                self.pair.kill()
+                return
+
+
 class ChaosProxy:
     """Fault-injecting TCP proxy in front of a ``CloudService``.
 
@@ -133,12 +177,24 @@ class ChaosProxy:
         upstream_port: int,
         *,
         schedule: Optional[Dict[int, List[FaultEvent]]] = None,
+        up_frame_delay_s: float = 0.0,
+        down_frame_delay_s: float = 0.0,
         host: str = "127.0.0.1",
         port: int = 0,
         tracer: Optional[Tracer] = None,
     ):
         self.upstream_host = upstream_host
         self.upstream_port = upstream_port
+        # link shaping: a constant per-MSG_FRAME propagation delay per
+        # direction (seconds).  Each frame is *delivered* delay_s after it
+        # arrives at the proxy, but many frames can be in flight at once
+        # (an order-preserving delivery queue, not a sleep in the
+        # forwarding thread) — so this models WAN latency, which a
+        # pipelined sender can hide, not link bandwidth, which it cannot.
+        # Control messages (acks, busy/ready, pings) are never delayed,
+        # though stream order is always preserved.
+        self.up_frame_delay_s = up_frame_delay_s
+        self.down_frame_delay_s = down_frame_delay_s
         self.schedule = {k: list(v) for k, v in (schedule or {}).items()}
         self.host = host
         self.port = port
@@ -153,6 +209,8 @@ class ChaosProxy:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> Tuple[str, int]:
+        """Bind + start accepting; returns the (host, port) devices should
+        connect to (ephemeral port resolved)."""
         ls = socket.create_server((self.host, self.port))
         ls.settimeout(_ACCEPT_POLL_S)
         self._listener = ls
@@ -164,6 +222,8 @@ class ChaosProxy:
         return self.host, self.port
 
     def stop(self) -> None:
+        """Kill every proxied connection and join the forwarding threads
+        (blocks up to ~5 s per thread)."""
         self._stop.set()
         if self._listener is not None:
             self._listener.close()
@@ -209,6 +269,25 @@ class ChaosProxy:
                  src: socket.socket, dst: socket.socket) -> None:
         decoder = P.StreamDecoder()
         hop = 0
+        base = (self.up_frame_delay_s if direction == "up"
+                else self.down_frame_delay_s)
+        sender = _DelayedSender(pair, dst) if base > 0.0 else None
+
+        def emit(data: bytes, delay_s: float) -> None:
+            if sender is not None:
+                sender.put(data, delay_s)
+            elif delay_s > 0.0:
+                time.sleep(delay_s)
+                dst.sendall(data)
+            else:
+                dst.sendall(data)
+
+        def kill() -> None:
+            if sender is not None:
+                sender.kill_after_drain()     # in-flight frames deliver
+            else:
+                pair.kill()
+
         src.settimeout(_ACCEPT_POLL_S)
         try:
             while not self._stop.is_set() and not pair.closed:
@@ -223,31 +302,30 @@ class ChaosProxy:
                 for mtype, payload in decoder.feed(chunk):
                     data = P.encode_msg(mtype, payload)
                     if mtype != P.MSG_FRAME:
-                        dst.sendall(data)
+                        emit(data, 0.0)       # order kept, never delayed
                         continue
                     event = self._pop_event(pair, direction, hop)
                     hop += 1
                     if event is None:
-                        dst.sendall(data)
+                        emit(data, base)
                     elif event.kind == KIND_DELAY:
-                        time.sleep(event.delay_s)
-                        dst.sendall(data)
+                        emit(data, base + event.delay_s)
                     elif event.kind == KIND_DUP:
-                        dst.sendall(data)
-                        dst.sendall(data)
+                        emit(data, base)
+                        emit(data, base)
                     elif event.kind == KIND_TRUNCATE:
-                        dst.sendall(data[: max(len(data) // 2, 1)])
-                        pair.kill()
+                        emit(data[: max(len(data) // 2, 1)], base)
+                        kill()
                         return
                     elif event.kind == KIND_DROP:
-                        pair.kill()
+                        kill()
                         return
                     else:
-                        dst.sendall(data)
+                        emit(data, base)
         except OSError:
             pass
         finally:
-            pair.kill()
+            kill()
 
     def _pop_event(self, pair: _Pair, direction: str,
                    hop: int) -> Optional[FaultEvent]:
@@ -294,6 +372,8 @@ class FaultyTransport:
         self.faults: List[dict] = []
 
     def send(self, data: bytes) -> None:
+        """Delegate to the wrapped transport, raising
+        :class:`TransportClosed` / sleeping at scheduled send indices."""
         idx = self.sends
         self.sends += 1
         if idx in self.delay_sends:
@@ -304,6 +384,8 @@ class FaultyTransport:
         self.inner.send(data)
 
     def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
+        """Delegate to the wrapped transport, raising
+        :class:`TransportClosed` / sleeping at scheduled recv indices."""
         idx = self.recvs
         self.recvs += 1
         if idx in self.delay_recvs:
@@ -323,6 +405,8 @@ class FaultyTransport:
 
 
 def main(argv=None) -> int:
+    """Run a standalone seeded-drop proxy until interrupted (the CLI
+    entry point; prints a grep-able listen line like the service)."""
     ap = argparse.ArgumentParser(
         description="fault-injecting TCP proxy for repro.net")
     ap.add_argument("--upstream", required=True, help="HOST:PORT of the cloud")

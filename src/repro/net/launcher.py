@@ -141,6 +141,7 @@ def spawn_worker(
     wire_codec: str = "fp16",
     draft: bool = False,
     seed: int = 0,
+    pipeline_depth: int = 0,
     trace: bool = True,
 ) -> subprocess.Popen:
     out = workdir / f"dev{device_index}.json"
@@ -151,6 +152,7 @@ def spawn_worker(
         "--requests", str(requests), "--prompt-len", str(prompt_len),
         "--new-tokens", str(new_tokens), "--max-len", str(max_len),
         "--wire-codec", wire_codec, "--seed", str(seed),
+        "--pipeline-depth", str(pipeline_depth),
         "--out", str(out),
     ]
     if draft:
@@ -237,6 +239,8 @@ def run_cluster(
     wire_codec: str = "fp16",
     draft: bool = False,
     seed: int = 0,
+    pipeline_depth: int = 0,
+    link_delay_s: float = 0.0,
     workdir: Optional[str] = None,
     trace: bool = True,
     worker_timeout_s: float = 600.0,
@@ -250,7 +254,12 @@ def run_cluster(
 
     ``chaos_schedule`` (connection index -> ``[FaultEvent, ...]``, see
     :mod:`repro.net.chaos`) interposes a fault-injecting proxy between
-    the workers and the cloud; the result gains ``chaos_faults``."""
+    the workers and the cloud; the result gains ``chaos_faults``.
+    ``link_delay_s`` > 0 interposes the same proxy as a link shaper:
+    every uplink ``MSG_FRAME`` is delivered ``link_delay_s`` seconds
+    after it arrives at the proxy (propagation delay — frames may be in
+    flight concurrently), giving localhost a deterministic WAN-like
+    uplink latency that a pipelined device can hide."""
     if workdir is None:
         import tempfile
 
@@ -265,10 +274,11 @@ def run_cluster(
     )
     proxy = None
     connect_host, connect_port = cloud.host, cloud.port
-    if chaos_schedule is not None:
+    if chaos_schedule is not None or link_delay_s > 0.0:
         from .chaos import ChaosProxy
 
-        proxy = ChaosProxy(cloud.host, cloud.port, schedule=chaos_schedule)
+        proxy = ChaosProxy(cloud.host, cloud.port, schedule=chaos_schedule,
+                           up_frame_delay_s=link_delay_s)
         connect_host, connect_port = proxy.start()
     workers: List[subprocess.Popen] = []
     try:
@@ -277,7 +287,8 @@ def run_cluster(
                 i, host=connect_host, port=connect_port, arch=arch,
                 workdir=wd, requests=requests_per_device,
                 prompt_len=prompt_len, new_tokens=new_tokens, max_len=max_len,
-                wire_codec=wire_codec, draft=draft, seed=seed, trace=trace,
+                wire_codec=wire_codec, draft=draft, seed=seed,
+                pipeline_depth=pipeline_depth, trace=trace,
             ))
         _wait_workers(workers, cloud, worker_timeout_s, wd)
     finally:
@@ -302,6 +313,7 @@ def run_cluster(
         "port": cloud.port,
         "cloud_returncode": cloud_rc,
         "n_devices": n_devices,
+        "pipeline_depth": pipeline_depth,
         "workers": results,
         "n_requests": len(reqs),
         "ttft_mean_ms": float(ttfts.mean() * 1e3) if len(ttfts) else None,

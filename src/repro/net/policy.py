@@ -41,6 +41,7 @@ class RetryPolicy:
     seed: int = 0
 
     def rng(self) -> random.Random:
+        """A fresh jitter RNG at this policy's seed (deterministic)."""
         return random.Random(self.seed)
 
     def backoff_s(self, attempt: int, rng: Optional[random.Random] = None) -> float:
@@ -71,6 +72,8 @@ class Deadline:
     total_s: Optional[float] = None
 
     def start(self) -> "DeadlineClock":
+        """Start the session clock for ``total_s`` accounting (monotonic,
+        wall seconds)."""
         return DeadlineClock(self)
 
     def op_deadline(self, now: float, timeout: Optional[float] = None) -> float:
@@ -90,9 +93,12 @@ class DeadlineClock:
         self.started_at = time.monotonic()
 
     def total_remaining_s(self) -> float:
+        """Wall seconds left in the session budget (inf = unbounded;
+        negative once overrun).  Never blocks."""
         if self.deadline.total_s is None:
             return float("inf")
         return self.deadline.total_s - (time.monotonic() - self.started_at)
 
     def expired(self) -> bool:
+        """Has the session's total budget run out?  Never blocks."""
         return self.total_remaining_s() <= 0.0

@@ -53,6 +53,12 @@ Message types and payloads:
 ``MSG_BUSY``              ``<I`` inflight count — connection-level push-back:
                           the cloud's reader stopped draining this connection
 ``MSG_READY``             empty — push-back released
+``MSG_FRAME_ACK``         ``<II`` req_id, up_processed — cloud -> device
+                          progress watermark: the engine has consumed the
+                          first ``up_processed`` uplink frames of the session
+                          (a contiguous prefix).  Lets a pipelined device
+                          prune its replay buffer and bound its in-flight
+                          chunk window without waiting for a downlink frame
 ========================  =====================================================
 
 :class:`StreamDecoder` is the receive half: feed it arbitrary byte chunks
@@ -70,7 +76,8 @@ from .errors import ProtocolError
 
 # v2: resume handshake (epoch in hello, MSG_RESUME/-OK), per-session frame
 # sequence numbers on MSG_FRAME, liveness probes, connection push-back
-PROTO_VERSION = 2
+# v3: MSG_FRAME_ACK uplink progress watermarks (pipelined chunk uplink)
+PROTO_VERSION = 3
 MAGIC = b"HN"
 
 MSG_HELLO = 1
@@ -91,6 +98,7 @@ MSG_PING = 15
 MSG_PONG = 16
 MSG_BUSY = 17
 MSG_READY = 18
+MSG_FRAME_ACK = 19
 
 MSG_NAMES = {
     MSG_HELLO: "hello", MSG_HELLO_ACK: "hello_ack",
@@ -102,6 +110,7 @@ MSG_NAMES = {
     MSG_RESUME: "resume", MSG_RESUME_OK: "resume_ok",
     MSG_PING: "ping", MSG_PONG: "pong",
     MSG_BUSY: "busy", MSG_READY: "ready",
+    MSG_FRAME_ACK: "frame_ack",
 }
 
 # typed error codes carried by MSG_ERROR

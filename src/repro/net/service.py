@@ -112,6 +112,7 @@ class _NetSession:
     epoch: int                               # epoch of the owning connection
     conn: Optional[_Conn]
     up_expected: int = 0                     # next uplink seq to process
+    up_processed: int = 0                    # uplink frames the engine stepped
     down_seq: int = 0                        # next downlink seq to assign
     down_buffer: Deque[Tuple[int, bytes]] = field(
         default_factory=lambda: deque(maxlen=_DOWN_BUFFER_FRAMES)
@@ -389,8 +390,17 @@ class CloudService:
                            if s >= down_recv]
                 if pending:
                     replays.append((req_id, pending))
+            acks = [(rid, self._sessions[rid].up_processed)
+                    for rid, _ in accepted]
             self.resumes_served += len(accepted)
         conn.send_msg(P.MSG_RESUME_OK, P.encode_resume_ok(accepted))
+        # re-sync the device's processed watermark: FRAME_ACKs emitted while
+        # the session was detached died with the old connection, and a
+        # pipelined device may be blocked on one before it sends more chunks
+        for rid, processed in acks:
+            if processed > 0:
+                conn.send_msg(P.MSG_FRAME_ACK,
+                              P.encode_u32_pair(rid, processed))
         for req_id, pending in replays:
             for seq, data in pending:
                 conn.send_msg(P.MSG_FRAME, P.encode_seq_frame(
@@ -562,6 +572,7 @@ class CloudService:
             if not engine.queue:
                 continue
             t0 = time.time()
+            acks: List[Tuple[_Conn, int, int]] = []
             with self._lock:
                 if not engine.queue:
                     continue
@@ -569,12 +580,23 @@ class CloudService:
                 info = engine.last_step_info
                 tokens = engine.batched_token_history[-1]
                 for j in info:
+                    n_frames = j.get("n_frames", 1)
                     sess = self._sessions.get(j["req_id"])
                     c = sess.conn if sess is not None else None
+                    if sess is not None:
+                        sess.up_processed += n_frames
+                        if not j["want_deep"] and c is not None:
+                            # no downlink will implicitly ack this chunk:
+                            # tell the pipelined device its window moved
+                            acks.append((c, j["req_id"], sess.up_processed))
                     if c is not None and c.inflight > 0:
-                        c.inflight -= 1
+                        c.inflight = max(0, c.inflight - n_frames)
             with self._work:
                 self._work.notify_all()  # wake backpressure waiters
+            for c, rid, processed in acks:
+                if c.alive:
+                    c.send_msg(P.MSG_FRAME_ACK,
+                               P.encode_u32_pair(rid, processed))
             for c in list(self._conns):
                 if (c.busy_sent and c.alive
                         and c.inflight <= self.max_inflight_frames // 2):
@@ -644,11 +666,15 @@ def build_server(arch: str, *, slots: int, max_len: int,
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     split = split_model(cfg, params)
-    return CloudServer(
+    server = CloudServer(
         split, n_slots=slots, max_len=max_len,
         max_batch_tokens=max_batch_tokens, wire_codec=wire_codec,
         tracer=tracer,
     )
+    # a pipelined device lands several small chunks between pump wakeups;
+    # one merged prefill row per session costs one engine step instead of N
+    server.engine.coalesce_prefill = True
+    return server
 
 
 def main(argv=None) -> int:

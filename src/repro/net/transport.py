@@ -74,6 +74,7 @@ class _SessionState:
 
     up_seq: int = 0                 # next uplink sequence number to assign
     down_expected: int = 0          # next downlink sequence number expected
+    up_acked: int = 0               # uplink frames the cloud has *processed*
     established: bool = False       # OPEN_OK seen (resumable)
     expected_tokens: int = 0
     replay: List[Tuple[int, bytes]] = field(default_factory=list)
@@ -332,6 +333,7 @@ class SocketTransport(Transport):
             # strict request/response per session: a downlink implies the
             # cloud processed every uplink before it — drop the replay log
             st.replay.clear()
+            st.up_acked = st.up_seq
             self.bytes_down += len(data)
             t_arrive = self.clock()
             t_send = frame_t_send(data)
@@ -365,6 +367,14 @@ class SocketTransport(Transport):
                 self.tracer.instant("busy", self.clock(), tid=0)
         elif mtype == P.MSG_READY:
             self._busy = False
+        elif mtype == P.MSG_FRAME_ACK:
+            rid, processed = P.decode_u32_pair(payload)
+            st = self._sessions.get(rid)
+            if st is not None and processed > st.up_acked:
+                st.up_acked = processed
+                # acked frames can never need replay: the engine already
+                # consumed them, so resume's watermark would skip them
+                st.replay = [(s, f) for s, f in st.replay if s >= processed]
         else:
             self._control.append((mtype, payload))
 
@@ -565,6 +575,51 @@ class SocketTransport(Transport):
             remaining = end - time.monotonic()
             if remaining <= 0:
                 raise TransportTimeout("recv", bound, req_id)
+            self._check_liveness()
+            try:
+                self._poll(min(remaining, _POLL_S))
+            except TransportClosed as e:
+                self._recover(e)
+
+    def acked_count(self, req_id: int) -> int:
+        """Uplink frames of ``req_id`` the cloud has *processed* (a
+        contiguous prefix count, from ``MSG_FRAME_ACK`` watermarks and
+        downlink arrivals).  Non-blocking: drains the socket once first."""
+        try:
+            self._poll(0.0)
+        except TransportClosed as e:
+            self._recover(e)
+        st = self._sessions.get(req_id)
+        return st.up_acked if st is not None else 0
+
+    def wait_acked(self, req_id: int, count: int,
+                   timeout: Optional[float] = None) -> int:
+        """Block until the cloud has processed at least ``count`` uplink
+        frames of ``req_id`` (seconds-valued ``timeout`` composes with the
+        transport deadline like :meth:`recv`).  Returns the acked count;
+        raises :class:`TransportTimeout` / :class:`SessionLostError` /
+        :class:`RemoteEngineError` exactly like a blocking ``recv``."""
+        end, bound = self._op_deadline(timeout, self.recv_timeout_s)
+        t_wait = self.clock()
+        waited = False
+        while True:
+            self._raise_if_lost(req_id)
+            self._raise_if_error(req_id)
+            st = self._sessions.get(req_id)
+            acked = st.up_acked if st is not None else 0
+            if acked >= count:
+                if waited:
+                    # time blocked on the ack is cloud residency: the
+                    # engine was consuming our earlier chunks
+                    self.tracer.add_span(
+                        "ack_wait", t_wait, self.clock(), tid=req_id,
+                        phase="cloud_step", count=count,
+                    )
+                return acked
+            waited = True
+            remaining = end - time.monotonic()
+            if remaining <= 0:
+                raise TransportTimeout("wait_acked", bound, req_id)
             self._check_liveness()
             try:
                 self._poll(min(remaining, _POLL_S))

@@ -83,6 +83,7 @@ def run_device_workload(client: DeviceClient, transport: Transport,
 
 def build_client(arch: str, transport: Transport, *, max_len: int,
                  wire_codec: str, draft: bool, seed: int = 0,
+                 pipeline_depth: int = 0,
                  tracer: Optional[Tracer] = None) -> DeviceClient:
     """Deterministic device-side build, mirroring the cloud's
     ``build_server`` (same arch + seed => the same split params)."""
@@ -104,6 +105,7 @@ def build_client(arch: str, transport: Transport, *, max_len: int,
         adapter_params=adapter, sd="draft" if draft else None,
         max_len=max_len, wire_codec=wire_codec,
         fixed_chunk=16, dynamic_chunks=False,
+        pipeline_depth=pipeline_depth,
         tracer=tracer,
     )
 
@@ -122,6 +124,10 @@ def main(argv=None) -> int:
     ap.add_argument("--draft", action="store_true",
                     help="threshold speculative decoding (adapter drafting)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="uplink prefill window: 0 = unbounded streaming, "
+                         "1 = sequential (ack per chunk), D>1 = at most D "
+                         "unprocessed chunks in flight")
     ap.add_argument("--connect-timeout", type=float, default=60.0)
     ap.add_argument("--recv-timeout", type=float, default=120.0,
                     help="per-frame downlink deadline (covers cold-start "
@@ -156,6 +162,7 @@ def main(argv=None) -> int:
     client = build_client(
         args.arch, transport, max_len=args.max_len,
         wire_codec=args.wire_codec, draft=args.draft, seed=args.seed,
+        pipeline_depth=args.pipeline_depth,
         tracer=tracer,
     )
     specs = device_specs(
@@ -172,6 +179,7 @@ def main(argv=None) -> int:
         "device_index": args.device_index,
         "arch": args.arch,
         "wire_codec": args.wire_codec,
+        "pipeline_depth": args.pipeline_depth,
         "wall_s": wall_s,
         "bytes_up": transport.bytes_up,
         "bytes_down": transport.bytes_down,

@@ -219,21 +219,32 @@ class Tracer:
 
         Sums the durations of this tid's phase-attributed spans, clipping
         at ``until`` (pass the request's ``first_token_s`` for the TTFT
-        breakdown).  On the instrumented runtimes the phase spans tile the
-        session clock, so the values sum to the measured latency."""
-        out: Dict[str, float] = {}
+        breakdown).  On the instrumented runtimes the phase spans tile or
+        *cover* the session clock; overlapping spans — pipelined uplink
+        under an in-flight cloud step (``pipeline_depth`` > 1) — are
+        attributed once, to the earliest-starting span, so the values
+        still sum to the measured latency.  Exact for non-overlapping
+        (tiling) spans."""
+        marked: List[TraceEvent] = []
         for ev in self.events:
             if ev.ph != "X" or ev.tid != tid:
                 continue
-            phase = ev.attrs.get("phase")
-            if phase is None:
+            if ev.attrs.get("phase") is None:
                 continue
+            if until is not None and ev.t0_s >= until:
+                continue
+            marked.append(ev)
+        marked.sort(key=lambda ev: (ev.t0_s, ev.t1_s))
+        out: Dict[str, float] = {}
+        cover_end = float("-inf")
+        for ev in marked:
             t0, t1 = ev.t0_s, ev.t1_s
             if until is not None:
-                if t0 >= until:
-                    continue
                 t1 = min(t1, until)
-            out[phase] = out.get(phase, 0.0) + max(t1 - t0, 0.0)
+            contrib = max(0.0, t1 - max(t0, cover_end))
+            phase = ev.attrs["phase"]
+            out[phase] = out.get(phase, 0.0) + contrib
+            cover_end = max(cover_end, t1)
         return out
 
     # --------------------------------------------------------------- export

@@ -133,6 +133,10 @@ class ServeConfig:
     # --- cloud -------------------------------------------------------------
     max_batch_tokens: Optional[int] = 512
     pipeline_len: int = 4
+    # uplink pipelining depth for chunked prefill: 0 = unbounded streaming
+    # (legacy), 1 = strictly sequential (each chunk waits for the previous
+    # chunk's processing ack), D>1 = at most D unprocessed chunks in flight
+    pipeline_depth: int = 0
     # --- robustness --------------------------------------------------------
     # how hard a transport fights a dead connection, and how long one
     # blocking operation may take end to end (reconnects included) —
@@ -151,10 +155,12 @@ class ServeConfig:
     # --------------------------------------------------------- codec facts
     @property
     def codec_name(self) -> str:
+        """The effective wire-codec name (``fp16`` when unset)."""
         return self.wire_codec or "fp16"
 
     @property
     def codec(self):
+        """The resolved :mod:`repro.wire` codec object."""
         return get_codec(self.codec_name)
 
     def configure_backend(self, backend) -> None:
@@ -166,6 +172,9 @@ class ServeConfig:
             backend.set_wire_codec(self.codec)
 
     def to_sim_config(self) -> SimConfig:
+        """Project this run description onto the discrete-event simulator's
+        config (same strategies, chunking, codec, link rates, pipeline
+        depth); drops engine-only knobs like ``n_devices``."""
         return SimConfig(
             sd=self.sd, pc=self.pc, pd=self.pd,
             fixed_chunk=self.fixed_chunk, dynamic_chunks=self.dynamic_chunks,
@@ -174,7 +183,8 @@ class ServeConfig:
             hidden_bytes_per_token=self.hidden_bytes_per_token,
             token_bytes=self.token_bytes,
             uplink_bps=self.uplink_bps, downlink_bps=self.downlink_bps,
-            max_batch_tokens=self.max_batch_tokens, max_sim_s=self.max_sim_s,
+            max_batch_tokens=self.max_batch_tokens,
+            pipeline_depth=self.pipeline_depth, max_sim_s=self.max_sim_s,
         )
 
     # --------------------------------------------- framework constructors
@@ -216,6 +226,9 @@ class ServeConfig:
 
     @classmethod
     def from_framework(cls, name: str, **kw) -> "ServeConfig":
+        """Look up a framework preset by paper name (``hat``, ``u-shape``,
+        ``u-sarathi``, ``u-medusa``); raises :class:`KeyError` on an
+        unknown name.  Explicit ``**kw`` override the preset (ablations)."""
         ctor = {
             "hat": cls.hat, "u-shape": cls.u_shape,
             "u-sarathi": cls.u_sarathi, "u-medusa": cls.u_medusa,
@@ -259,17 +272,23 @@ class CloudServer:
             tracer=tracer,
         )
         self._outbox: Dict[int, deque] = {}
+        self._processed: Dict[int, int] = {}     # req_id -> frames stepped
 
     @property
     def d_model(self) -> int:
+        """Hidden width of the middle submodel (wire-frame negotiation)."""
         return self.engine.d_model
 
     # ------------------------------------------------------------ sessions
     def open_session(self, req_id: int, expected_tokens: int) -> bool:
+        """Admit a session: engine slot + KV budget for ``expected_tokens``.
+        Returns False (no exception) when the cloud cannot admit it."""
         return self.engine.add_request(req_id, expected_tokens)
 
     def close_session(self, req_id: int) -> None:
+        """Release the session: outbox, queued jobs, slot and KV."""
         self._outbox.pop(req_id, None)
+        self._processed.pop(req_id, None)
         self.engine.queue = [j for j in self.engine.queue if j.req_id != req_id]
         if req_id in self.engine.kv.slot_of:
             self.engine.finish_request(req_id)
@@ -291,6 +310,10 @@ class CloudServer:
         results = self.engine.step()
         if not results:
             return 0
+        for j in self.engine.last_step_info:
+            self._processed[j["req_id"]] = (
+                self._processed.get(j["req_id"], 0) + j.get("n_frames", 1)
+            )
         for r in results:
             if r.deep is not None:
                 self._outbox.setdefault(r.req_id, deque()).append(
@@ -307,11 +330,19 @@ class CloudServer:
         """Is a downlink frame parked for ``req_id``?"""
         return bool(self._outbox.get(req_id))
 
+    def processed_count(self, req_id: int) -> int:
+        """Uplink frames of ``req_id`` the engine has stepped so far (the
+        in-process counterpart of the wire's ``MSG_FRAME_ACK`` watermark)."""
+        return self._processed.get(req_id, 0)
+
     # ----------------------------------------------------- control channel
     def snapshot_session(self, req_id: int):
+        """Snapshot the slot's recurrent (SSM) state; returns an opaque
+        cloud-held handle for :meth:`restore_session`."""
         return self.engine.snapshot_slot(req_id)
 
     def restore_session(self, req_id: int, snap) -> None:
+        """Roll the slot's recurrent state back to a snapshot handle."""
         self.engine.restore_slot(req_id, snap)
 
 
@@ -340,12 +371,18 @@ class Transport:
         return time.perf_counter()
 
     def open(self, req_id: int, expected_tokens: int) -> None:
+        """Open a session on the cloud (blocking control round trip).
+        Raises a transport-specific error when the cloud rejects it."""
         raise NotImplementedError
 
     def close(self, req_id: int) -> None:
+        """Release the session on the cloud.  Best-effort, non-blocking
+        on socket transports."""
         raise NotImplementedError
 
     def send(self, data: bytes) -> None:
+        """Push one uplink chunk frame (raw ``repro.wire`` bytes).  May
+        block on connection-level backpressure, never on cloud compute."""
         raise NotImplementedError
 
     def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
@@ -358,13 +395,40 @@ class Transport:
         raise NotImplementedError
 
     def snapshot(self, req_id: int):
+        """Blocking control round trip: snapshot the session's cloud-side
+        recurrent state; returns an opaque handle for :meth:`restore`."""
         raise NotImplementedError
 
     def restore(self, req_id: int, snap) -> None:
+        """Blocking control round trip: roll the session's cloud-side
+        recurrent state back to ``snap``."""
         raise NotImplementedError
 
     def tick(self, seconds: float) -> None:
+        """Report ``seconds`` of local device compute.  Transports that
+        keep a virtual clock advance it; wall-clock transports ignore it.
+        Never blocks."""
         pass
+
+    # ------------------------------------------------- uplink progress acks
+    def acked_count(self, req_id: int) -> int:
+        """How many of the request's uplink frames the cloud has *processed*
+        (a contiguous prefix count).  Non-blocking.
+
+        Transports that cannot observe cloud progress return an effectively
+        infinite count, which makes a pipelined sender's bounded window a
+        no-op — the legacy unbounded-streaming behavior."""
+        return 1 << 62
+
+    def wait_acked(self, req_id: int, count: int,
+                   timeout: Optional[float] = None) -> int:
+        """Block until at least ``count`` uplink frames of ``req_id`` have
+        been processed by the cloud; returns the processed count.
+
+        ``timeout`` is in transport-clock seconds; on expiry transports
+        raise :class:`~repro.net.errors.TransportTimeout`.  The default
+        implementation never blocks (see :meth:`acked_count`)."""
+        return self.acked_count(req_id)
 
 
 class LoopbackTransport(Transport):
@@ -386,18 +450,24 @@ class LoopbackTransport(Transport):
         self._epoch = time.perf_counter()
 
     def clock(self) -> float:
+        """Wall seconds since this transport was constructed."""
         return time.perf_counter() - self._epoch
 
     def open(self, req_id: int, expected_tokens: int) -> None:
+        """Admit the session on the in-process server; raises
+        :class:`RuntimeError` when no slot / KV budget is free."""
         if not self.server.open_session(req_id, expected_tokens):
             raise RuntimeError(
                 f"cloud rejected session {req_id}: no free slot / KV budget"
             )
 
     def close(self, req_id: int) -> None:
+        """Release the session on the in-process server.  Never blocks."""
         self.server.close_session(req_id)
 
     def send(self, data: bytes) -> None:
+        """Hand the frame straight to the server (zero wire latency on
+        plain loopback; timing subclasses advance their clock first)."""
         self.bytes_up += len(data)
         t0 = self.clock()
         attrs = self._on_uplink(data) or {}
@@ -428,6 +498,12 @@ class LoopbackTransport(Transport):
         return data
 
     def recv(self, req_id: int, timeout: Optional[float] = None) -> bytes:
+        """Pump the engine until the request's downlink frame materializes.
+
+        ``timeout`` is in wall seconds; expiry raises
+        :class:`~repro.net.errors.TransportTimeout`, and a pump that can
+        never produce the frame raises
+        :class:`~repro.net.errors.TransportError` (downlink starvation)."""
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             data = self.deliver(req_id)
@@ -441,12 +517,38 @@ class LoopbackTransport(Transport):
                 )
 
     def snapshot(self, req_id: int):
+        """Snapshot the session's cloud-side recurrent state (direct call,
+        no wire)."""
         return self.server.snapshot_session(req_id)
 
     def restore(self, req_id: int, snap) -> None:
+        """Restore the session's cloud-side recurrent state (direct call,
+        no wire)."""
         self.server.restore_session(req_id, snap)
 
-    # ------------------------------------------------- subclass timing hooks
+    def acked_count(self, req_id: int) -> int:
+        """Real processed-frame count from the in-process server (the
+        loopback transport *can* observe cloud progress, so a pipelined
+        sender's window is enforced here too).  Non-blocking."""
+        return self.server.processed_count(req_id)
+
+    def wait_acked(self, req_id: int, count: int,
+                   timeout: Optional[float] = None) -> int:
+        """Pump the engine until ``count`` of the request's uplink frames
+        have been stepped (timing subclasses advance their virtual clock
+        per pump, so the wait costs simulated cloud time)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            acked = self.acked_count(req_id)
+            if acked >= count:
+                return acked
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TransportTimeout("wait_acked", timeout, req_id)
+            if self._pump(req_id) == 0:
+                raise TransportError(
+                    f"ack starved: request {req_id} waits for {count} "
+                    f"processed frames but only {acked} were ever submitted"
+                )
     def _pump(self, req_id: Optional[int] = None) -> int:
         return self.server.pump()
 
@@ -499,9 +601,11 @@ class DelayModelTransport(LoopbackTransport):
         self.cloud_step_delays_s: List[float] = []
 
     def clock(self) -> float:
+        """Virtual seconds: transfer times + cloud delays + device ticks."""
         return self.clock_s
 
     def tick(self, seconds: float) -> None:
+        """Advance the virtual clock by ``seconds`` of device compute."""
         self.clock_s += seconds
 
     def _on_uplink(self, data: bytes) -> Dict:
@@ -554,6 +658,19 @@ class _WaitFrame(NamedTuple):
     req_id: int
 
 
+class _WaitAck(NamedTuple):
+    """Yielded by a pipelined prefill coroutine to bound its in-flight
+    chunk window: the session may not send its next chunk until the cloud
+    has processed at least ``count`` of its uplink frames.
+
+    The driver answers with ``coro.send(acked_count)``.  Blocking wrappers
+    answer from ``transport.wait_acked``; the concurrent scheduler parks
+    the session until a shared pump advances the count."""
+
+    req_id: int
+    count: int
+
+
 @dataclass
 class _Session:
     req_id: int
@@ -604,6 +721,7 @@ class DeviceClient:
         fixed_chunk: int = 128,
         dynamic_chunks: bool = True,
         pipeline_len: int = 1,
+        pipeline_depth: int = 0,
         monitor: Optional[StateMonitor] = None,
         profile: Optional[DeviceProfile] = None,
         memory: Optional[jax.Array] = None,
@@ -640,6 +758,16 @@ class DeviceClient:
         self.fixed_chunk = fixed_chunk
         self.dynamic_chunks = dynamic_chunks
         self.pipeline_len = pipeline_len
+        if pipeline_depth < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, got {pipeline_depth}")
+        # uplink pipelining (paper Eq. 3's parallel transmission+processing):
+        #   0 = stream every chunk without waiting (legacy unbounded window)
+        #   1 = wait for each chunk's processing ack before the next send
+        #       (strictly sequential: the measured baseline)
+        #   D>1 = at most D unprocessed chunks in flight — chunk k+1 leaves
+        #       as soon as its shallow compute finishes while the cloud is
+        #       still working on chunk k
+        self.pipeline_depth = pipeline_depth
         self.monitor = monitor
         self.profile = profile
         self.memory = memory
@@ -668,16 +796,23 @@ class DeviceClient:
     # ----------------------------------------------------- coroutine driver
     def _drive(self, coro):
         """Run a session coroutine to completion, answering every
-        ``_WaitFrame`` with a blocking ``transport.recv``.  This is the
+        ``_WaitFrame`` with a blocking ``transport.recv`` and every
+        ``_WaitAck`` with a blocking ``transport.wait_acked``.  This is the
         sequential execution mode; the concurrent scheduler drives the same
         coroutines itself so that many sessions interleave through one
         engine."""
         try:
             wait = next(coro)
             while True:
-                wait = coro.send(self.transport.recv(wait.req_id))
+                wait = coro.send(self._answer(wait))
         except StopIteration as e:
             return e.value
+
+    def _answer(self, wait):
+        """Blocking answer for one coroutine yield (frame or ack wait)."""
+        if isinstance(wait, _WaitAck):
+            return self.transport.wait_acked(wait.req_id, wait.count)
+        return self.transport.recv(wait.req_id)
 
     # ------------------------------------------------------------- U round
     def _u_round_gen(self, sess: _Session, tokens: np.ndarray, kind: str):
@@ -745,8 +880,10 @@ class DeviceClient:
             g=mon.g.predict if mon else None,
             mu=mon.mu.get(64.0) if mon else 64.0,
             pipeline_len=self.pipeline_len,
+            pipeline_depth=self.pipeline_depth,
         )
         t_pf = self.transport.clock()
+        depth = self.pipeline_depth
         off = 0
         for i, size in enumerate(chunks):
             toks = jnp.asarray(prompt[off:off + size], jnp.int32)[None]
@@ -757,6 +894,11 @@ class DeviceClient:
             if self.profile is not None:
                 self._tick(self.profile.shallow_delay(size),
                            req_id, "shallow", tokens=size)
+            if depth > 0 and i >= depth:
+                # bounded window: after this send at most ``depth`` chunks
+                # are unprocessed cloud-side — wait for chunk i-depth's ack
+                # (its shallow compute above already overlapped the wait)
+                yield _WaitAck(req_id, i - depth + 1)
             self.transport.send(encode_hidden(
                 self.codec, np.asarray(shallow[0], np.float32),
                 req_id=req_id, offset=off, kind="prefill",
@@ -894,6 +1036,8 @@ class DeviceClient:
 
     # --------------------------------------------------------------- medusa
     def medusa_tree(self, req_id: int) -> int:
+        """Build the session's Medusa candidate tree from its last deep
+        state; returns the tree size charged to the wire/cloud."""
         sess = self.sessions[req_id]
         sess.paths = medusa_mod.build_tree_paths(
             self.medusa_params, jnp.asarray(sess.deep_last), tree_size=8
@@ -1035,7 +1179,7 @@ class DeviceClient:
                 while i < len(out):
                     yield out[i]
                     i += 1
-                wait = coro.send(self.transport.recv(wait.req_id))
+                wait = coro.send(self._answer(wait))
         except StopIteration:
             while i < len(out):
                 yield out[i]
@@ -1059,7 +1203,10 @@ class DeviceClient:
 class Runtime(Protocol):
     """Anything that can serve a workload and report fleet metrics."""
 
-    def serve(self, requests) -> FleetMetrics: ...
+    def serve(self, requests) -> FleetMetrics:
+        """Run the workload to completion; blocks until every request is
+        done and returns the fleet-level metrics."""
+        ...
 
 
 class SimulatorRuntime:
@@ -1090,6 +1237,8 @@ class SimulatorRuntime:
         )
 
     def serve(self, requests) -> FleetMetrics:
+        """Submit every spec and run the discrete-event loop to drain;
+        blocking, returns when the virtual timeline is exhausted."""
         for r in requests:
             self.simulator.submit(Request(
                 req_id=r.req_id, device_id=r.device_id, arrival_s=r.arrival_s,
@@ -1108,7 +1257,8 @@ class _EngineSession:
     client: DeviceClient
     transport: DelayModelTransport
     coro: object = None
-    wait: Optional[int] = None          # req_id awaited (None = runnable)
+    # the pending yield: a _WaitFrame or _WaitAck (None = runnable)
+    wait: Optional[NamedTuple] = None
     frame: Optional[bytes] = None       # delivered, not yet consumed
     started: bool = False
     done: bool = False
@@ -1116,6 +1266,19 @@ class _EngineSession:
     @property
     def clock(self) -> float:
         return self.transport.clock_s
+
+    def runnable(self) -> bool:
+        """Can the coroutine advance right now?  Frame waits need their
+        frame delivered; ack waits need the cloud's processed count to
+        reach the window bound."""
+        if self.done:
+            return False
+        if self.wait is None:
+            return True
+        if isinstance(self.wait, _WaitAck):
+            return (self.transport.acked_count(self.wait.req_id)
+                    >= self.wait.count)
+        return self.frame is not None
 
 
 class EngineRuntime:
@@ -1226,7 +1389,8 @@ class EngineRuntime:
                 topk=cfg.topk, max_len=self.max_len,
                 wire_codec=cfg.codec_name, fixed_chunk=cfg.fixed_chunk,
                 dynamic_chunks=cfg.dynamic_chunks,
-                pipeline_len=cfg.pipeline_len, monitor=self.monitor,
+                pipeline_len=cfg.pipeline_len,
+                pipeline_depth=cfg.pipeline_depth, monitor=self.monitor,
                 profile=dev, memory=self.memory,
             )
             prompt = spec.prompt
@@ -1273,6 +1437,9 @@ class EngineRuntime:
 
     # ---------------------------------------------------------------- serve
     def serve(self, requests) -> FleetMetrics:
+        """Run every request through real-tensor device/cloud submodels;
+        blocking.  Sequential mode drives one session at a time; concurrent
+        mode interleaves all sessions into shared slot-batched steps."""
         specs = list(requests)
         metrics = FleetMetrics()
         if not specs:
@@ -1352,15 +1519,20 @@ class EngineRuntime:
                 if first:
                     self._start(s)
                     wait = next(s.coro)          # opens the session (slot held)
+                elif isinstance(s.wait, _WaitAck):
+                    wait = s.coro.send(
+                        s.transport.acked_count(s.wait.req_id)
+                    )
                 else:
                     data, s.frame = s.frame, None
                     wait = s.coro.send(data)
-                s.wait = wait.req_id
+                s.wait = wait
                 # belt-and-braces: a frame can never be parked before the
                 # session starts waiting (pumps only run when everyone
                 # waits), but delivering here keeps that a local invariant
-                if s.transport.has_frame(s.wait):
-                    s.frame = s.transport.deliver(s.wait)
+                if (isinstance(wait, _WaitFrame)
+                        and s.transport.has_frame(wait.req_id)):
+                    s.frame = s.transport.deliver(wait.req_id)
             except StopIteration:
                 s.wait = None
                 self._finalize(s, metrics)
@@ -1372,10 +1544,7 @@ class EngineRuntime:
         try_admit(0.0)
         engine = self.server.engine
         while active or pending:
-            runnable = [
-                s for s in active
-                if not s.done and (s.wait is None or s.frame is not None)
-            ]
+            runnable = [s for s in active if s.runnable()]
             if runnable:
                 # coalescing window: while some device still has compute in
                 # flight, the cloud holds its step so that device's frames
@@ -1446,27 +1615,38 @@ class EngineRuntime:
             tokens=tokens, dur_s=full, jobs=len(info),
         )
         metrics.cloud_step_delays_s.append(stage)
+        def charge_wait(s: _EngineSession, rid: int) -> None:
+            # the blocked session's clock jumps to the step's end; split
+            # the wait into queue time (before the step ran) and cloud
+            # compute so the two parts tile the clock jump exactly
+            t_wait = s.transport.clock_s
+            jump = max(done_s - t_wait, 0.0)
+            cloud_part = min(jump, full)
+            queue_part = jump - cloud_part
+            if queue_part > 0:
+                self.tracer.add_span(
+                    "queue_wait", t_wait, t_wait + queue_part,
+                    tid=rid, phase="queue", dur_s=queue_part,
+                )
+            if cloud_part > 0:
+                self.tracer.add_span(
+                    "cloud_wait", done_s - cloud_part, done_s,
+                    tid=rid, phase="cloud_step", dur_s=cloud_part,
+                )
+            s.transport.clock_s = max(t_wait, done_s)
+
         for s in waiting:
-            if s.frame is None and s.transport.has_frame(s.wait):
-                # downlink transfer begins once the batch is done; split
-                # the wait into queue time (before the step ran) and cloud
-                # compute so the two parts tile the clock jump exactly
-                t_wait = s.transport.clock_s
-                jump = max(done_s - t_wait, 0.0)
-                cloud_part = min(jump, full)
-                queue_part = jump - cloud_part
-                if queue_part > 0:
-                    self.tracer.add_span(
-                        "queue_wait", t_wait, t_wait + queue_part,
-                        tid=s.wait, phase="queue", dur_s=queue_part,
-                    )
-                if cloud_part > 0:
-                    self.tracer.add_span(
-                        "cloud_wait", done_s - cloud_part, done_s,
-                        tid=s.wait, phase="cloud_step", dur_s=cloud_part,
-                    )
-                s.transport.clock_s = max(t_wait, done_s)
-                s.frame = s.transport.deliver(s.wait)
+            if isinstance(s.wait, _WaitAck):
+                # window wait: this step may have advanced the session's
+                # processed count — charge the blocked time the same way
+                # as a frame wait so the phase spans still tile the clock
+                if (s.transport.acked_count(s.wait.req_id)
+                        >= s.wait.count):
+                    charge_wait(s, s.wait.req_id)
+                continue
+            if s.frame is None and s.transport.has_frame(s.wait.req_id):
+                charge_wait(s, s.wait.req_id)
+                s.frame = s.transport.deliver(s.wait.req_id)
         # budgeted admission pipelines microbatches at one-stage cadence;
         # naive (unbudgeted) batch-level scheduling can't fully hide the
         # pipeline bubble — the same cadence rule the simulator applies

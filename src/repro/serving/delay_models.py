@@ -135,6 +135,36 @@ class NetworkModel:
         return nbytes / self.down_bw(dev)
 
 
+def pipelined_prefill_estimate_s(
+    chunks,
+    *,
+    dev: DeviceProfile,
+    cloud: CloudDelayModel,
+    beta_up: float,
+    hidden_bytes_per_token: float,
+    pipeline_depth: int = 0,
+) -> float:
+    """Prefill-completion estimate (seconds) under uplink/compute overlap.
+
+    Glues the calibrated testbed models onto the §4.2 overlap recurrence
+    (:func:`repro.core.chunking.pipelined_prefill_time`): per-chunk upload
+    at ``beta_up`` bytes/s, per-chunk cloud occupancy ``stage_time``, plus
+    the first chunk's shallow compute as lead-in (later chunks' shallow
+    compute hides under uploads).  Downlink + head are plan-independent
+    and excluded — compare plans, not absolute TTFT."""
+    from ..core.chunking import pipelined_prefill_time
+
+    if not chunks:
+        return 0.0
+    lead = dev.shallow_delay(chunks[0])
+    return lead + pipelined_prefill_time(
+        list(chunks),
+        up_time=lambda x: x * hidden_bytes_per_token / max(beta_up, 1e-9),
+        step_time=cloud.stage_time,
+        pipeline_depth=pipeline_depth,
+    )
+
+
 def make_fleet(rng: np.random.Generator, n_devices: int = 30):
     """20 Xavier + 10 Orin across 3 distance groups (paper §4.1)."""
     fleet = []

@@ -69,6 +69,7 @@ class EngineJob:
     kind: str                   # "prefill" | "verify"
     want_deep: bool = True      # return deep hidden states (last chunk/verify)
     ready_s: float = 0.0        # frame event timestamp (sender clock)
+    n_frames: int = 1           # wire frames merged into this job (coalescing)
 
 
 @dataclass
@@ -91,6 +92,7 @@ class CloudEngine:
         memory: Optional[jax.Array] = None,
         wire_codec: str = "fp16",
         auto_grow: bool = False,
+        coalesce_prefill: bool = False,
         tracer: Optional[Tracer] = None,
     ):
         self.split = split
@@ -108,6 +110,15 @@ class CloudEngine:
         # every slot is occupied (session-adaptor use, where concurrency is
         # driven from outside); explicit-capacity callers keep the hard cap
         self.auto_grow = auto_grow
+        # coalesce_prefill: merge contiguous queued prefill chunks of one
+        # session into a single job before admission.  A pipelined device
+        # streams many small chunks; one long prefill row is numerically
+        # identical (same causal attention / recurrence over the same
+        # positions) and costs one step instead of N — the TCP service
+        # turns this on, in-process runtimes keep per-chunk steps so their
+        # pinned batching traces stay byte-stable.
+        self.coalesce_prefill = coalesce_prefill
+        self.frames_coalesced = 0
         self.kv = SlotKVManager(n_slots, max_len, kv_budget)
         self._memory = memory
         mem = None
@@ -241,6 +252,8 @@ class CloudEngine:
         if not self.queue:
             return []
         t_start = time.perf_counter()
+        if self.coalesce_prefill:
+            self._coalesce_queue()
         with self.tracer.span("batch_build", tid=TID_CLOUD) as build_a:
             chosen, self.queue = budgeted_admission(
                 self.queue, self.max_batch_tokens,
@@ -291,7 +304,8 @@ class CloudEngine:
         self.batched_token_history.append(tokens)
         self.last_step_info = [
             {"req_id": j.req_id, "kind": j.kind, "tokens": len(j.hidden),
-             "ready_s": j.ready_s, "want_deep": j.want_deep}
+             "ready_s": j.ready_s, "want_deep": j.want_deep,
+             "n_frames": j.n_frames}
             for j in chosen
         ]
 
@@ -311,6 +325,41 @@ class CloudEngine:
         self.tracer.record_hist("batch_tokens", tokens)
         self.step_wall_s += time.perf_counter() - t_start
         return out
+
+    def _coalesce_queue(self) -> None:
+        """Merge contiguous queued prefill chunks of one session in place.
+
+        A chunk merges into that session's previous queued prefill job when
+        it continues it exactly (``offset == prev.offset + len(prev)``),
+        the previous job isn't a stream tail (``want_deep`` stays with the
+        last chunk) and the merged width still fits the token budget.
+        Per-session order is untouched, so the recurrence/attention the
+        merged row computes is identical to stepping the chunks one by one.
+        """
+        out: List[EngineJob] = []
+        last_by_req: Dict[int, EngineJob] = {}
+        for j in self.queue:
+            prev = last_by_req.get(j.req_id)
+            if (
+                j.kind == "prefill"
+                and prev is not None
+                and prev.kind == "prefill"
+                and not prev.want_deep
+                and prev.offset + len(prev.hidden) == j.offset
+                and (self.max_batch_tokens is None
+                     or len(prev.hidden) + len(j.hidden)
+                     <= self.max_batch_tokens)
+            ):
+                prev.hidden = np.concatenate(
+                    [np.asarray(prev.hidden), np.asarray(j.hidden)], axis=0
+                )
+                prev.want_deep = j.want_deep
+                prev.n_frames += j.n_frames
+                self.frames_coalesced += j.n_frames
+                continue
+            out.append(j)
+            last_by_req[j.req_id] = j
+        self.queue = out
 
     def drain(self) -> List[EngineResult]:
         res = []

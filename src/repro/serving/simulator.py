@@ -137,6 +137,11 @@ class SimConfig:
     # (U-shape, U-Medusa) batch every pending job -> long prompts interfere
     # with decode (Fig. 1(c)); None = no budget.
     max_batch_tokens: Optional[int] = 512
+    # Device uplink window (matches DeviceClient.pipeline_depth): 0 =
+    # unbounded streaming (legacy behavior), 1 = strictly sequential
+    # (each chunk waits for the previous chunk's cloud processing), D>1 =
+    # at most D unprocessed chunks in flight.
+    pipeline_depth: int = 0
     max_sim_s: float = 3600.0
 
     def __post_init__(self):
@@ -186,6 +191,8 @@ class Simulator:
         # per-request in-flight chunk gating
         self._chunks_ready: Dict[int, int] = {}
         self._chunks_done: Dict[int, int] = {}
+        self._chunks_computed: Dict[int, int] = {}
+        self._chunks_sent: Dict[int, int] = {}
 
     # ------------------------------------------------------------ event core
     def at(self, t: float, fn: Callable) -> None:
@@ -220,10 +227,13 @@ class Simulator:
             g=self.monitor.g.predict,
             mu=self.monitor.mu.get(64.0),
             pipeline_len=self.cloud.pipeline_len,
+            pipeline_depth=self.cfg.pipeline_depth,
         )
         self._chunks_done[req.req_id] = 0
         if self.cfg.pc == "device":
             self._chunks_ready[req.req_id] = 0
+            self._chunks_computed[req.req_id] = 0
+            self._chunks_sent[req.req_id] = 0
             self._device_compute_chunk(req, dev, 0)
         else:
             # pc="server" (Sarathi): whole prompt's hidden states uploaded
@@ -254,13 +264,30 @@ class Simulator:
         )
 
         def after_compute():
-            A = self.cfg.hidden_bytes_per_token
-            self._upload(req, dev, size * A, self.now,
-                         lambda ft: self._chunk_uploaded(req, dev))
+            self._chunks_computed[req.req_id] += 1
+            self._pump_uplink(req, dev)
             if ci + 1 < len(req.chunk_sizes):
                 self._device_compute_chunk(req, dev, ci + 1)  # overlap
 
         self.at(done, after_compute)
+
+    def _pump_uplink(self, req: Request, dev: DeviceProfile) -> None:
+        """Start uploads for computed chunks the in-flight window admits.
+
+        With ``pipeline_depth=0`` every computed chunk uploads immediately
+        (unbounded streaming — the legacy behavior); with depth D the
+        sender holds chunk i until chunk i-D has been *processed*, the
+        same bounded window ``DeviceClient`` enforces via frame acks."""
+        A = self.cfg.hidden_bytes_per_token
+        depth = self.cfg.pipeline_depth
+        rid = req.req_id
+        while self._chunks_sent[rid] < self._chunks_computed[rid]:
+            if depth > 0 and self._chunks_sent[rid] - self._chunks_done[rid] >= depth:
+                return        # window full; resumes when a chunk is processed
+            size = req.chunk_sizes[self._chunks_sent[rid]]
+            self._chunks_sent[rid] += 1
+            self._upload(req, dev, size * A, self.now,
+                         lambda ft: self._chunk_uploaded(req, dev))
 
     def _chunk_uploaded(self, req: Request, dev: DeviceProfile) -> None:
         self._chunks_ready[req.req_id] += 1
@@ -287,6 +314,8 @@ class Simulator:
             req._chunk_inflight = False
             self._chunks_done[req.req_id] += 1
             req.prefilled += size
+            if self.cfg.pc == "device":
+                self._pump_uplink(req, dev)   # release the uplink window
             if self._chunks_done[req.req_id] < len(req.chunk_sizes):
                 self._enqueue_next_chunk(req, dev)
 

@@ -13,6 +13,20 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    """Clear jax's compiled-executable caches after every test module.
+
+    The suite jits hundreds of distinct programs (per-arch models × step
+    buckets × codecs); letting them all accumulate in one process has been
+    observed to segfault XLA:CPU's compiler late in the run (deep in
+    ``backend_compile``).  Dropping executables between modules trades a
+    little recompilation for a bounded compiler footprint.
+    """
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,187 @@
+"""Anti-rot checks for the doc set.
+
+Three contracts:
+
+* ``test_protocol_doc_matches_code`` — every protocol constant quoted in
+  docs/PROTOCOL.md (message ids, error codes, version, magic, header
+  struct, size limit) matches ``repro.net.protocol``, and the doc's
+  message/error tables are *complete* — a new ``MSG_*`` without a doc row
+  fails here, in the same commit.
+* ``test_markdown_links_resolve`` — every relative link (and ``#anchor``)
+  in the repo's markdown resolves; rot in moved files or renamed
+  headings fails CI, not a reader.
+* ``test_public_api_docstrings`` — pydocstyle-lite over the public
+  session/network API (``repro.serving.api``, ``repro.net.policy``,
+  ``repro.net.chaos``): every public module/class/function/method has a
+  docstring (ruff/pydocstyle are not vendored, so this is plain
+  ``inspect``).
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+PROTOCOL_MD = REPO / "docs" / "PROTOCOL.md"
+
+
+# ---------------------------------------------------------------------------
+# PROTOCOL.md <-> repro.net.protocol
+# ---------------------------------------------------------------------------
+
+
+def test_protocol_doc_matches_code():
+    from repro.net import protocol as P
+
+    text = PROTOCOL_MD.read_text()
+
+    # message-id table rows: "|  6 | `MSG_FRAME`   | ..."
+    doc_msgs = {
+        name: int(num)
+        for num, name in re.findall(r"^\|\s*(\d+)\s*\|\s*`(MSG_[A-Z_]+)`",
+                                    text, re.M)
+    }
+    code_msgs = {n: v for n, v in vars(P).items()
+                 if n.startswith("MSG_") and isinstance(v, int)}
+    assert doc_msgs == code_msgs, (
+        "PROTOCOL.md message table out of sync with repro.net.protocol: "
+        f"doc-only={sorted(set(doc_msgs) - set(code_msgs))}, "
+        f"code-only={sorted(set(code_msgs) - set(doc_msgs))}, "
+        f"mismatched={[k for k in set(doc_msgs) & set(code_msgs) if doc_msgs[k] != code_msgs[k]]}"
+    )
+    # and MSG_NAMES covers exactly the same ids
+    assert set(P.MSG_NAMES) == set(code_msgs.values())
+
+    # error-code table rows: "|    3 | `overflow` | ..."
+    doc_errs = {
+        name: int(num)
+        for num, name in re.findall(r"^\|\s*(\d+)\s*\|\s*`([a-z]+)`",
+                                    text, re.M)
+    }
+    code_errs = {name: code for code, name in P.ERR_NAMES.items()}
+    assert doc_errs == code_errs, (
+        f"PROTOCOL.md error table out of sync: doc={doc_errs}, "
+        f"code={code_errs}"
+    )
+
+    # scalar constants quoted in prose
+    assert f"PROTO_VERSION = {P.PROTO_VERSION}`" in text.replace("`= ", "= ") \
+        or f"`PROTO_VERSION = {P.PROTO_VERSION}`" in text, \
+        "PROTOCOL.md must quote the current PROTO_VERSION"
+    assert P.MAGIC.decode() in text and 'b"HN"' in text
+    mib = P.MAX_MESSAGE_BYTES // (1024 * 1024)
+    assert f"{mib} MiB" in text, "MAX_MESSAGE_BYTES changed; update the doc"
+
+    # every struct format used by the codec appears verbatim in the doc
+    struct_fmts = {
+        s.format if isinstance(s.format, str) else s.format.decode()
+        for n, s in vars(P).items()
+        if n.startswith("_") and hasattr(s, "format") and hasattr(s, "pack")
+    }
+    missing = {f for f in struct_fmts if f"`{f}`" not in text}
+    assert not missing, f"struct formats undocumented in PROTOCOL.md: {missing}"
+
+    # header size claim
+    assert f"({P._HEADER.size} bytes)" in text
+
+
+# ---------------------------------------------------------------------------
+# markdown link rot
+# ---------------------------------------------------------------------------
+
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.M)
+_CODE_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def _github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->dashes."""
+    heading = re.sub(r"[`*_]", "", heading)
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # md links
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug, flags=re.UNICODE)
+    return slug.replace(" ", "-")
+
+
+def _markdown_files():
+    files = sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+    assert files, "no markdown files found — wrong repo root?"
+    return files
+
+
+def _anchors_of(path: Path) -> set:
+    text = _CODE_FENCE_RE.sub("", path.read_text())
+    slugs = set()
+    counts = {}
+    for h in _HEADING_RE.findall(text):
+        s = _github_slug(h)
+        n = counts.get(s, 0)
+        counts[s] = n + 1
+        slugs.add(s if n == 0 else f"{s}-{n}")
+    return slugs
+
+
+@pytest.mark.parametrize("md", _markdown_files(), ids=lambda p: p.name)
+def test_markdown_links_resolve(md):
+    text = _CODE_FENCE_RE.sub("", md.read_text())
+    problems = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if path_part and not dest.exists():
+            problems.append(f"{target}: no such file {dest}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in _anchors_of(dest):
+                problems.append(f"{target}: no heading for #{anchor} "
+                                f"in {dest.name}")
+    assert not problems, f"{md.name}: " + "; ".join(problems)
+
+
+# ---------------------------------------------------------------------------
+# public-API docstrings
+# ---------------------------------------------------------------------------
+
+DOC_MODULES = ["repro.serving.api", "repro.net.policy", "repro.net.chaos"]
+
+
+def _missing_docstrings(modname: str):
+    mod = importlib.import_module(modname)
+    missing = []
+    if not (mod.__doc__ or "").strip():
+        missing.append(modname)
+    for cname, obj in vars(mod).items():
+        if cname.startswith("_") or getattr(obj, "__module__", None) != modname:
+            continue
+        if inspect.isclass(obj):
+            if not (inspect.getdoc(obj) or "").strip():
+                missing.append(f"{modname}.{cname}")
+            for mname, member in vars(obj).items():
+                if mname.startswith("_"):
+                    continue
+                fn = member
+                if isinstance(member, (classmethod, staticmethod)):
+                    fn = member.__func__
+                elif isinstance(member, property):
+                    fn = member.fget
+                if inspect.isfunction(fn) and not (fn.__doc__ or "").strip():
+                    missing.append(f"{modname}.{cname}.{mname}")
+        elif inspect.isfunction(obj):
+            if not (obj.__doc__ or "").strip():
+                missing.append(f"{modname}.{cname}")
+    return missing
+
+
+@pytest.mark.parametrize("modname", DOC_MODULES)
+def test_public_api_docstrings(modname):
+    missing = _missing_docstrings(modname)
+    assert not missing, (
+        f"public API without docstrings in {modname} (state units, "
+        f"blocking behavior and raised errors): {missing}"
+    )
