@@ -33,9 +33,19 @@ window (``net_tcp_pipelined_d{depth}`` rows, ``--net-pipeline-depths``):
 long-prompt TTFT per depth, token parity across depths, and — fault-free —
 the bar that some depth>1 beats the sequential (depth 1) baseline.
 
+``--net tcp --cloud-restart`` runs the restart storm instead:
+``--net-devices`` device processes (one session each) stream through one
+cloud process, a seeded chaos trigger SIGKILLs it mid-run once every
+session is registered, and a successor restores the latest checkpoint on
+the same port.  Hard bars: ``cloud_restarts >= 1``, ``sessions_lost=0``,
+and per-request token parity with an uninterrupted loopback replay
+(``net_tcp_restart_parity`` row) — CI's ``storm-smoke`` job greps them.
+
     PYTHONPATH=src python benchmarks/bench_engine.py            # full sweep
     PYTHONPATH=src python benchmarks/bench_engine.py --smoke    # CI smoke
     PYTHONPATH=src python benchmarks/bench_engine.py --smoke --net tcp
+    PYTHONPATH=src python benchmarks/bench_engine.py --smoke --net tcp \
+        --cloud-restart --net-devices 32                        # storm
 """
 from __future__ import annotations
 
@@ -282,6 +292,125 @@ def _net_bench(args) -> None:
         }, f, indent=1)
 
 
+def _net_restart_bench(args) -> None:
+    """Device storm across a mid-run cloud kill + checkpoint restore.
+
+    ``--net-devices`` device processes (one session each) stream through
+    one cloud process; a seeded chaos trigger SIGKILLs the cloud once
+    every session is provably registered (``MSG_OPEN_OK`` observed at the
+    proxy) and the fleet has pushed its seeded uplink-frame quota.  A
+    successor process restores the latest checkpoint on the same port
+    under a bumped restart epoch; every device resumes and finishes.
+
+    Hard bars, enforced here (and grepped by the CI ``storm-smoke`` job):
+
+    * ``cloud_restarts >= 1`` — the kill + restore actually happened;
+    * ``sessions_lost=0`` — no request degraded across the restart
+      (one-request-per-device makes this deterministic: the checkpoint
+      the supervisor waits for post-dates every ``MSG_OPEN_OK``);
+    * ``net_tcp_restart_parity`` — every token stream byte-identical to
+      an uninterrupted in-process loopback replay of the same specs.
+    """
+    from repro.configs import get_config
+    from repro.net import run_cluster
+    from repro.net.launcher import CloudRestartPlan
+    from repro.net.service import build_server
+    from repro.net.worker import build_client, device_specs, run_device_workload
+    from repro.serving import LoopbackTransport
+
+    n_devices = args.net_devices
+    prompt_len = 16 if args.smoke else 32
+    # enough decode steps that the storm is still in flight when the
+    # seeded kill lands (the trigger needs every session open first)
+    new_tokens = 8
+    max_len = 128
+    codec = "fp16"
+
+    result = run_cluster(
+        args.arch, n_devices=n_devices, requests_per_device=1,
+        prompt_len=prompt_len, new_tokens=new_tokens,
+        slots=n_devices, max_len=max_len, wire_codec=codec,
+        seed=0, workdir=args.net_workdir,
+        # a 32-process storm on a small CI runner serializes every
+        # worker's jax init through a few cores — budget generously
+        worker_timeout_s=3600.0,
+        cloud_restart=CloudRestartPlan(seed=args.net_chaos_seed),
+    )
+    if result["cloud_restarts"] < 1:
+        raise SystemExit(
+            f"cloud restart never happened: cloud_restarts="
+            f"{result['cloud_restarts']}, faults={result['chaos_faults']}")
+    if result["cloud_restarts_seen"] < 1:
+        raise SystemExit(
+            "no device observed the bumped restart epoch — the fleet "
+            "never actually resumed against the successor process")
+    if result["sessions_lost"] != 0:
+        raise SystemExit(
+            f"{result['sessions_lost']} session(s) lost across the "
+            f"restart (degraded requests) — expected zero")
+
+    socket_tokens = {
+        r["req_id"]: list(r["tokens"])
+        for w in result["workers"] for r in w["requests"]
+    }
+    cfg = get_config(args.arch).reduced()
+    server = build_server(args.arch, slots=n_devices, max_len=max_len,
+                          max_batch_tokens=256, wire_codec=codec, seed=0)
+    transport = LoopbackTransport(server)
+    client = build_client(args.arch, transport, max_len=max_len,
+                          wire_codec=codec, draft=False, seed=0)
+    loop_tokens = {}
+    for k in range(n_devices):
+        specs = device_specs(cfg, k, n_requests=1, prompt_len=prompt_len,
+                             new_tokens=new_tokens, seed=0)
+        for r in run_device_workload(client, transport, specs):
+            loop_tokens[r.req_id] = list(r.generated)
+    if sorted(socket_tokens) != sorted(loop_tokens):
+        raise SystemExit(
+            f"request sets diverge: socket {sorted(socket_tokens)} vs "
+            f"loopback {sorted(loop_tokens)}")
+    for rid in sorted(socket_tokens):
+        if socket_tokens[rid] != loop_tokens[rid]:
+            raise SystemExit(
+                f"token parity broken across restart for req {rid}: "
+                f"socket {socket_tokens[rid]} vs loopback {loop_tokens[rid]}")
+
+    emit(
+        "net_tcp_restart_parity", 0.0,
+        f"{len(socket_tokens)}/{len(socket_tokens)} requests "
+        f"byte-identical to loopback across a cloud restart;"
+        f"devices={n_devices};cloud_restarts={result['cloud_restarts']};"
+        f"restarts_seen={result['cloud_restarts_seen']};"
+        f"sessions_lost={result['sessions_lost']};"
+        f"reconnects={result['reconnects']};"
+        f"replayed_frames={result['replayed_frames']}",
+    )
+    emit(
+        "net_tcp_restart_ttft", result["ttft_mean_ms"] * 1e3,  # us
+        f"ttft_p90_ms={result['ttft_p90_ms']:.1f};"
+        f"tbt_mean_ms={result['tbt_mean_ms']:.1f};"
+        f"requests={result['n_requests']};devices={n_devices};"
+        f"restart_window_included=True",
+    )
+    with open(args.json, "w") as f:
+        json.dump({
+            "mode": "net-tcp-restart",
+            "n_devices": n_devices,
+            "n_requests": result["n_requests"],
+            "cloud_restarts": result["cloud_restarts"],
+            "cloud_restarts_seen": result["cloud_restarts_seen"],
+            "sessions_lost": result["sessions_lost"],
+            "reconnects": result["reconnects"],
+            "replayed_frames": result["replayed_frames"],
+            "ttft_mean_ms": result["ttft_mean_ms"],
+            "ttft_p90_ms": result["ttft_p90_ms"],
+            "tbt_mean_ms": result["tbt_mean_ms"],
+            "token_parity": True,
+            "chaos_faults": len(result["chaos_faults"]),
+            "merged_trace": result["merged_trace"],
+        }, f, indent=1)
+
+
 def _net_pipelined_bench(args) -> list:
     """TTFT vs uplink window depth on long prompts over real sockets.
 
@@ -421,10 +550,20 @@ def main(argv=None) -> None:
     ap.add_argument("--net-workdir", default=None,
                     help="with --net: directory for per-process logs and "
                          "the merged Chrome trace")
+    ap.add_argument("--cloud-restart", action="store_true",
+                    help="with --net: storm bench across a mid-run cloud "
+                         "SIGKILL + checkpoint restore — asserts zero lost "
+                         "sessions and token parity across the restart")
+    ap.add_argument("--net-devices", type=int, default=2,
+                    help="with --net --cloud-restart: device processes in "
+                         "the storm (CI uses 32)")
     args, _ = ap.parse_known_args(argv)
 
     if args.net == "tcp":
-        _net_bench(args)
+        if args.cloud_restart:
+            _net_restart_bench(args)
+        else:
+            _net_bench(args)
         return
 
     codecs = ["fp16"] if args.smoke else ["fp16", "int8"]

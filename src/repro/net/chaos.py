@@ -12,6 +12,14 @@ Two layers, both driven by explicit, seedable fault schedules so a
   mid-message and kill the link.  Because faults land on message
   boundaries counted from connection start, the same schedule produces
   the same failure at the same point in the same request every run.
+  It can also carry the **cloud-kill** trigger (``on_cloud_kill`` +
+  seeded ``kill_after_open_oks``/``kill_after_up_frames`` thresholds,
+  see :func:`seeded_kill_after_frames`): once the fleet has opened
+  enough sessions and pushed enough uplink frames, the callback fires
+  exactly once — the launcher uses it to SIGKILL and checkpoint-restore
+  the cloud process mid-run.  ``upstream_retry_s`` > 0 makes the proxy
+  retry refused upstream connects, so devices reconnecting during the
+  restart window wait inside one handshake instead of burning retries.
 * :class:`FaultyTransport` — an in-process wrapper around any
   :class:`~repro.serving.api.Transport` that raises
   :class:`~repro.net.errors.TransportClosed` / sleeps at exact
@@ -36,7 +44,7 @@ import socket
 import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from ..obs import NULL_TRACER, Tracer
 from . import protocol as P
@@ -48,6 +56,7 @@ KIND_DROP = "drop"
 KIND_DELAY = "delay"
 KIND_DUP = "dup"
 KIND_TRUNCATE = "truncate"
+KIND_CLOUD_KILL = "cloud_kill"
 
 
 @dataclass(frozen=True)
@@ -90,6 +99,15 @@ def seeded_schedule(
                 FaultEvent(KIND_DROP, at_hop=h, direction=direction))
         schedule.setdefault(conn, []).extend(events)
     return schedule
+
+
+def seeded_kill_after_frames(seed: int, n_devices: int = 1,
+                             lo: int = 1, hi: int = 3) -> int:
+    """Deterministic uplink-frame threshold for the cloud-kill trigger:
+    between ``lo`` and ``hi`` frames *per device*, drawn from ``seed`` —
+    mid-run for any fleet size, same hop for the same seed every run."""
+    per_dev = random.Random(seed).randint(lo, hi)
+    return per_dev * max(n_devices, 1)
 
 
 class _Pair:
@@ -182,6 +200,10 @@ class ChaosProxy:
         host: str = "127.0.0.1",
         port: int = 0,
         tracer: Optional[Tracer] = None,
+        kill_after_open_oks: int = 0,
+        kill_after_up_frames: int = 0,
+        on_cloud_kill: Optional[Callable[[], None]] = None,
+        upstream_retry_s: float = 0.0,
     ):
         self.upstream_host = upstream_host
         self.upstream_port = upstream_port
@@ -206,6 +228,22 @@ class ChaosProxy:
         self._threads: List[threading.Thread] = []
         self._pairs: List[_Pair] = []
         self._lock = threading.Lock()
+        # cloud-kill trigger: fire on_cloud_kill once, after the fleet has
+        # opened kill_after_open_oks sessions (MSG_OPEN_OK observed on the
+        # downlink — the cloud provably registered them) AND has pushed
+        # kill_after_up_frames uplink MSG_FRAMEs total.  Seeded thresholds
+        # (seeded_kill_after_frames) make the kill land at the same point
+        # in the same run every time.
+        self.kill_after_open_oks = kill_after_open_oks
+        self.kill_after_up_frames = kill_after_up_frames
+        self.on_cloud_kill = on_cloud_kill
+        # how long to keep retrying a refused upstream connect before
+        # giving up on the client: > 0 lets reconnecting devices sit in
+        # their handshake wait while a killed cloud's successor boots
+        self.upstream_retry_s = upstream_retry_s
+        self.open_oks_seen = 0
+        self.up_frames_seen = 0
+        self._kill_fired = False
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> Tuple[str, int]:
@@ -243,27 +281,49 @@ class ChaosProxy:
                 break
             index = self.connections
             self.connections += 1
+            # upstream connect (and its retry window, when a killed cloud's
+            # successor is still booting) must not block the accept loop:
+            # other reconnecting devices need their pairs set up in parallel
+            t = threading.Thread(
+                target=self._setup_pair, args=(client, index),
+                daemon=True, name=f"chaos-setup-{index}",
+            )
+            t.start()
+            self._threads.append(t)
+
+    def _connect_upstream(self) -> socket.socket:
+        deadline = time.monotonic() + self.upstream_retry_s
+        while True:
             try:
-                upstream = socket.create_connection(
+                return socket.create_connection(
                     (self.upstream_host, self.upstream_port), timeout=10.0
                 )
             except OSError:
-                client.close()
-                continue
-            for sock in (client, upstream):
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            pair = _Pair(index, client, upstream,
-                         self.schedule.get(index, []))
-            with self._lock:
-                self._pairs.append(pair)
-            for direction, src, dst in (("up", client, upstream),
-                                        ("down", upstream, client)):
-                t = threading.Thread(
-                    target=self._forward, args=(pair, direction, src, dst),
-                    daemon=True, name=f"chaos-{index}-{direction}",
-                )
-                t.start()
-                self._threads.append(t)
+                if (self._stop.is_set()
+                        or time.monotonic() >= deadline):
+                    raise
+                time.sleep(0.1)
+
+    def _setup_pair(self, client: socket.socket, index: int) -> None:
+        try:
+            upstream = self._connect_upstream()
+        except OSError:
+            client.close()
+            return
+        for sock in (client, upstream):
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        pair = _Pair(index, client, upstream,
+                     self.schedule.get(index, []))
+        with self._lock:
+            self._pairs.append(pair)
+        for direction, src, dst in (("up", client, upstream),
+                                    ("down", upstream, client)):
+            t = threading.Thread(
+                target=self._forward, args=(pair, direction, src, dst),
+                daemon=True, name=f"chaos-{index}-{direction}",
+            )
+            t.start()
+            self._threads.append(t)
 
     def _forward(self, pair: _Pair, direction: str,
                  src: socket.socket, dst: socket.socket) -> None:
@@ -303,7 +363,15 @@ class ChaosProxy:
                     data = P.encode_msg(mtype, payload)
                     if mtype != P.MSG_FRAME:
                         emit(data, 0.0)       # order kept, never delayed
+                        if direction == "down" and mtype == P.MSG_OPEN_OK:
+                            with self._lock:
+                                self.open_oks_seen += 1
+                            self._maybe_fire_kill()
                         continue
+                    if direction == "up":
+                        with self._lock:
+                            self.up_frames_seen += 1
+                        self._maybe_fire_kill()
                     event = self._pop_event(pair, direction, hop)
                     hop += 1
                     if event is None:
@@ -326,6 +394,31 @@ class ChaosProxy:
             pass
         finally:
             kill()
+
+    def _maybe_fire_kill(self) -> None:
+        """Fire the (single) cloud-kill trigger once both seeded
+        thresholds are met; the callback runs on the forwarding thread —
+        it must only *schedule* the kill (the launcher's supervisor
+        restarts the cloud on its own thread)."""
+        if self.on_cloud_kill is None:
+            return
+        with self._lock:
+            if self._kill_fired:
+                return
+            if self.open_oks_seen < self.kill_after_open_oks:
+                return
+            if self.up_frames_seen < self.kill_after_up_frames:
+                return
+            self._kill_fired = True
+            record = {"kind": KIND_CLOUD_KILL,
+                      "open_oks": self.open_oks_seen,
+                      "up_frames": self.up_frames_seen}
+            self.faults.append(record)
+        self.tracer.instant(
+            "fault", time.time(), tid=0, kind=KIND_CLOUD_KILL,
+            open_oks=record["open_oks"], up_frames=record["up_frames"],
+        )
+        self.on_cloud_kill()
 
     def _pop_event(self, pair: _Pair, direction: str,
                    hop: int) -> Optional[FaultEvent]:

@@ -14,6 +14,24 @@ JSON, terminates the cloud gracefully (SIGTERM => it dumps its trace),
 and merges the per-process Chrome traces into one file with disjoint
 pids.  Used by ``launch/serve --net tcp``, ``serve_cluster --net``, the
 ``bench_engine --net tcp`` benchmark and the CI net-smoke job.
+
+Cloud restart orchestration
+---------------------------
+``run_cluster(cloud_restart=CloudRestartPlan(...))`` proves sessions
+survive a cloud *process* death: the cloud runs with periodic
+checkpointing, a :class:`~repro.net.chaos.ChaosProxy` counts the fleet's
+``MSG_OPEN_OK`` / uplink ``MSG_FRAME`` traffic and fires a seeded
+kill trigger mid-run, and a :class:`_CloudSupervisor` SIGKILLs the cloud
+only after a checkpoint provably newer than the trigger exists (two
+checkpoint generations — the second one's state capture strictly follows
+the first one's completed write, which follows the trigger).  A fresh
+service boots on the *same* port with ``--restore`` under a bumped
+restart epoch; devices ride through on their retry policies (the proxy
+holds reconnecting devices' upstream connects until the new process
+listens) and resume their sessions, replaying any uplink frames the
+checkpoint rolled back.  ``_wait_workers`` is restart-aware: a dead
+cloud process is fatal only when no supervisor claims the death (or the
+plan's ``on_unexpected_death`` policy says fail).
 """
 from __future__ import annotations
 
@@ -22,7 +40,9 @@ import os
 import signal
 import subprocess
 import sys
+import threading
 import time
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional
 
@@ -89,11 +109,16 @@ def spawn_cloud(
     port: int = 0,
     trace: bool = True,
     startup_timeout_s: float = 240.0,
+    grace_s: Optional[float] = None,
+    checkpoint: Optional[Path] = None,
+    checkpoint_every_s: float = 0.0,
+    restore: bool = False,
+    log_name: str = "cloud.log",
 ) -> CloudProcess:
     """Start the cloud service; blocks until it prints its listen line
     (cold JAX import + model build can take a while on CPU)."""
     workdir.mkdir(parents=True, exist_ok=True)
-    log_path = workdir / "cloud.log"
+    log_path = workdir / log_name
     trace_out = workdir / "cloud_trace.json" if trace else None
     cmd = [
         sys.executable, "-m", "repro.net.service",
@@ -104,6 +129,13 @@ def spawn_cloud(
     ]
     if trace_out is not None:
         cmd += ["--trace-out", str(trace_out)]
+    if grace_s is not None:
+        cmd += ["--grace-s", str(grace_s)]
+    if checkpoint is not None:
+        cmd += ["--checkpoint", str(checkpoint),
+                "--checkpoint-every-s", str(checkpoint_every_s)]
+    if restore:
+        cmd += ["--restore"]
     log = open(log_path, "w")
     proc = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
                             env=_src_env())
@@ -143,6 +175,9 @@ def spawn_worker(
     seed: int = 0,
     pipeline_depth: int = 0,
     trace: bool = True,
+    retry_attempts: Optional[int] = None,
+    retry_base_s: Optional[float] = None,
+    recv_timeout_s: Optional[float] = None,
 ) -> subprocess.Popen:
     out = workdir / f"dev{device_index}.json"
     cmd = [
@@ -155,6 +190,12 @@ def spawn_worker(
         "--pipeline-depth", str(pipeline_depth),
         "--out", str(out),
     ]
+    if retry_attempts is not None:
+        cmd += ["--retry-attempts", str(retry_attempts)]
+    if retry_base_s is not None:
+        cmd += ["--retry-base-s", str(retry_base_s)]
+    if recv_timeout_s is not None:
+        cmd += ["--recv-timeout", str(recv_timeout_s)]
     if draft:
         cmd.append("--draft")
     if trace:
@@ -189,23 +230,147 @@ def merge_traces(workdir: Path, n_devices: int) -> Optional[Path]:
     return out
 
 
+@dataclass
+class CloudRestartPlan:
+    """How (and when) to kill + restart the cloud mid-run.
+
+    The kill trigger is chaos-driven: the proxy fires once it has seen
+    ``kill_after_open_oks`` session acks *and* ``kill_after_up_frames``
+    uplink frames (``None`` derives the frame threshold from ``seed`` via
+    :func:`repro.net.chaos.seeded_kill_after_frames`, and the open-ok
+    threshold from the fleet size).  Gating on open-oks makes zero-lost-
+    sessions deterministic for one-request-per-device storms: every
+    session is registered cloud-side before the trigger, so the
+    checkpoint the supervisor waits for provably contains them all.
+
+    ``on_unexpected_death`` is the restart-vs-fail policy for cloud
+    deaths the plan did *not* cause: ``"fail"`` keeps the fail-fast
+    behavior, ``"restart"`` respawns from the latest checkpoint while
+    ``max_restarts`` lasts."""
+
+    seed: int = 0
+    kill_after_open_oks: Optional[int] = None
+    kill_after_up_frames: Optional[int] = None
+    checkpoint_every_s: float = 0.25
+    grace_s: float = 120.0
+    max_restarts: int = 1
+    on_unexpected_death: str = "fail"        # "fail" | "restart"
+    checkpoint_wait_s: float = 120.0
+
+
+class _CloudSupervisor:
+    """Owns the live :class:`CloudProcess` across planned (chaos-kill)
+    and unexpected restarts.  ``current`` is only ever replaced after the
+    successor prints its listen line; ``restarting`` is set *before* the
+    old process is killed, so ``_wait_workers`` never mistakes a planned
+    kill for a crash."""
+
+    def __init__(self, plan: CloudRestartPlan, cloud: CloudProcess,
+                 checkpoint: Path, respawn):
+        self.plan = plan
+        self.current = cloud
+        self.checkpoint = checkpoint
+        self._respawn = respawn          # (port, log_name) -> CloudProcess
+        self.restarting = threading.Event()
+        self.restarts = 0
+        self.error: Optional[Exception] = None
+        self._fired = False
+
+    # -- chaos trigger entry point (proxy thread) -------------------------
+    def chaos_kill(self) -> None:
+        if self._fired:
+            return
+        self._fired = True
+        threading.Thread(target=self._planned_restart, daemon=True,
+                         name="cloud-restart").start()
+
+    def _manifest_mtime(self) -> Optional[float]:
+        try:
+            return (self.checkpoint / "manifest.json").stat().st_mtime
+        except OSError:
+            return None
+
+    def _wait_checkpoint_after(self, t_trigger: float) -> None:
+        """Block until a checkpoint whose *state capture* strictly follows
+        ``t_trigger`` exists: first wait for a manifest written after the
+        trigger, then for one more generation — its capture began after
+        the previous write completed, which is after the trigger."""
+        deadline = time.monotonic() + self.plan.checkpoint_wait_s
+        gen = 0
+        floor = t_trigger
+        while gen < 2:
+            if time.monotonic() > deadline:
+                raise TransportError(
+                    f"no checkpoint newer than the kill trigger appeared "
+                    f"within {self.plan.checkpoint_wait_s:.0f}s at "
+                    f"{self.checkpoint}")
+            m = self._manifest_mtime()
+            if m is not None and m > floor:
+                floor = m
+                gen += 1
+            else:
+                time.sleep(0.05)
+
+    def _planned_restart(self) -> None:
+        self.restarting.set()
+        try:
+            self._wait_checkpoint_after(time.time())
+            old = self.current
+            old.proc.kill()              # SIGKILL: a crash, not a shutdown
+            old.proc.wait()
+            self.current = self._respawn(old.port,
+                                         f"cloud{self.restarts + 1}.log")
+            self.restarts += 1
+        except Exception as e:           # noqa: BLE001 - surfaced by waiter
+            self.error = e
+        finally:
+            self.restarting.clear()
+
+    # -- unexpected-death entry point (_wait_workers thread) --------------
+    def handle_death(self, dead: CloudProcess) -> None:
+        """Policy verdict for a cloud death the plan didn't cause; raises
+        to fail the run, returns after a successful respawn otherwise."""
+        if self.plan.on_unexpected_death != "restart" \
+                or self.restarts >= self.plan.max_restarts:
+            raise TransportError(
+                f"cloud service exited with {dead.proc.returncode} "
+                f"unexpectedly; log tail:\n{_tail(dead.log_path)}")
+        dead.proc.wait()
+        self.current = self._respawn(dead.port,
+                                     f"cloud{self.restarts + 1}.log")
+        self.restarts += 1
+
+
 def _wait_workers(workers: List[subprocess.Popen], cloud: CloudProcess,
                   timeout_s: float, wd: Path,
-                  poll_s: float = 0.2) -> None:
+                  poll_s: float = 0.2,
+                  supervisor: Optional[_CloudSupervisor] = None) -> None:
     """Wait for every worker, polling the cloud the whole time.
 
     A dead cloud used to mean every worker blocked until its own recv
     timeout while ``run_cluster`` sat in ``wait()`` — now it raises
-    immediately (the caller's ``finally`` kills the orphans)."""
+    immediately (the caller's ``finally`` kills the orphans) *unless* a
+    restart supervisor claims the death: a planned chaos kill (or an
+    ``on_unexpected_death="restart"`` policy) keeps the fleet alive
+    while a successor process boots from the checkpoint."""
     deadline = time.monotonic() + timeout_s
     pending = set(range(len(workers)))
     while pending:
-        if cloud.proc.poll() is not None:
+        live = supervisor.current if supervisor is not None else cloud
+        if supervisor is not None and supervisor.error is not None:
             raise TransportError(
-                f"cloud service exited with {cloud.proc.returncode} while "
-                f"{len(pending)} device worker(s) were still running; "
-                f"log tail:\n{_tail(cloud.log_path)}"
-            )
+                f"cloud restart failed: {supervisor.error}"
+            ) from supervisor.error
+        if live.proc.poll() is not None:
+            if supervisor is None:
+                raise TransportError(
+                    f"cloud service exited with {live.proc.returncode} while "
+                    f"{len(pending)} device worker(s) were still running; "
+                    f"log tail:\n{_tail(live.log_path)}"
+                )
+            if not supervisor.restarting.is_set() \
+                    and supervisor.current is live:
+                supervisor.handle_death(live)
         for i in sorted(pending):
             rc = workers[i].poll()
             if rc is None:
@@ -245,6 +410,7 @@ def run_cluster(
     trace: bool = True,
     worker_timeout_s: float = 600.0,
     chaos_schedule: Optional[dict] = None,
+    cloud_restart: Optional[CloudRestartPlan] = None,
 ) -> dict:
     """The whole topology, end to end; returns aggregated measurements.
 
@@ -259,7 +425,13 @@ def run_cluster(
     every uplink ``MSG_FRAME`` is delivered ``link_delay_s`` seconds
     after it arrives at the proxy (propagation delay — frames may be in
     flight concurrently), giving localhost a deterministic WAN-like
-    uplink latency that a pipelined device can hide."""
+    uplink latency that a pipelined device can hide.
+
+    ``cloud_restart`` (a :class:`CloudRestartPlan`) runs the cloud with
+    periodic checkpointing and SIGKILLs + restores it mid-run (see the
+    module docstring); the result gains ``cloud_restarts`` and
+    ``sessions_lost`` (degraded requests — sessions that failed to
+    resume across the restart)."""
     if workdir is None:
         import tempfile
 
@@ -267,20 +439,60 @@ def run_cluster(
     wd = Path(workdir)
     wd.mkdir(parents=True, exist_ok=True)
 
+    ckpt = wd / "cloud_ckpt" if cloud_restart is not None else None
     cloud = spawn_cloud(
         arch, workdir=wd, slots=slots, max_len=max_len,
         max_batch_tokens=max_batch_tokens, wire_codec=wire_codec,
         seed=seed, trace=trace,
+        grace_s=cloud_restart.grace_s if cloud_restart is not None else None,
+        checkpoint=ckpt,
+        checkpoint_every_s=(cloud_restart.checkpoint_every_s
+                            if cloud_restart is not None else 0.0),
     )
+    supervisor = None
+    if cloud_restart is not None:
+        def _respawn(port: int, log_name: str) -> CloudProcess:
+            return spawn_cloud(
+                arch, workdir=wd, slots=slots, max_len=max_len,
+                max_batch_tokens=max_batch_tokens, wire_codec=wire_codec,
+                seed=seed, trace=trace, port=port,
+                grace_s=cloud_restart.grace_s, checkpoint=ckpt,
+                checkpoint_every_s=cloud_restart.checkpoint_every_s,
+                restore=True, log_name=log_name,
+            )
+
+        supervisor = _CloudSupervisor(cloud_restart, cloud, ckpt, _respawn)
     proxy = None
     connect_host, connect_port = cloud.host, cloud.port
-    if chaos_schedule is not None or link_delay_s > 0.0:
-        from .chaos import ChaosProxy
+    if (chaos_schedule is not None or link_delay_s > 0.0
+            or cloud_restart is not None):
+        from .chaos import ChaosProxy, seeded_kill_after_frames
 
+        kill_kwargs = {}
+        if cloud_restart is not None:
+            opens = cloud_restart.kill_after_open_oks
+            frames = cloud_restart.kill_after_up_frames
+            if frames is None:
+                frames = seeded_kill_after_frames(
+                    cloud_restart.seed, n_devices)
+            kill_kwargs = dict(
+                kill_after_open_oks=(n_devices if opens is None else opens),
+                kill_after_up_frames=frames,
+                on_cloud_kill=supervisor.chaos_kill,
+                # reconnecting devices ride out the successor's cold boot
+                # inside one handshake wait instead of burning retries
+                upstream_retry_s=240.0,
+            )
         proxy = ChaosProxy(cloud.host, cloud.port, schedule=chaos_schedule,
-                           up_frame_delay_s=link_delay_s)
+                           up_frame_delay_s=link_delay_s, **kill_kwargs)
         connect_host, connect_port = proxy.start()
     workers: List[subprocess.Popen] = []
+    worker_kwargs = {}
+    if cloud_restart is not None:
+        # one blocking wait must absorb the whole restart window (kill ->
+        # checkpoint wait -> cold boot of the successor) on a loaded host
+        worker_kwargs = dict(retry_attempts=12, retry_base_s=0.25,
+                             recv_timeout_s=300.0)
     try:
         for i in range(n_devices):
             workers.append(spawn_worker(
@@ -288,15 +500,18 @@ def run_cluster(
                 workdir=wd, requests=requests_per_device,
                 prompt_len=prompt_len, new_tokens=new_tokens, max_len=max_len,
                 wire_codec=wire_codec, draft=draft, seed=seed,
-                pipeline_depth=pipeline_depth, trace=trace,
+                pipeline_depth=pipeline_depth, trace=trace, **worker_kwargs,
             ))
-        _wait_workers(workers, cloud, worker_timeout_s, wd)
+        _wait_workers(workers, cloud, worker_timeout_s, wd,
+                      supervisor=supervisor)
     finally:
         for w in workers:
             if w.poll() is None:
                 w.kill()
         if proxy is not None:
             proxy.stop()
+        if supervisor is not None:
+            cloud = supervisor.current
         cloud_rc = cloud.terminate()
 
     results = []
@@ -327,6 +542,10 @@ def run_cluster(
         "requests_degraded": sum(r.get("requests_degraded", 0)
                                  for r in results),
         "chaos_faults": list(proxy.faults) if proxy is not None else [],
+        "cloud_restarts": supervisor.restarts if supervisor is not None else 0,
+        "cloud_restarts_seen": max(
+            (r.get("cloud_restarts_seen", 0) for r in results), default=0),
+        "sessions_lost": sum(r.get("requests_degraded", 0) for r in results),
         "merged_trace": str(merged) if merged else None,
         "cloud_log": str(cloud.log_path),
     }

@@ -14,14 +14,18 @@ as data instead of a hung socket).  Every message on the stream is::
 Message types and payloads:
 
 ========================  =====================================================
-``MSG_HELLO``             ``<HHII`` proto version, wire-frame version, d_model,
-                          epoch (0 from the device; ignored by the cloud) —
-                          first message on every connection, device -> cloud
+``MSG_HELLO``             ``<HHIII`` proto version, wire-frame version,
+                          d_model, epoch, restart_epoch (both 0 from the
+                          device; ignored by the cloud) — first message on
+                          every connection, device -> cloud
 ``MSG_HELLO_ACK``         same struct, the cloud's values; the epoch field
                           carries the *connection epoch* the cloud just
-                          assigned (negotiation is exact-match on the first
-                          three fields: any mismatch answers ``MSG_ERROR`` +
-                          close instead)
+                          assigned, and restart_epoch counts how many times
+                          this cloud endpoint has restored from a checkpoint
+                          (a device that sees it change knows it is talking
+                          to a new process).  Negotiation is exact-match on
+                          the first three fields: any mismatch answers
+                          ``MSG_ERROR`` + close instead
 ``MSG_RESUME``            ``<II`` prev_epoch, n, then n x ``<III`` (req_id,
                           up_sent, down_recv) — sent right after the hello on
                           a *re*connect: re-attach the listed sessions,
@@ -77,7 +81,9 @@ from .errors import ProtocolError
 # v2: resume handshake (epoch in hello, MSG_RESUME/-OK), per-session frame
 # sequence numbers on MSG_FRAME, liveness probes, connection push-back
 # v3: MSG_FRAME_ACK uplink progress watermarks (pipelined chunk uplink)
-PROTO_VERSION = 3
+# v4: restart_epoch in hello/ack — sessions survive a cloud *process*
+#     restart from a checkpoint, and resume validates against the new one
+PROTO_VERSION = 4
 MAGIC = b"HN"
 
 MSG_HELLO = 1
@@ -130,8 +136,8 @@ ERR_NAMES = {
 _HEADER = struct.Struct("<2sBI")
 HEADER_BYTES = _HEADER.size
 
-# proto_version, frame_version, d_model, connection epoch
-_HELLO = struct.Struct("<HHII")
+# proto_version, frame_version, d_model, connection epoch, restart epoch
+_HELLO = struct.Struct("<HHIII")
 _U32 = struct.Struct("<I")
 _U32_PAIR = struct.Struct("<II")
 _ERROR = struct.Struct("<HI")            # code, req_id
@@ -153,15 +159,16 @@ def encode_msg(mtype: int, payload: bytes = b"") -> bytes:
 
 
 def encode_hello(d_model: int, *, proto_version: int = PROTO_VERSION,
-                 frame_version: int | None = None, epoch: int = 0) -> bytes:
+                 frame_version: int | None = None, epoch: int = 0,
+                 restart_epoch: int = 0) -> bytes:
     from ..wire import FRAME_VERSION
 
     fv = FRAME_VERSION if frame_version is None else frame_version
-    return _HELLO.pack(proto_version, fv, d_model, epoch)
+    return _HELLO.pack(proto_version, fv, d_model, epoch, restart_epoch)
 
 
-def decode_hello(payload: bytes) -> Tuple[int, int, int, int]:
-    """-> (proto_version, frame_version, d_model, epoch)."""
+def decode_hello(payload: bytes) -> Tuple[int, int, int, int, int]:
+    """-> (proto_version, frame_version, d_model, epoch, restart_epoch)."""
     if len(payload) != _HELLO.size:
         raise ProtocolError(f"hello payload is {len(payload)} B, "
                             f"expected {_HELLO.size}")

@@ -147,6 +147,8 @@ class CloudService:
         max_inflight_frames: int = 32,
         max_connections: int = 64,
         max_message_bytes: int = P.MAX_MESSAGE_BYTES,
+        checkpoint_path: Optional[str] = None,
+        checkpoint_every_s: float = 0.0,
         tracer: Optional[Tracer] = None,
     ):
         self.server = server
@@ -156,9 +158,21 @@ class CloudService:
         self.max_inflight_frames = max_inflight_frames
         self.max_connections = max_connections
         self.max_message_bytes = max_message_bytes
+        self.checkpoint_path = checkpoint_path
+        self.checkpoint_every_s = checkpoint_every_s
+        self._last_checkpoint_t = 0.0
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._lock = threading.Lock()            # engine + session state
         self._work = threading.Condition()       # pump + backpressure wake-up
+        # checkpoint consistency gate: True from the moment a pump step
+        # mutates the engine cache until every downlink the step produced
+        # is sequenced into its session's buffer.  state_dict() waits for
+        # it so a snapshot can never see up_processed advanced past a
+        # downlink that does not exist yet (restoring such a cut shifts
+        # every later downlink seq down by one and the device drops them
+        # all as duplicates).  The condition shares self._lock.
+        self._pump_busy = False
+        self._idle_cv = threading.Condition(self._lock)
         self._stop = threading.Event()
         self._conns: list = []
         self._sessions: Dict[int, _NetSession] = {}
@@ -173,6 +187,9 @@ class CloudService:
         self.dup_frames_dropped = 0
         self.conns_rejected = 0
         self.detaches = 0
+        self.restart_epoch = 0          # bumps by 1 on every restore-boot
+        self.sessions_restored = 0
+        self.checkpoints_written = 0
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> Tuple[str, int]:
@@ -305,7 +322,7 @@ class CloudService:
         return True
 
     def _on_hello(self, conn: _Conn, payload: bytes) -> bool:
-        proto, frame_ver, d_model, _epoch = P.decode_hello(payload)
+        proto, frame_ver, d_model, _epoch, _restart = P.decode_hello(payload)
         ours = (P.PROTO_VERSION, FRAME_VERSION, self.server.d_model)
         if (proto, frame_ver, d_model) != ours:
             conn.send_msg(P.MSG_ERROR, P.encode_error(
@@ -318,14 +335,53 @@ class CloudService:
             conn.epoch = self._next_epoch
             self._next_epoch += 1
         conn.hello_done = True
-        conn.send_msg(P.MSG_HELLO_ACK,
-                      P.encode_hello(self.server.d_model, epoch=conn.epoch))
+        conn.send_msg(P.MSG_HELLO_ACK, P.encode_hello(
+            self.server.d_model, epoch=conn.epoch,
+            restart_epoch=self.restart_epoch))
         return True
+
+    # -------------------------------------------------- session transitions
+    # detach -> resume and detach -> expire both mutate the same session;
+    # the bug class this guards against is a grace sweep firing *between*
+    # a resume's "is it still alive?" check and its re-attach.  Every
+    # transition therefore happens through these helpers, under self._lock,
+    # and expiry is decided by one authoritative predicate at the moment of
+    # attach — not by whether the sweep thread happened to run first.
+
+    def _expired_locked(self, sess: _NetSession, now: float) -> bool:
+        """Authoritative grace verdict for one session (lock held).
+
+        Strictly-greater: a resume arriving exactly at the grace boundary
+        deterministically wins, no matter how the sweep is scheduled."""
+        return (sess.conn is None and sess.detached_at is not None
+                and self.grace_s is not None
+                and now - sess.detached_at > self.grace_s)
+
+    def _expire_locked(self, req_id: int) -> None:
+        """Close one grace-expired session (lock held)."""
+        self.server.close_session(req_id)
+        self._sessions.pop(req_id, None)
+        self.tracer.instant("grace_expired", time.time(), tid=req_id)
+
+    def _attach_locked(self, sess: _NetSession, conn: _Conn) -> None:
+        """The single detach->attach transition (open + resume paths,
+        lock held): once ``detached_at`` clears here, no sweep can expire
+        the session."""
+        owner = sess.conn
+        if owner is not None and owner is not conn:
+            owner.open_reqs.discard(sess.req_id)
+        sess.conn = conn
+        sess.epoch = conn.epoch
+        sess.detached_at = None
+        conn.open_reqs.add(sess.req_id)
 
     def _on_open(self, conn: _Conn, payload: bytes) -> None:
         req_id, expected = P.decode_u32_pair(payload)
         with self._lock:
             sess = self._sessions.get(req_id)
+            if sess is not None and self._expired_locked(sess, time.monotonic()):
+                self._expire_locked(req_id)
+                sess = None
             if sess is not None:
                 owner = sess.conn
                 if owner is not None and owner.alive and owner is not conn:
@@ -335,12 +391,7 @@ class CloudService:
                     return
                 # idempotent re-open: a duplicate OPEN after a reconnect
                 # (the OPEN_OK was lost) adopts the existing session
-                if owner is not None and owner is not conn:
-                    owner.open_reqs.discard(req_id)
-                sess.conn = conn
-                sess.epoch = conn.epoch
-                sess.detached_at = None
-                conn.open_reqs.add(req_id)
+                self._attach_locked(sess, conn)
                 ok = True
             else:
                 ok = self.server.open_session(req_id, expected)
@@ -370,21 +421,22 @@ class CloudService:
         accepted: List[Tuple[int, int]] = []
         replays: List[Tuple[int, List[Tuple[int, bytes]]]] = []
         with self._lock:
+            now = time.monotonic()
             for req_id, _up_sent, down_recv in entries:
                 sess = self._sessions.get(req_id)
                 if sess is None:
                     continue                     # closed / grace expired
+                if self._expired_locked(sess, now):
+                    # past the grace boundary but unswept: the verdict must
+                    # not depend on sweep cadence — expire it here, refuse
+                    self._expire_locked(req_id)
+                    continue
                 owner = sess.conn
                 if owner is not None and owner.alive and owner is not conn:
                     continue                     # actively owned elsewhere
                 if sess.epoch != prev_epoch and owner is not None and owner.alive:
                     continue                     # stale resume for a live conn
-                if owner is not None:
-                    owner.open_reqs.discard(req_id)
-                sess.conn = conn
-                sess.epoch = conn.epoch
-                sess.detached_at = None
-                conn.open_reqs.add(req_id)
+                self._attach_locked(sess, conn)
                 accepted.append((req_id, sess.up_expected))
                 pending = [(s, d) for s, d in sess.down_buffer
                            if s >= down_recv]
@@ -550,16 +602,10 @@ class CloudService:
         if self.grace_s is None:
             return
         now = time.monotonic()
-        expired = []
         with self._lock:
             for rid, sess in list(self._sessions.items()):
-                if (sess.conn is None and sess.detached_at is not None
-                        and now - sess.detached_at > self.grace_s):
-                    self.server.close_session(rid)
-                    del self._sessions[rid]
-                    expired.append(rid)
-        for rid in expired:
-            self.tracer.instant("grace_expired", time.time(), tid=rid)
+                if self._expired_locked(sess, now):
+                    self._expire_locked(rid)
 
     # ------------------------------------------------------------ pump loop
     def _pump_loop(self) -> None:
@@ -569,6 +615,7 @@ class CloudService:
                 if not engine.queue:
                     self._work.wait(_PUMP_IDLE_S)
             self._sweep_grace()
+            self._maybe_checkpoint()
             if not engine.queue:
                 continue
             t0 = time.time()
@@ -576,6 +623,10 @@ class CloudService:
             with self._lock:
                 if not engine.queue:
                     continue
+                # step + downlink emission form one atomic unit vs
+                # state_dict(): the gate stays up until every downlink this
+                # step produced has its seq assigned and is buffered
+                self._pump_busy = True
                 results = engine.step()
                 info = engine.last_step_info
                 tokens = engine.batched_token_history[-1]
@@ -591,45 +642,51 @@ class CloudService:
                             acks.append((c, j["req_id"], sess.up_processed))
                     if c is not None and c.inflight > 0:
                         c.inflight = max(0, c.inflight - n_frames)
-            with self._work:
-                self._work.notify_all()  # wake backpressure waiters
-            for c, rid, processed in acks:
-                if c.alive:
-                    c.send_msg(P.MSG_FRAME_ACK,
-                               P.encode_u32_pair(rid, processed))
-            for c in list(self._conns):
-                if (c.busy_sent and c.alive
-                        and c.inflight <= self.max_inflight_frames // 2):
-                    c.busy_sent = False
-                    c.send_msg(P.MSG_READY)
-            t1 = time.time()
-            if self.tracer.enabled:
-                # real wall-clock queue/cloud spans, per request, on the
-                # shared unix-epoch clock (frame t_send stamps are on it
-                # too, so queue_wait = device-send-complete -> step start)
-                self.tracer.add_span(
-                    "cloud_step", t0, t1, tid=TID_CLOUD,
-                    tokens=tokens, jobs=len(info),
-                )
-                for j in info:
-                    if 0.0 < j["ready_s"] <= t0:
-                        self.tracer.add_span(
-                            "queue_wait", j["ready_s"], t0, tid=j["req_id"],
-                            phase="queue", tokens=j["tokens"],
-                        )
+            try:
+                with self._work:
+                    self._work.notify_all()  # wake backpressure waiters
+                for c, rid, processed in acks:
+                    if c.alive:
+                        c.send_msg(P.MSG_FRAME_ACK,
+                                   P.encode_u32_pair(rid, processed))
+                for c in list(self._conns):
+                    if (c.busy_sent and c.alive
+                            and c.inflight <= self.max_inflight_frames // 2):
+                        c.busy_sent = False
+                        c.send_msg(P.MSG_READY)
+                t1 = time.time()
+                if self.tracer.enabled:
+                    # real wall-clock queue/cloud spans, per request, on the
+                    # shared unix-epoch clock (frame t_send stamps are on it
+                    # too, so queue_wait = device-send-complete -> step start)
                     self.tracer.add_span(
-                        "cloud_step", t0, t1, tid=j["req_id"],
-                        phase="cloud_step", tokens=j["tokens"],
+                        "cloud_step", t0, t1, tid=TID_CLOUD,
+                        tokens=tokens, jobs=len(info),
                     )
-            for r in results:
-                if r.deep is None:
-                    continue
-                with self._lock:
-                    sess = self._sessions.get(r.req_id)
-                if sess is None:
-                    continue                       # closed mid-step
-                data = self.server.engine.encode_result(r)   # outside lock
-                self._send_downlink(sess, data)
+                    for j in info:
+                        if 0.0 < j["ready_s"] <= t0:
+                            self.tracer.add_span(
+                                "queue_wait", j["ready_s"], t0,
+                                tid=j["req_id"], phase="queue",
+                                tokens=j["tokens"],
+                            )
+                        self.tracer.add_span(
+                            "cloud_step", t0, t1, tid=j["req_id"],
+                            phase="cloud_step", tokens=j["tokens"],
+                        )
+                for r in results:
+                    if r.deep is None:
+                        continue
+                    with self._lock:
+                        sess = self._sessions.get(r.req_id)
+                    if sess is None:
+                        continue                   # closed mid-step
+                    data = self.server.engine.encode_result(r)  # outside lock
+                    self._send_downlink(sess, data)
+            finally:
+                with self._idle_cv:
+                    self._pump_busy = False
+                    self._idle_cv.notify_all()
 
     def _send_downlink(self, sess: _NetSession, data: bytes) -> None:
         """Sequence, buffer and (when the device is attached) send one
@@ -643,6 +700,113 @@ class CloudService:
             conn.send_msg(P.MSG_FRAME, P.encode_seq_frame(
                 seq, stamp_t_send(data, time.time())))
             self.frames_out += 1
+
+    # ----------------------------------------------------------- checkpoint
+    def state_dict(self) -> Dict:
+        """Whole-service snapshot, consistent at the *processed* watermark.
+
+        Per session we persist ``up_processed`` (frames the engine actually
+        stepped) as the restored ``up_expected``: frames received but not
+        yet stepped are rolled back, and the device's replay buffer — which
+        only prunes below cloud-emitted processed watermarks — re-sends
+        them on resume.  The engine's pending queue is correspondingly
+        dropped on restore.  ``_next_epoch`` is persisted so connection
+        epochs stay monotonic across restarts.
+
+        The capture waits out any in-flight pump step (``_pump_busy``):
+        between a step and its downlink emission, ``up_processed`` and the
+        engine cache already include a frame whose downlink has no seq
+        yet — snapshotting that cut would restore a service that assigns
+        the next downlink a seq the device has already consumed, which the
+        device then drops as a duplicate, wedging the session.
+        """
+        with self._idle_cv:
+            while self._pump_busy:
+                self._idle_cv.wait()
+            sessions: Dict[int, Dict] = {}
+            for rid, sess in self._sessions.items():
+                sessions[rid] = {
+                    "epoch": int(sess.epoch),
+                    "up_processed": int(sess.up_processed),
+                    "down_seq": int(sess.down_seq),
+                    "down_buffer": [[int(s), bytes(d)]
+                                    for s, d in sess.down_buffer],
+                    "snapshots": dict(sess.snapshots),
+                    "next_snap_id": int(sess.next_snap_id),
+                }
+            return {
+                "engine": self.server.engine.checkpoint_state(),
+                "sessions": sessions,
+                "next_epoch": int(self._next_epoch),
+                "restart_epoch": int(self.restart_epoch),
+            }
+
+    def checkpoint(self, path: Optional[str] = None) -> str:
+        """Atomically persist :meth:`state_dict` to ``path`` (defaults to
+        the configured ``checkpoint_path``)."""
+        from ..training.checkpoint import save_state
+
+        path = path or self.checkpoint_path
+        if path is None:
+            raise ValueError("no checkpoint path configured")
+        out = save_state(path, self.state_dict(),
+                         extra={"kind": "cloud-service"})
+        self.checkpoints_written += 1
+        self._last_checkpoint_t = time.monotonic()
+        self.tracer.instant("checkpoint", time.time(), tid=TID_CLOUD,
+                            sessions=len(self._sessions))
+        return out
+
+    def restore(self, path: Optional[str] = None) -> int:
+        """Load a checkpoint into this (fresh) service: engine pool state,
+        per-session wire state, epoch counters.  Bumps ``restart_epoch``
+        so reconnecting devices can tell they reached a new process.
+        Restored sessions boot *detached* with a fresh grace window —
+        their devices have ``grace_s`` from now to resume.  Returns the
+        number of sessions restored.
+        """
+        from ..training.checkpoint import load_state
+
+        path = path or self.checkpoint_path
+        state, _extra = load_state(path)
+        now = time.monotonic()
+        with self._lock:
+            self.server.engine.restore_state(state["engine"])
+            self._sessions.clear()
+            for rid, s in state["sessions"].items():
+                sess = _NetSession(
+                    req_id=int(rid), epoch=int(s["epoch"]), conn=None,
+                    up_expected=int(s["up_processed"]),
+                    up_processed=int(s["up_processed"]),
+                    down_seq=int(s["down_seq"]),
+                    detached_at=now,
+                )
+                for seq, data in s["down_buffer"]:
+                    sess.down_buffer.append((int(seq), bytes(data)))
+                sess.snapshots = dict(s["snapshots"])
+                sess.next_snap_id = int(s["next_snap_id"])
+                self._sessions[sess.req_id] = sess
+                # keep the in-process CloudServer view consistent too
+                self.server._processed[sess.req_id] = sess.up_processed
+            self._next_epoch = int(state["next_epoch"])
+            self.restart_epoch = int(state["restart_epoch"]) + 1
+            self.sessions_restored = len(self._sessions)
+        self.tracer.instant("restore", time.time(), tid=TID_CLOUD,
+                            sessions=self.sessions_restored,
+                            restart_epoch=self.restart_epoch)
+        return self.sessions_restored
+
+    def _maybe_checkpoint(self) -> None:
+        """Periodic checkpoint from the pump loop — only once sessions
+        exist, so an on-disk checkpoint always witnesses real state (the
+        kill-on-checkpoint chaos harness keys off its existence)."""
+        if not self.checkpoint_path or self.checkpoint_every_s <= 0:
+            return
+        if not self._sessions:
+            return
+        if time.monotonic() - self._last_checkpoint_t < self.checkpoint_every_s:
+            return
+        self.checkpoint()
 
 
 # ---------------------------------------------------------------------------
@@ -678,6 +842,12 @@ def build_server(arch: str, *, slots: int, max_len: int,
 
 
 def main(argv=None) -> int:
+    # SIGUSR1 dumps every thread's stack to stderr (the cloud log) — the
+    # first tool to reach for when a storm run wedges on a loaded host
+    import faulthandler
+    import signal
+    faulthandler.register(signal.SIGUSR1, all_threads=True)
+
     ap = argparse.ArgumentParser(description="repro.net cloud service process")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=0,
@@ -696,6 +866,14 @@ def main(argv=None) -> int:
                     help="accept-path cap (0 = unbounded)")
     ap.add_argument("--trace-out", default=None,
                     help="dump the service's Chrome trace on shutdown")
+    ap.add_argument("--checkpoint", default=None,
+                    help="directory to persist whole-service state into "
+                         "(periodically and on SIGTERM)")
+    ap.add_argument("--checkpoint-every-s", type=float, default=0.0,
+                    help="periodic checkpoint cadence (0 = only on SIGTERM)")
+    ap.add_argument("--restore", action="store_true",
+                    help="restore --checkpoint on boot (bumps the restart "
+                         "epoch); missing checkpoint boots fresh")
     args = ap.parse_args(argv)
 
     tracer = Tracer(clock=time.time) if args.trace_out else None
@@ -708,7 +886,16 @@ def main(argv=None) -> int:
         server, host=args.host, port=args.port, grace_s=args.grace_s,
         max_inflight_frames=args.max_inflight_frames,
         max_connections=args.max_connections, tracer=tracer,
+        checkpoint_path=args.checkpoint,
+        checkpoint_every_s=args.checkpoint_every_s,
     )
+    if args.restore and args.checkpoint:
+        import os
+
+        if os.path.exists(os.path.join(args.checkpoint, "manifest.json")):
+            n = svc.restore()
+            print(f"NET_SERVE restored {n} sessions "
+                  f"(restart epoch {svc.restart_epoch})", flush=True)
     host, port = svc.start()
     # the launcher greps for this exact line to learn the ephemeral port
     print(f"NET_SERVE listening on {host}:{port}", flush=True)
@@ -725,6 +912,14 @@ def main(argv=None) -> int:
             svc.wait(0.2)
     finally:
         svc.stop()
+        if args.checkpoint:
+            # final checkpoint on the way down (SIGTERM = planned restart);
+            # a SIGKILLed process relies on the periodic checkpoints instead
+            try:
+                svc.checkpoint()
+                print("NET_SERVE checkpointed on shutdown", flush=True)
+            except Exception as e:          # noqa: BLE001 - best effort
+                print(f"NET_SERVE checkpoint failed: {e}", flush=True)
         if tracer is not None:
             tracer.dump(args.trace_out)
         print(f"NET_SERVE done: {svc.sessions_served} sessions, "

@@ -25,15 +25,28 @@ A dropped connection is no longer fatal.  Every blocking wait catches
 watermarks — ``up_sent`` (frames sent) and ``down_recv`` (frames seen).
 The cloud answers ``MSG_RESUME_OK`` with, per surviving session, its own
 ``up_recv`` watermark; the device then replays exactly the uplink frames
-the cloud never processed (``seq >= up_recv``) from a small replay
+the cloud never processed (``seq >= up_recv``) from a per-session replay
 buffer.  Because every ``MSG_FRAME`` carries a session-scoped sequence
 number, duplicates created by replay (or by a chaos proxy) are dropped
 by watermark on both ends — the engine never double-steps.
 
+Restart resume (protocol v4)
+----------------------------
+The hello ack also carries the cloud's **restart epoch**, bumped every
+time a cloud process boots from a checkpoint.  A changed restart epoch
+after recovery means the peer is a *new process* whose watermarks come
+from a checkpoint that may predate frames the old process had already
+acknowledged.  Two things make resume correct across that gap: the
+replay buffer is **durable** — uplink frames are retained for the whole
+session (acks no longer prune them) so any rolled-back suffix can be
+re-sent — and ``_resume`` re-syncs ``up_acked`` down to the cloud's
+restored watermark so pipelined senders re-wait for the replayed work.
+
 Sessions the cloud *doesn't* list in ``MSG_RESUME_OK`` (grace period
-expired, unknown epoch) are **lost**: every further operation on them
-raises :class:`~repro.net.errors.SessionLostError`, which the client
-surfaces with the tokens generated so far instead of hanging.
+expired, unknown epoch, or absent from the restored checkpoint) are
+**lost**: every further operation on them raises
+:class:`~repro.net.errors.SessionLostError`, which the client surfaces
+with the tokens generated so far instead of hanging.
 
 Half-open connections are caught by heartbeats: if nothing has arrived
 for ``heartbeat_s`` while a wait is blocked, the device sends
@@ -77,6 +90,10 @@ class _SessionState:
     up_acked: int = 0               # uplink frames the cloud has *processed*
     established: bool = False       # OPEN_OK seen (resumable)
     expected_tokens: int = 0
+    # durable uplink replay log: every frame sent since open, kept for
+    # the session's lifetime.  A restarted cloud restores a *checkpoint*
+    # watermark that may roll back behind frames it had already acked,
+    # so acks must not prune this (close() drops the whole session).
     replay: List[Tuple[int, bytes]] = field(default_factory=list)
 
 
@@ -138,6 +155,7 @@ class SocketTransport(Transport):
         self.dup_frames_dropped = 0
         self.busy_signals = 0
         self.pings_sent = 0
+        self.cloud_restarts_seen = 0
         self._max_message_bytes = max_message_bytes
         self._decoder = P.StreamDecoder(max_message_bytes=max_message_bytes)
         self._inbox: Dict[int, Deque] = {}       # req_id -> frames / errors
@@ -147,11 +165,14 @@ class SocketTransport(Transport):
         self._retry_rng = self.retry.rng()
         self._deadline_clock = self.deadline.start()
         self._epoch = 0
+        self._restart_epoch = -1     # cloud's boot generation (-1: unknown)
         self._busy = False
         self._closed = False
         self._in_recovery = False
         self._last_rx = time.monotonic()
         self._last_ping = 0.0
+        self._last_liveness = time.monotonic()
+        self._conn_gen = 0       # bumps on every successful reconnect
         self._sock = self._connect(connect_timeout_s, retry_interval_s)
         self._handshake()
 
@@ -179,7 +200,8 @@ class SocketTransport(Transport):
         mtype, payload = self._wait_control(
             P.MSG_HELLO_ACK, timeout=self.recv_timeout_s, op="hello"
         )
-        proto, frame_ver, d_model, epoch = P.decode_hello(payload)
+        proto, frame_ver, d_model, epoch, restart_epoch = \
+            P.decode_hello(payload)
         from ..wire import FRAME_VERSION
 
         if (proto, frame_ver, d_model) != (P.PROTO_VERSION, FRAME_VERSION,
@@ -190,6 +212,16 @@ class SocketTransport(Transport):
                 f"v{P.PROTO_VERSION}/v{FRAME_VERSION}/{self.d_model}"
             )
         self._epoch = epoch
+        if self._restart_epoch >= 0 and restart_epoch != self._restart_epoch:
+            # a different boot generation answered: the old process died
+            # and a new one restored (or started fresh) behind the same
+            # address — resume must expect rolled-back watermarks
+            self.cloud_restarts_seen += 1
+            self.tracer.instant(
+                "cloud_restart", self.clock(), tid=0,
+                restart_epoch=restart_epoch,
+            )
+        self._restart_epoch = restart_epoch
         self._last_rx = time.monotonic()
 
     def _resume(self, prev_epoch: int) -> None:
@@ -199,7 +231,10 @@ class SocketTransport(Transport):
         session's watermarks; sessions missing from the cloud's answer
         are marked lost; surviving sessions get their unacknowledged
         uplink frames replayed (cloud-side watermark dedupe makes the
-        replay exactly-once)."""
+        replay exactly-once).  Against a restarted cloud the answered
+        watermark may be *behind* frames the old process acked — the
+        durable replay log covers the rolled-back suffix, and
+        ``up_acked`` re-syncs down so pipelined waits re-block."""
         listed = {
             rid: st for rid, st in self._sessions.items() if st.established
         }
@@ -216,13 +251,14 @@ class SocketTransport(Transport):
         for rid, st in listed.items():
             if rid not in survivors:
                 self._lost[rid] = SessionLostError(
-                    rid, "cloud refused resume (grace expired or unknown "
-                    "session)"
+                    rid, "cloud refused resume (grace expired, unknown "
+                    "session, or absent from the restored checkpoint)"
                 )
                 self._sessions.pop(rid, None)
                 self._inbox.pop(rid, None)
                 continue
             up_recv = survivors[rid]
+            st.up_acked = min(st.up_acked, up_recv)
             for seq, stamped in st.replay:
                 if seq < up_recv:
                     continue         # cloud already processed this frame
@@ -273,6 +309,7 @@ class SocketTransport(Transport):
                     last = e
                     continue
                 self.reconnects += 1
+                self._conn_gen += 1
                 self.tracer.instant(
                     "reconnect", self.clock(), tid=0, attempt=attempt,
                 )
@@ -331,8 +368,9 @@ class SocketTransport(Transport):
                 )
             st.down_expected += 1
             # strict request/response per session: a downlink implies the
-            # cloud processed every uplink before it — drop the replay log
-            st.replay.clear()
+            # cloud processed every uplink before it.  The replay log is
+            # NOT dropped — a restarted cloud may restore a checkpoint
+            # older than this downlink and ask for the frames again.
             st.up_acked = st.up_seq
             self.bytes_down += len(data)
             t_arrive = self.clock()
@@ -371,10 +409,10 @@ class SocketTransport(Transport):
             rid, processed = P.decode_u32_pair(payload)
             st = self._sessions.get(rid)
             if st is not None and processed > st.up_acked:
+                # advance the watermark but keep the replay log: after a
+                # cloud restart the restored watermark can sit *behind*
+                # this ack, and resume must re-send the acked frames
                 st.up_acked = processed
-                # acked frames can never need replay: the engine already
-                # consumed them, so resume's watermark would skip them
-                st.replay = [(s, f) for s, f in st.replay if s >= processed]
         else:
             self._control.append((mtype, payload))
 
@@ -396,8 +434,18 @@ class SocketTransport(Transport):
             self._route(mtype, payload)
 
     def _check_liveness(self) -> None:
-        """Probe a silent connection; force recovery on a half-open one."""
+        """Probe a silent connection; force recovery on a half-open one.
+
+        Silence only counts while *we* were listening: if this transport
+        went quiet itself (a multi-minute jit compile between handshake
+        and first open, a CPU-starved host), the gap since the previous
+        liveness check covers it, and ``_last_rx`` is re-armed so a PING
+        probes the peer before the timeout can condemn a healthy link."""
         now = time.monotonic()
+        away = now - self._last_liveness
+        self._last_liveness = now
+        if away > self.heartbeat_s:
+            self._last_rx = max(self._last_rx, now - self.heartbeat_s)
         idle = now - self._last_rx
         if idle > self.heartbeat_timeout_s:
             self._recover(TransportClosed(
@@ -463,6 +511,7 @@ class SocketTransport(Transport):
                 if req_id is not None:
                     self._raise_if_lost(req_id)
                 continue
+            sent_gen = self._conn_gen
             resend = False
             while not resend:
                 if req_id is not None:
@@ -477,6 +526,13 @@ class SocketTransport(Transport):
                 if remaining <= 0:
                     raise TransportTimeout(op, bound, req_id)
                 self._check_liveness()
+                if self._conn_gen != sent_gen:
+                    # liveness replaced the connection underneath us: the
+                    # reply died with the old stream, repeat the request
+                    if req_id is not None:
+                        self._raise_if_lost(req_id)
+                    resend = True
+                    continue
                 try:
                     self._poll(min(remaining, _POLL_S))
                 except TransportClosed as e:

@@ -111,6 +111,12 @@ def build_client(arch: str, transport: Transport, *, max_len: int,
 
 
 def main(argv=None) -> int:
+    # SIGUSR1 dumps every thread's stack to stderr (the worker log) — the
+    # first tool to reach for when a storm run wedges on a loaded host
+    import faulthandler
+    import signal as _signal
+    faulthandler.register(_signal.SIGUSR1, all_threads=True)
+
     ap = argparse.ArgumentParser(description="repro.net device worker process")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, required=True)
@@ -187,6 +193,7 @@ def main(argv=None) -> int:
         "replayed_frames": transport.replayed_frames,
         "dup_frames_dropped": transport.dup_frames_dropped,
         "busy_signals": transport.busy_signals,
+        "cloud_restarts_seen": transport.cloud_restarts_seen,
         "requests_degraded": sum(1 for r in requests if r.degraded),
         "requests": [
             {

@@ -31,7 +31,7 @@ from ..core.speculative import SSM_STATE_KEYS
 from ..core.split import SplitModels
 from ..obs import NULL_TRACER, TID_CLOUD, Tracer
 from ..wire import KIND_DEEP, Frame, decode_hidden, encode_hidden, get_codec
-from .kv_manager import KVBudget, SlotKVManager
+from .kv_manager import KVAccountingError, KVBudget, SlotKVManager
 from .scheduling import budgeted_admission
 
 F32 = jnp.float32
@@ -183,7 +183,9 @@ class CloudEngine:
         self.kv.release(req_id)
 
     def submit(self, job: EngineJob) -> None:
-        assert job.req_id in self.kv.slot_of, "request not admitted"
+        if job.req_id not in self.kv.slot_of:
+            raise KVAccountingError(
+                f"submit for unadmitted request {job.req_id}")
         if job.offset < 0 or job.offset + len(job.hidden) > self.max_len:
             # previously this scribbled past the slot cache silently (XLA
             # clamps dynamic-update-slice indices): fail loudly instead and
@@ -406,3 +408,78 @@ class CloudEngine:
                 ng[lk] = np_
             new_groups.append(ng)
         self.cache = {"groups": new_groups}
+
+    # ------------------------------------------------ whole-pool checkpoint
+    # snapshot_slot/restore_slot move *one* slot's recurrent state for the
+    # in-band session protocol; these two move the entire pool — every
+    # slot's KV rows and SSM state plus the SlotKVManager books — so a new
+    # cloud process can pick up mid-generation sessions after a restart.
+
+    def checkpoint_state(self) -> Dict:
+        """Whole-pool snapshot: the full cache pytree (KV + recurrent state
+        for every slot) as host arrays, the slot/block accounting, and the
+        shape config needed to validate a restore."""
+        return {
+            "config": {
+                "n_slots": int(self.n_slots),
+                "max_len": int(self.max_len),
+                "d_model": int(self.d_model),
+            },
+            "cache": jax.tree.map(np.asarray, self.cache),
+            "kv": self.kv.state_dict(),
+        }
+
+    def restore_state(self, state: Dict) -> None:
+        """Restore a :meth:`checkpoint_state` snapshot into this engine.
+
+        The engine grows its slot pool if the checkpoint had more slots;
+        any other shape/structure mismatch raises
+        :class:`~repro.training.checkpoint.CheckpointError`.  The pending
+        job queue is dropped — a checkpoint is consistent at the
+        *processed* watermark, and unprocessed frames are replayed by the
+        devices on resume.
+        """
+        from ..training.checkpoint import CheckpointError
+
+        try:
+            cfg = state["config"]
+            ckpt_slots = int(cfg["n_slots"])
+            if (int(cfg["max_len"]), int(cfg["d_model"])) != (self.max_len, self.d_model):
+                raise CheckpointError(
+                    f"checkpoint shape (max_len={cfg['max_len']}, "
+                    f"d_model={cfg['d_model']}) does not match engine "
+                    f"(max_len={self.max_len}, d_model={self.d_model})")
+            if ckpt_slots < self.n_slots:
+                raise CheckpointError(
+                    f"checkpoint has {ckpt_slots} slots, engine already has "
+                    f"{self.n_slots} — refusing to shrink the pool")
+        except (KeyError, TypeError, ValueError) as e:
+            raise CheckpointError(f"malformed engine checkpoint: {e}") from e
+        if ckpt_slots > self.n_slots:
+            mem = None
+            if self._memory is not None:
+                mem = jnp.broadcast_to(
+                    self._memory, (ckpt_slots,) + self._memory.shape[-2:]
+                )
+            self.cache = self.split.middle_model.init_cache(
+                self.split.middle_params, ckpt_slots, self.max_len, memory=mem
+            )
+            self.n_slots = ckpt_slots
+
+        def _load_leaf(cur, saved):
+            saved = np.asarray(saved)
+            if tuple(saved.shape) != tuple(cur.shape):
+                raise CheckpointError(
+                    f"cache leaf shape {saved.shape} != engine {cur.shape}")
+            return jnp.asarray(saved, dtype=cur.dtype)
+
+        try:
+            self.cache = jax.tree.map(_load_leaf, self.cache, state["cache"])
+        except CheckpointError:
+            raise
+        except (KeyError, TypeError, ValueError) as e:
+            raise CheckpointError(
+                f"engine checkpoint cache structure mismatch: {e}") from e
+        self.kv.load_state_dict(state["kv"])
+        self.queue = []
+        self.last_step_info = []

@@ -7,11 +7,34 @@ block-granular *accounting* for admission control: a request is admitted
 only when enough cache blocks are free, blocks are charged as the sequence
 grows and released on completion.  This keeps HBM bounded and admission
 honest while the physical layout stays static for XLA.
+
+Accounting violations raise typed :class:`KVError` subclasses — never bare
+``assert`` — so denial stays loud under ``python -O`` and callers can
+distinguish admission pressure (:class:`KVAdmissionError`, retryable) from
+accounting corruption (:class:`KVAccountingError`, a bug or a bad restore).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
+
+
+class KVError(RuntimeError):
+    """Base class for slot/KV accounting errors."""
+
+
+class KVAdmissionError(KVError):
+    """Admission denied: no free slot or not enough free blocks.
+
+    Callers that checked :meth:`SlotKVManager.can_admit` first never see
+    this; it guards direct ``admit`` calls (and ``-O`` runs, where the old
+    bare assert silently vanished and corrupted the budget).
+    """
+
+
+class KVAccountingError(KVError):
+    """The accounting books are inconsistent (unknown request, shrinking
+    slot pool, or a restored state that does not add up)."""
 
 
 @dataclass
@@ -46,7 +69,14 @@ class SlotKVManager:
         return self.budget.used_blocks + need <= self.budget.total_blocks
 
     def admit(self, req_id: int, expected_tokens: int) -> int:
-        assert self.can_admit(expected_tokens), "admission denied"
+        if req_id in self.slot_of:
+            raise KVAccountingError(f"request {req_id} already admitted")
+        if not self.can_admit(expected_tokens):
+            raise KVAdmissionError(
+                f"admission denied for request {req_id}: "
+                f"{len(self.free_slots)} free slots, "
+                f"{self.budget.total_blocks - self.budget.used_blocks} free blocks "
+                f"(need {self._blocks_for(min(expected_tokens, self.max_len))})")
         slot = self.free_slots.pop(0)
         self.slot_of[req_id] = slot
         need = self._blocks_for(min(expected_tokens, self.max_len))
@@ -59,6 +89,8 @@ class SlotKVManager:
     # ------------------------------------------------------------- growth
     def extend(self, req_id: int, new_len: int) -> bool:
         """Charge blocks as the sequence grows; False if out of budget."""
+        if req_id not in self.blocks_of:
+            raise KVAccountingError(f"extend for unadmitted request {req_id}")
         need = self._blocks_for(min(new_len, self.max_len))
         have = self.blocks_of[req_id]
         if need > have:
@@ -72,11 +104,15 @@ class SlotKVManager:
 
     def grow(self, new_n_slots: int) -> None:
         """Enlarge the slot pool (engine auto-grow); block budget unchanged."""
-        assert new_n_slots >= self.n_slots
+        if new_n_slots < self.n_slots:
+            raise KVAccountingError(
+                f"cannot shrink slot pool {self.n_slots} -> {new_n_slots}")
         self.free_slots.extend(range(self.n_slots, new_n_slots))
         self.n_slots = new_n_slots
 
     def release(self, req_id: int) -> None:
+        if req_id not in self.slot_of:
+            raise KVAccountingError(f"release of unadmitted request {req_id}")
         slot = self.slot_of.pop(req_id)
         self.budget.used_blocks -= self.blocks_of.pop(req_id)
         self.len_of.pop(req_id, None)
@@ -85,3 +121,52 @@ class SlotKVManager:
     @property
     def active(self) -> int:
         return self.n_slots - len(self.free_slots)
+
+    # -------------------------------------------------------- serialization
+    def state_dict(self) -> Dict[str, Any]:
+        """Plain-data snapshot of the whole accounting state (for the engine
+        checkpoint); restore with :meth:`load_state_dict`."""
+        return {
+            "n_slots": int(self.n_slots),
+            "max_len": int(self.max_len),
+            "block_tokens": int(self.budget.block_tokens),
+            "total_blocks": int(self.budget.total_blocks),
+            "used_blocks": int(self.budget.used_blocks),
+            "free_slots": [int(s) for s in self.free_slots],
+            "slot_of": {int(k): int(v) for k, v in self.slot_of.items()},
+            "blocks_of": {int(k): int(v) for k, v in self.blocks_of.items()},
+            "len_of": {int(k): int(v) for k, v in self.len_of.items()},
+            "peak_active": int(self.peak_active),
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        """Restore accounting from :meth:`state_dict` output, validating the
+        books first (raises :class:`KVAccountingError` on inconsistency)."""
+        slot_of = {int(k): int(v) for k, v in state["slot_of"].items()}
+        blocks_of = {int(k): int(v) for k, v in state["blocks_of"].items()}
+        free = [int(s) for s in state["free_slots"]]
+        n_slots = int(state["n_slots"])
+        used = int(state["used_blocks"])
+        if set(blocks_of) != set(slot_of):
+            raise KVAccountingError("restored slot_of/blocks_of disagree")
+        if used != sum(blocks_of.values()):
+            raise KVAccountingError(
+                f"restored used_blocks={used} but charges sum to "
+                f"{sum(blocks_of.values())}")
+        occupied = sorted(slot_of.values())
+        if len(set(occupied)) != len(occupied):
+            raise KVAccountingError("restored state double-books a slot")
+        if sorted(free + occupied) != list(range(n_slots)):
+            raise KVAccountingError(
+                "restored free/occupied slots do not partition the pool")
+        self.n_slots = n_slots
+        self.max_len = int(state["max_len"])
+        self.budget = KVBudget(
+            block_tokens=int(state["block_tokens"]),
+            total_blocks=int(state["total_blocks"]),
+            used_blocks=used)
+        self.free_slots = free
+        self.slot_of = slot_of
+        self.blocks_of = blocks_of
+        self.len_of = {int(k): int(v) for k, v in state["len_of"].items()}
+        self.peak_active = int(state["peak_active"])

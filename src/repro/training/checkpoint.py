@@ -1,21 +1,40 @@
 """Checkpointing: pytree <-> .npz + JSON manifest (no orbax dependency).
 
-Flattens any params/opt-state pytree with ``jax.tree_util`` key-paths as
-stable names, saves arrays into a single compressed ``.npz`` and the tree
-structure into ``manifest.json``.  Restores onto host then (optionally)
-device_put with a target sharding tree.
+Two families:
+
+* ``save_checkpoint``/``load_checkpoint`` — training params/opt-state.
+  Flattens any pytree with ``jax.tree_util`` key-paths as stable names,
+  saves arrays into a single compressed ``.npz`` and the tree structure
+  into ``manifest.json``; restore requires a ``like`` template.
+* ``save_state``/``load_state`` — *structure-preserving* state snapshots
+  (used by the serving stack for whole-pool engine/service checkpoints).
+  The manifest encodes the container structure itself — dicts with str or
+  int keys, lists, tuples, scalar leaves, ``bytes``, arrays — so a state
+  dict restores without a template.  Writes are atomic (tmp dir +
+  ``os.replace``) and all read failures (missing, truncated zip, garbage
+  JSON, unknown format) surface as the typed :class:`CheckpointError`.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional
+import shutil
+import zipfile
+import zlib
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+STATE_FORMAT = "repro-state-v1"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is missing, truncated, corrupt, or structurally
+    incompatible with what the caller expects."""
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -60,3 +79,116 @@ def load_checkpoint(path: str, like: PyTree) -> PyTree:
 def checkpoint_step(path: str) -> int:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)["step"]
+
+
+# ---------------------------------------------------------------------------
+# structure-preserving state snapshots
+# ---------------------------------------------------------------------------
+
+
+def _encode_state(tree: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    """Recursively encode ``tree`` into a JSON-able node, collecting array
+    and bytes leaves into ``arrays`` (npz members)."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, bool):
+        return {"t": "bool", "v": bool(tree)}
+    if isinstance(tree, (int, np.integer)):
+        return {"t": "int", "v": int(tree)}
+    if isinstance(tree, (float, np.floating)):
+        return {"t": "float", "v": float(tree)}
+    if isinstance(tree, str):
+        return {"t": "str", "v": tree}
+    if isinstance(tree, (bytes, bytearray)):
+        key = f"leaf{len(arrays)}"
+        arrays[key] = np.frombuffer(bytes(tree), dtype=np.uint8)
+        return {"t": "bytes", "k": key}
+    if isinstance(tree, dict):
+        items = []
+        for k, v in tree.items():
+            if isinstance(k, bool) or not isinstance(k, (int, np.integer, str)):
+                raise TypeError(f"unsupported state-dict key {k!r}")
+            tk = ["i", int(k)] if not isinstance(k, str) else ["s", k]
+            items.append([tk, _encode_state(v, arrays)])
+        return {"t": "dict", "i": items}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "list" if isinstance(tree, list) else "tuple",
+                "i": [_encode_state(v, arrays) for v in tree]}
+    arr = np.asarray(tree)
+    key = f"leaf{len(arrays)}"
+    arrays[key] = arr
+    return {"t": "array", "k": key}
+
+
+def _decode_state(node: Any, data) -> Any:
+    t = node["t"]
+    if t == "none":
+        return None
+    if t in ("bool", "int", "float", "str"):
+        return node["v"]
+    if t == "bytes":
+        return bytes(data[node["k"]].tobytes())
+    if t == "dict":
+        out = {}
+        for (kind, key), enc in node["i"]:
+            out[int(key) if kind == "i" else key] = _decode_state(enc, data)
+        return out
+    if t in ("list", "tuple"):
+        seq = [_decode_state(v, data) for v in node["i"]]
+        return seq if t == "list" else tuple(seq)
+    if t == "array":
+        return np.asarray(data[node["k"]])
+    raise CheckpointError(f"unknown state node type {t!r}")
+
+
+def save_state(path: str, state: Any, extra: Optional[Dict] = None) -> str:
+    """Write a structure-preserving snapshot of ``state`` to directory
+    ``path`` atomically (readers see either the old or the new snapshot,
+    never a half-written one).  Returns ``path``."""
+    arrays: Dict[str, np.ndarray] = {}
+    structure = _encode_state(state, arrays)
+    tmp = str(path) + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez_compressed(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"format": STATE_FORMAT, "structure": structure,
+                "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    old = str(path) + ".old"
+    if os.path.isdir(old):
+        shutil.rmtree(old)
+    if os.path.exists(path):
+        os.replace(path, old)
+    os.replace(tmp, path)
+    if os.path.isdir(old):
+        shutil.rmtree(old)
+    return str(path)
+
+
+def load_state(path: str) -> Tuple[Any, Dict]:
+    """Load a :func:`save_state` snapshot; returns ``(state, extra)``.
+
+    Any failure mode — missing directory, truncated ``arrays.npz``, garbage
+    or mismatched manifest — raises :class:`CheckpointError` (never hangs,
+    never returns partial state).
+    """
+    mpath = os.path.join(path, "manifest.json")
+    apath = os.path.join(path, "arrays.npz")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(f"unreadable checkpoint manifest at {path}: {e}") from e
+    if manifest.get("format") != STATE_FORMAT:
+        raise CheckpointError(
+            f"checkpoint at {path} has format {manifest.get('format')!r}, "
+            f"expected {STATE_FORMAT!r}")
+    try:
+        data = np.load(apath)
+        state = _decode_state(manifest["structure"], data)
+    except (OSError, KeyError, ValueError, TypeError,
+            zipfile.BadZipFile, zlib.error, EOFError) as e:
+        raise CheckpointError(f"corrupt checkpoint at {path}: {e}") from e
+    return state, manifest.get("extra", {})

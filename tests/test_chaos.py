@@ -14,6 +14,7 @@ Layered like ``test_net.py``, cheapest first:
   period, surface :class:`~repro.net.errors.SessionLostError` with the
   partial tokens instead of hanging.
 """
+import socket
 import threading
 import time
 from types import SimpleNamespace
@@ -24,6 +25,7 @@ import pytest
 from conftest import reduced_model
 from repro.net import protocol as P
 from repro.net.chaos import ChaosProxy, FaultEvent, FaultyTransport, seeded_schedule
+from repro.net.protocol import StreamDecoder
 from repro.net.errors import (
     ProtocolError,
     SessionLostError,
@@ -98,6 +100,90 @@ def test_heartbeat_pings_a_silent_connection(make_transport):
     with pytest.raises(TransportTimeout):
         t.recv(5, timeout=0.6)
     assert t.pings_sent >= 1
+
+
+def test_liveness_ignores_our_own_stall(make_transport):
+    """Minutes of device-side compute between handshake and first open (a
+    cold jit compile on a loaded host) must not read as peer silence: the
+    liveness window re-arms after our own absence instead of condemning a
+    healthy connection.  Regression: under an 8+ device storm the stall
+    crossed ``heartbeat_timeout_s``, the first ``open`` silently tore down
+    the connection its request went out on, and the device polled the
+    replacement until the op deadline."""
+    from test_net import _FakeCloud
+
+    t = make_transport(_FakeCloud(), heartbeat_s=0.5,
+                       heartbeat_timeout_s=2.0)
+    # simulate the stall without sleeping: last wire traffic *and* last
+    # liveness check happened long ago (the process was busy elsewhere)
+    t._last_rx -= 300.0
+    t._last_liveness -= 300.0
+    t.open(5, 16)                    # _FakeCloud accepts only one
+    assert t.reconnects == 0         # connection: a recover would fail
+
+
+class _SilentThenServingCloud:
+    """First connection: acks hello, then goes silent (opens vanish into
+    the void).  Later connections get full control-plane service — models
+    a reply that died with a connection the device itself tore down."""
+
+    def __init__(self, d_model=64):
+        self.d_model = d_model
+        self._ls = socket.create_server(("127.0.0.1", 0))
+        self.port = self._ls.getsockname()[1]
+        self.conns = 0
+        threading.Thread(target=self._accept_loop, daemon=True).start()
+
+    def _accept_loop(self):
+        while True:
+            try:
+                sock, _ = self._ls.accept()
+            except OSError:
+                return
+            idx = self.conns
+            self.conns += 1
+            threading.Thread(target=self._serve, args=(sock, idx),
+                             daemon=True).start()
+
+    def _serve(self, sock, idx):
+        dec = StreamDecoder()
+        with sock:
+            while True:
+                try:
+                    chunk = sock.recv(1 << 16)
+                except OSError:
+                    return
+                if not chunk:
+                    return
+                for mtype, payload in dec.feed(chunk):
+                    if mtype == P.MSG_HELLO:
+                        sock.sendall(P.encode_msg(
+                            P.MSG_HELLO_ACK, P.encode_hello(self.d_model)))
+                    elif mtype == P.MSG_OPEN and idx > 0:
+                        rid, _ = P.decode_u32_pair(payload)
+                        sock.sendall(P.encode_msg(
+                            P.MSG_OPEN_OK, P.encode_u32(rid)))
+                    elif mtype == P.MSG_BYE:
+                        return
+
+    def close(self):
+        self._ls.close()
+
+
+def test_liveness_recovery_resends_inflight_control(make_transport):
+    """A liveness-triggered reconnect *inside* a control roundtrip must
+    re-send the request: the reply to the original died with the old
+    connection, and resume has nothing to replay for a session that was
+    never established.  Regression: the roundtrip only re-sent when the
+    *socket* raised, so a silent recovery left it polling the new
+    connection forever."""
+    cloud = _SilentThenServingCloud()
+    t = make_transport(cloud, heartbeat_s=0.2, heartbeat_timeout_s=0.6,
+                       recv_timeout_s=10.0,
+                       retry=RetryPolicy(max_attempts=4, base_s=0.05))
+    t.open(5, 16)                    # succeeds on the second connection
+    assert t.reconnects == 1
+    assert cloud.conns == 2
 
 
 @pytest.fixture
